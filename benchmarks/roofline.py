@@ -1,0 +1,109 @@
+"""Roofline report: renders the dry-run JSONL into the EXPERIMENTS.md tables.
+
+Per (arch x shape x mesh): the three roofline terms (seconds), the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS (useful-compute ratio), per-device memory,
+and a one-line "what would move the dominant term" note.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from collections import defaultdict
+
+DEFAULT_PATH = "results/dryrun_optimized.jsonl"
+
+ADVICE = {
+    "compute_s": "raise MXU utilization / cut redundant matmul work "
+                 "(remat policy, attention formulation)",
+    "memory_s": "cut HBM traffic: fuse attention (Pallas flash kernel), "
+                "bigger fusion tiles, bf16 intermediates",
+    "collective_s": "reshard: reduce TP all-reduce points, overlap "
+                    "collectives, compress gradients",
+}
+
+
+def load(path: str = DEFAULT_PATH) -> list[dict]:
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    seen = {}
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        seen[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(seen.values())
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"skipped | — | — | — | — | — |")
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"ERROR | — | — | — | — | {r.get('error', '')[:60]} |")
+    t = r["roofline"]
+    dom = r["bottleneck"].replace("_s", "")
+    ratio = r.get("useful_flop_ratio")
+    ratio_s = f"{ratio:.2f}" if ratio else "—"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+        f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+        f"| {t['collective_s']:.3f} | {dom} | {ratio_s} "
+        f"| {r['memory']['peak_per_device_gb']:.1f} |"
+    )
+
+
+def run(print_fn=print, path: str = DEFAULT_PATH) -> list[tuple]:
+    recs = load(path)
+    if not recs:
+        print_fn(f"# roofline: no dry-run records at {path} — run "
+                 f"`python -m repro.launch.dryrun --all --mesh both` first")
+        return []
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    print_fn("| arch | shape | mesh | status | compute s | memory s "
+             "| collective s | bottleneck | useful | mem/dev GB |")
+    print_fn("|---|---|---|---|---|---|---|---|---|---|")
+    out = []
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        print_fn(fmt_row(r))
+        if r.get("status") == "ok":
+            n_ok += 1
+            t = r["roofline"]
+            dom_t = max(t.values())
+            out.append((f"roofline,{r['arch']},{r['shape']},{r['mesh']}",
+                        dom_t * 1e6, r.get("useful_flop_ratio") or 0.0))
+        elif r.get("status") == "skipped":
+            n_skip += 1
+        else:
+            n_err += 1
+    print_fn(f"\ncells: {n_ok} ok, {n_skip} skipped (documented), "
+             f"{n_err} errors")
+
+    # bottleneck distribution + hillclimb candidates
+    dom_count = defaultdict(int)
+    worst = []
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        dom_count[r["bottleneck"]] += 1
+        t = r["roofline"]
+        ideal = t["compute_s"]
+        actual = max(t.values())
+        frac = ideal / actual if actual else 0
+        worst.append((frac, r["arch"], r["shape"], r["mesh"], r["bottleneck"]))
+    print_fn(f"\nbottlenecks: {dict(dom_count)}")
+    worst.sort()
+    print_fn("\nlowest roofline fraction (compute_term / dominant_term):")
+    for frac, arch, shape, mesh, dom in worst[:6]:
+        print_fn(f"  {frac:6.3f}  {arch:22s} {shape:12s} {mesh:8s} "
+                 f"[{dom}] -> {ADVICE[dom]}")
+    return out
+
+
+if __name__ == "__main__":
+    run(path=sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH)

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table + the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, plus
+human-readable tables in '#'-prefixed prose lines.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run --train 40 # + accuracy parity
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train", type=int, default=40,
+                    help="steps for the Table-1 accuracy-parity run (0=off)")
+    ap.add_argument("--dryrun-path", default="results/dryrun_optimized.jsonl")
+    args = ap.parse_args()
+
+    from . import kernel_hillclimb, roofline, table1_models, \
+        table2_sparsity_dist, table3_row_repetition
+
+    rows: list[tuple] = []
+    print("# === Table 1 (paper: accuracy/mem/time per model x pattern) ===")
+    rows += table1_models.run(print, train_steps=args.train)
+    print("\n# === Table 2 (paper: sparsity split between G_o and G_i) ===")
+    rows += table2_sparsity_dist.run(print)
+    print("\n# === Table 3 (paper: row repetition via G_r/G_b) ===")
+    rows += table3_row_repetition.run(print)
+    print("\n# === Kernel hillclimb (EXPERIMENTS.md section Perf) ===")
+    rows += kernel_hillclimb.run(print)
+    print("\n# === Roofline (dry-run derived; see EXPERIMENTS.md) ===")
+    rows += roofline.run(print, path=args.dryrun_path)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Paper Table 2: effect of distributing sparsity between G_o and G_i.
+
+Fixed sizes (paper: O, W, I all 4096x4096; base graph sizes
+G_o=(32,128), G_r=(4,1), G_i=(32,32), G_b=(1,1)); sparsity split varies.
+The paper's observed trend — for fixed total sparsity, putting more
+sparsity in G_o is faster (tile skipping removes whole memory loads) —
+falls out of the kernel cost model's I-traffic term.
+
+Output CSV: name,us_per_call,derived (derived = speedup over dense).
+"""
+from __future__ import annotations
+
+from repro.core import RBGP4Spec
+
+from .kernel_model import estimate_dense, estimate_rbgp4mm
+
+# paper Table 2 rows: (total_sp, sp_o, sp_i)
+ROWS = [
+    (0.75, 0.0, 0.75),
+    (0.75, 0.5, 0.5),
+    (0.875, 0.0, 0.875),
+    (0.875, 0.5, 0.75),
+    (0.875, 0.75, 0.5),
+    (0.9375, 0.0, 0.9375),
+    (0.9375, 0.5, 0.875),
+    (0.9375, 0.75, 0.75),
+    (0.9375, 0.875, 0.5),
+]
+
+N = 4096
+
+
+def spec_for(sp_o, sp_i):
+    # paper sizes: G_o=(32,128) G_r=(4,1) G_i=(32,32) G_b=(1,1) -> 4096x4096
+    return RBGP4Spec(g_o=(32, 128), g_r=(4, 1), g_i=(32, 32), g_b=(1, 1),
+                     sp_o=sp_o, sp_i=sp_i)
+
+
+def run(print_fn=print) -> list[tuple]:
+    dense = estimate_dense(4096, 4096, N)
+    out = [("table2,dense,0,0", dense.t_total_s * 1e6, 1.0)]
+    print_fn("# Table 2: sparsity split between G_o and G_i "
+             "(4096x4096x4096, analytic v5e model)")
+    print_fn(f"dense: {dense.t_total_s*1e6:.1f} us  (paper: 11.2 ms on V100)")
+    prev_sp = None
+    for sp, sp_o, sp_i in ROWS:
+        est = estimate_rbgp4mm(spec_for(sp_o, sp_i), N)
+        speedup = dense.t_total_s / est.t_total_s
+        name = f"table2,sp={sp},sp_o={sp_o},sp_i={sp_i}"
+        out.append((name, est.t_total_s * 1e6, speedup))
+        marker = "" if sp == prev_sp else "\n"
+        print_fn(f"{marker}sp={sp:.4f} sp_o={sp_o:.2f} sp_i={sp_i:.2f}: "
+                 f"{est.t_total_s*1e6:8.1f} us  ({speedup:4.1f}x)  "
+                 f"[I-bytes {est.bytes_i/1e6:7.1f} MB]")
+        prev_sp = sp
+    # trend assertion: within each sparsity level, higher sp_o is faster
+    for sp in (0.875, 0.9375):
+        rows = [(o, i) for (s, o, i) in ROWS if s == sp]
+        times = [estimate_rbgp4mm(spec_for(o, i), N).t_total_s for o, i in rows]
+        assert all(times[j] >= times[j + 1] - 1e-12 for j in range(len(times) - 1)), \
+            f"Table-2 trend violated at sp={sp}: {times}"
+    print_fn("\ntrend check OK: more sparsity in G_o -> faster "
+             "(paper Table 2 reproduced)")
+
+    # hardware adaptation: the paper's factor sizes are GPU-register-tuned
+    # (G=4, C=1) and underfill the MXU; the TPU-tuned factorization
+    # (design_rbgp4: G=16, C=128, large TM) restores the paper's speedups.
+    from repro.core import design_rbgp4
+
+    print_fn("\n# TPU-tuned factorizations (design_rbgp4, TM=512) — "
+             "DESIGN.md §2 hardware adaptation")
+    for sp in (0.75, 0.875, 0.9375):
+        spec = design_rbgp4(4096, 4096, sp, target_ui=32)
+        est = estimate_rbgp4mm(spec, N)
+        speedup = dense.t_total_s / est.t_total_s
+        out.append((f"table2,tpu-tuned,sp={sp}", est.t_total_s * 1e6, speedup))
+        print_fn(f"sp={sp:.4f} sp_o={spec.sp_o:.3f} sp_i={spec.sp_i:.2f} "
+                 f"G={spec.group_rows} C={spec.chunk_cols} TM={spec.tile_m}: "
+                 f"{est.t_total_s*1e6:8.1f} us  ({speedup:4.1f}x vs dense)")
+        assert speedup > 1.5, f"TPU-tuned rbgp4 should beat dense at sp={sp}"
+    return out
+
+
+if __name__ == "__main__":
+    run()

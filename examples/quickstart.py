@@ -1,0 +1,99 @@
+"""Quickstart: the RBGP4 pattern end to end in two minutes.
+
+  1. design a TPU-tuned RBGP4 factorization for a 1024x1024 layer @ 75%,
+  2. verify the theory: factors are Ramanujan, the product's spectral gap
+     approaches the ideal (paper Theorem 1), connectivity storage is
+     succinct (paper Fig. 3),
+  3. run the Pallas RBGP4MM kernel (interpret mode on CPU) against the
+     pure-jnp oracle,
+  4. train a tiny RBGP4-sparse MLP on a toy task — the mask is fixed,
+     learning happens through the sparse connections only.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    RBGP4Layout,
+    design_rbgp4,
+    ideal_spectral_gap,
+    is_ramanujan,
+    second_singular_value,
+)
+from repro.kernels import RBGP4Op
+from repro.kernels import ref as kref
+from repro.sparsity import SparseLinear, SparsityConfig
+
+# 1. ------------------------------------------------------------------
+spec = design_rbgp4(4096, 4096, 0.9375)
+layout = RBGP4Layout(spec)
+print("RBGP4 factorization of a 4096x4096 layer @ 93.75% sparsity:")
+print(f"  G_o {spec.g_o} sp={spec.sp_o}   (tile-level sparsity: skip whole "
+      f"{spec.tile_m}x{spec.tile_k} tiles)")
+print(f"  G_i {spec.g_i} sp={spec.sp_i}   (intra-tile sparsity)")
+print(f"  G_r*G_b -> dense ({spec.group_rows}, {spec.chunk_cols}) blocks "
+      f"(MXU sublane x lane packing)")
+
+# 2. ------------------------------------------------------------------
+print("\nTheory checks:")
+for name, g in (("G_o", layout.graph_o), ("G_i", layout.graph_i)):
+    lam2 = second_singular_value(g)
+    print(f"  {name}: {g.n_left}x{g.n_right} d_l={g.d_left} "
+          f"lambda2={lam2:.3f} Ramanujan={is_ramanujan(g)}")
+ps = layout.product_structure()
+s = ps.storage_summary()
+print(f"  product: {s['edges']:,} edges, index stored as "
+      f"{s['stored_index_edges']} base-graph edges "
+      f"({s['index_compression']:.0f}x succinct — paper Fig. 3 property)")
+mem = layout.memory_bytes()
+print(f"  memory: values {mem['values']/1e3:.0f} KB + index "
+      f"{mem['index_succinct']/1e3:.1f} KB "
+      f"(unstructured would need {mem['index_full']/1e3:.0f} KB of index)")
+
+# 3. ------------------------------------------------------------------
+print("\nPallas RBGP4MM kernel vs oracle (interpret mode):")
+op = RBGP4Op(layout, interpret=True)
+key = jax.random.PRNGKey(0)
+w = op.init_data(key)
+x = jax.random.normal(jax.random.PRNGKey(1), (spec.k, 64))
+out = op.matmul(w, x)
+want = kref.ref_rbgp4mm(layout, w, x)
+err = float(jnp.abs(out - want).max())
+print(f"  O = W_s @ I: out {out.shape}, max |kernel - oracle| = {err:.2e}")
+assert err < 1e-4
+
+# 4. ------------------------------------------------------------------
+print("\nTraining through the fixed RBGP4 mask (tiny regression):")
+lin = SparseLinear(256, 256, SparsityConfig(pattern="rbgp4", sparsity=0.75,
+                                            backend="xla_masked", min_dim=1))
+params = lin.init(jax.random.PRNGKey(2))
+# target is itself RBGP4-sparse (same mask, different values): the sparse
+# student can represent it exactly, so MSE should collapse
+w_true = lin.dense_weight(lin.init(jax.random.PRNGKey(3))) / 4.0
+xs = jax.random.normal(jax.random.PRNGKey(4), (512, 256))
+ys = xs @ w_true.T
+
+from repro.utils import merge_trees, split_trainable
+
+train, static = split_trainable(params)
+
+@jax.jit
+def step(train, lr=0.5):
+    def loss(t):
+        pred = lin.apply(merge_trees(t, static), xs)
+        return jnp.mean((pred - ys) ** 2)
+    l, g = jax.value_and_grad(loss)(train)
+    return jax.tree_util.tree_map(
+        lambda p, gg: None if p is None else p - lr * gg, train, g,
+        is_leaf=lambda v: v is None), l
+
+losses = []
+for i in range(500):
+    train, l = step(train)
+    losses.append(float(l))
+print(f"  mse step 0: {losses[0]:.4f} -> step 500: {losses[-1]:.4f} "
+      f"({losses[0]/losses[-1]:.0f}x down; mask stayed fixed)")
+assert losses[-1] < losses[0] / 5
+print("\nquickstart OK")

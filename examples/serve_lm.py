@@ -1,0 +1,62 @@
+"""Serving example: batched prefill + decode with an RBGP4-sparse LM.
+
+Demonstrates the serving substrate the dry-run lowers at production shapes:
+KV caches (full and sliding-window), greedy/temperature sampling, and the
+compact-storage sparse projections.  Uses the gemma3-family reduced config
+so both cache kinds (5 local : 1 global) are exercised.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import apply_sparsity, get_config, reduce_config
+from repro.data import TokenStream
+from repro.models import LMModel
+
+BATCH, PROMPT, GEN = 4, 24, 24
+
+cfg = reduce_config(get_config("gemma3-4b")).with_(n_layers=6)
+cfg = apply_sparsity(cfg, pattern="rbgp4", sparsity=0.5,
+                     backend="xla_masked", min_dim=64)
+model = LMModel(cfg)
+params = model.init(jax.random.PRNGKey(0))
+print(f"serving {cfg.name}: {model.n_params():,} params, layer pattern "
+      f"{cfg.layer_pattern} (window={cfg.sliding_window})")
+
+prompts = jnp.asarray(
+    TokenStream(cfg.vocab_size, BATCH, PROMPT, seed=1).batch_at(0))
+cache = model.init_cache(BATCH, PROMPT + GEN, jnp.float32)
+
+prefill = jax.jit(model.prefill)
+decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+t0 = time.perf_counter()
+logits, cache = prefill(params, {"tokens": prompts}, cache)
+logits.block_until_ready()
+print(f"prefill {BATCH}x{PROMPT}: {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+tok = jnp.argmax(logits, -1)
+outs = []
+t0 = time.perf_counter()
+for i in range(GEN):
+    outs.append(np.asarray(tok))
+    logits, cache = decode(params, tok[:, None], cache, jnp.int32(PROMPT + i))
+    tok = jnp.argmax(logits, -1)
+jax.block_until_ready(tok)
+dt = time.perf_counter() - t0
+print(f"decode {GEN} steps: {dt*1e3:.0f} ms "
+      f"({BATCH*GEN/dt:.0f} tok/s, {dt/GEN*1e3:.1f} ms/step)")
+print(f"continuation (req 0): {np.stack(outs, 1)[0].tolist()}")
+
+# consistency: greedy decode must match teacher-forced forward
+full = jnp.concatenate([prompts, jnp.stack([jnp.asarray(o) for o in outs], 1)], 1)
+ref_logits, _ = model.forward(params, {"tokens": full})
+ref_next = jnp.argmax(ref_logits[:, PROMPT - 1:-1], -1)
+match = float(jnp.mean(ref_next == jnp.stack([jnp.asarray(o) for o in outs], 1)))
+print(f"teacher-forced agreement: {match:.2%}")
+assert match > 0.99, "incremental decode diverged from full forward"
+print("serve example OK")

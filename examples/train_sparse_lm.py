@@ -1,0 +1,85 @@
+"""End-to-end driver: train an RBGP4-sparse LM with the full substrate.
+
+Wraps launch/train.py (checkpointing, auto-resume, failure drills, grad
+accumulation) with a self-contained "paper technique on an LM" setup:
+a TinyLlama-family decoder with every projection RBGP4-sparse at 75%.
+
+Defaults are sized for this single-core CPU container (~2M params,
+200 steps, loss drops from ~7 to <3 on the synthetic recurrence data).
+On a TPU pod slice the same command takes --size paper (~110M params,
+the assignment's "train ~100M model for a few hundred steps").
+
+Run:  PYTHONPATH=src python examples/train_sparse_lm.py [--steps 200]
+Drill: add --simulate-failure 50, rerun to watch auto-resume.
+"""
+import argparse
+import sys
+
+from repro.configs import TrainConfig, get_config, reduce_config, apply_sparsity
+from repro.data import Prefetcher, TokenStream
+from repro.models import LMModel
+from repro.train import Trainer
+
+
+def config(size: str):
+    base = get_config("tinyllama-1.1b")
+    if size == "cpu":
+        cfg = reduce_config(base).with_(n_layers=4, vocab_size=512)
+    elif size == "paper":  # ~110M — for real accelerators
+        cfg = base.with_(
+            name="tinyllama-110m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+        )
+    else:
+        raise ValueError(size)
+    return apply_sparsity(cfg, pattern="rbgp4", sparsity=0.75,
+                          backend="xla_masked", min_dim=64)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="cpu", choices=["cpu", "paper"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=5e-2)
+    ap.add_argument("--simulate-failure", type=int, default=None)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_example_lm")
+    args = ap.parse_args()
+
+    cfg = config(args.size)
+    model = LMModel(cfg)
+    print(f"model: {cfg.name} ({model.n_params():,} params, "
+          f"rbgp4 @ {cfg.sparsity.sparsity:.0%} on all projections)")
+
+    def loss_fn(params, batch):
+        loss, (ce, aux) = model.loss(params, batch, train=True)
+        return loss, {"ce": ce}
+
+    tcfg = TrainConfig(optimizer="sgdm", lr=args.lr, schedule="cosine",
+                       total_steps=args.steps, warmup_steps=args.steps // 10,
+                       checkpoint_every=50, checkpoint_dir=args.checkpoint_dir)
+    data = Prefetcher(TokenStream(cfg.vocab_size, args.batch, args.seq, seed=0))
+    params = model.init(__import__("jax").random.PRNGKey(0))
+    tr = Trainer(loss_fn, params, tcfg, data)
+    resumed = tr.try_resume()
+    if resumed:
+        print(f"auto-resumed from step {resumed}")
+    tr.hooks.append(lambda s, m: s % 20 == 0 and print(
+        f"step {s:5d} loss {m['loss']:.4f} lr {m['lr']:.2e} "
+        f"({m['step_time_s']*1e3:.0f} ms)", flush=True))
+    try:
+        tr.run(args.steps - int(tr.state.step),
+               fail_at_step=args.simulate_failure)
+    except RuntimeError as e:
+        if "simulated node failure" in str(e):
+            print(f"FAILURE DRILL: {e} — rerun this command to auto-resume")
+            sys.exit(42)
+        raise
+    losses = [h["loss"] for h in tr.history]
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

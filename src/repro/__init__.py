@@ -1,0 +1,7 @@
+"""repro: RBGP (Ramanujan Bipartite Graph Products) block-sparse NN framework.
+
+JAX + Pallas implementation of Vooturi, Varma & Kothapalli (2020), scaled to
+multi-pod TPU meshes. See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

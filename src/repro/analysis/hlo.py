@@ -1,0 +1,409 @@
+"""Trip-count-aware analysis of optimized HLO.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes it
+useless for scan-over-layers programs (a 72-layer model reports one layer's
+FLOPs).  This module parses ``compiled.as_text()`` itself:
+
+  * splits the module into computations and ops, keeping a per-module
+    symbol table (op name -> result shape) to resolve operand shapes,
+  * builds the call graph (while body/cond, fusion calls, to_apply),
+  * extracts static trip counts from while conditions (jax scans lower to
+    counted loops comparing an induction variable against a constant),
+  * multiplies every computation's costs by the product of enclosing loop
+    trip counts,
+  * FLOPs: exact for dot (2 * prod(result) * contracted size), conv
+    approximated, 1/elem for elementwise math;
+  * bytes: operand + result sizes of top-level ops per computation
+    (fusion internals are on-chip traffic and excluded; fusion operands /
+    results are the HBM traffic — XLA's own fusion-boundary model);
+  * collective bytes by kind (all-reduce counted 2x: RS + AG phases).
+
+Everything is per-device: optimized HLO shapes are post-SPMD-partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+__all__ = ["analyze_hlo", "HLOAnalysis"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s2": 1, "u2": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s*([a-z][\w\-]*)\((.*)$"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition)=\s*%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_REF_RE = re.compile(r"%([\w\.\-]+)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "exponential", "log", "tanh", "negate", "power", "rsqrt", "sqrt",
+    "select", "compare", "and", "or", "xor", "not", "floor", "ceil",
+    "cosine", "sine", "clamp", "sign", "expm1", "log1p", "atan2",
+    "logistic",
+}
+
+SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id",
+    # control ops: carried buffers alias in place; their bodies' ops are
+    # accounted with loop multipliers instead
+    "while", "conditional", "call",
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(s: str) -> tuple[int, int]:
+    """Total (elements, bytes) over every dtype[dims] occurrence in s."""
+    elems = total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_s: str
+    operands: list      # referenced op names (operand list only)
+    attrs: str          # text after the operand list
+    operand_s: str = ""  # raw operand text (parameter indices live here)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    consts: dict
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    flops: float
+    dot_flops: float
+    bytes_accessed: float
+    collective_bytes: dict
+    collective_counts: dict
+    total_collective_bytes: float
+    loops: list
+    unknown_trip_counts: int
+    dot_breakdown: dict = dataclasses.field(default_factory=dict)
+    bytes_breakdown: dict = dataclasses.field(default_factory=dict)
+    coll_breakdown: dict = dataclasses.field(default_factory=dict)
+
+    def top_colls(self, n=15):
+        return sorted(self.coll_breakdown.items(), key=lambda kv: -kv[1])[:n]
+
+    def top_dots(self, n=15):
+        return sorted(self.dot_breakdown.items(), key=lambda kv: -kv[1])[:n]
+
+    def top_bytes(self, n=15):
+        return sorted(self.bytes_breakdown.items(), key=lambda kv: -kv[1])[:n]
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "dot_flops": self.dot_flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+            "n_loops": len(self.loops),
+            "unknown_trip_counts": self.unknown_trip_counts,
+        }
+
+
+def _split_operands_attrs(rest: str) -> tuple[str, str]:
+    """rest starts right after the opening '(' of the op call."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def _parse_computations(text: str):
+    comps: dict[str, Computation] = {}
+    shapes: dict[str, str] = {}  # global symbol table: op name -> shape str
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1), [], {})
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, result_s, kind, rest = m.groups()
+        operand_s, attrs = _split_operands_attrs(rest)
+        operands = _REF_RE.findall(operand_s)
+        cur.ops.append(Op(name, kind, result_s, operands, attrs, operand_s))
+        shapes[name] = result_s
+        if kind == "constant":
+            cm = _CONST_RE.search(stripped)
+            if cm:
+                cur.consts[name] = int(cm.group(1))
+    return comps, shapes
+
+
+def analyze_hlo(text: str) -> HLOAnalysis:
+    comps, shapes = _parse_computations(text)
+
+    def op_bytes(names: list) -> int:
+        total = 0
+        for n in names:
+            total += _shape_elems_bytes(shapes.get(n, ""))[1]
+        return total
+
+    # -- call graph & loops -------------------------------------------------
+    called_as_fusion: set[str] = set()
+    loop_info: dict[str, int] = {}
+    loops_list = []
+    unknown = 0
+    # conds may call wrapped compare computations; collect constants
+    # transitively one level down
+    for comp in comps.values():
+        for op in comp.ops:
+            attrs = op.attrs
+            if op.kind == "while":
+                m_body = re.search(r"body=\s*%?([\w\.\-]+)", attrs)
+                m_cond = re.search(r"condition=\s*%?([\w\.\-]+)", attrs)
+                body = m_body.group(1) if m_body else None
+                cond = m_cond.group(1) if m_cond else None
+                n = None
+                # preferred: XLA's own loop analysis in backend_config
+                m_trip = _TRIP_RE.search(attrs)
+                if m_trip:
+                    n = int(m_trip.group(1))
+                elif cond in comps:
+                    # fallback: the counted-loop condition compares the
+                    # induction variable against an integer constant
+                    consts = dict(comps[cond].consts)
+                    for cop in comps[cond].ops:
+                        for callee in _CALL_ATTR_RE.findall(cop.attrs):
+                            if callee in comps:
+                                consts.update(comps[callee].consts)
+                    cands = [v for v in consts.values() if v > 0]
+                    if cands:
+                        n = max(cands)
+                if n is None:
+                    n = 1
+                    unknown += 1
+                if body:
+                    loop_info[body] = max(loop_info.get(body, 1), n)
+                    loops_list.append((body, n))
+                if cond:
+                    loop_info[cond] = max(loop_info.get(cond, 1), n)
+            elif op.kind == "fusion":
+                m = re.search(r"calls=\s*%?([\w\.\-]+)", attrs)
+                if m:
+                    called_as_fusion.add(m.group(1))
+
+    callers: dict[str, list] = defaultdict(list)
+    for comp in comps.values():
+        for op in comp.ops:
+            for callee in _CALL_ATTR_RE.findall(op.attrs):
+                if callee in comps and comp.name != callee:
+                    callers[callee].append(comp.name)
+
+    # -- effective bytes of fusion parameters ---------------------------------
+    # A fusion whose parameter is only ever sliced reads the sliced region,
+    # not the whole operand (scan residuals are stacked (T, ...) arrays:
+    # counting them at full size per loop iteration over-reports by ~T).
+    fusion_param_eff: dict[str, dict] = {}
+    for name in called_as_fusion:
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        param_of: dict[str, int] = {}
+        for op in comp.ops:
+            if op.kind == "parameter":
+                m = re.match(r"\s*(\d+)", op.operand_s)
+                param_of[op.name] = int(m.group(1)) if m else len(param_of)
+        eff: dict[int, float] = {}
+        full: dict[int, float] = {}
+        for op in comp.ops:
+            if op.kind == "parameter":
+                idx = param_of[op.name]
+                full[idx] = _shape_elems_bytes(op.result_s)[1]
+                eff.setdefault(idx, 0.0)
+        for op in comp.ops:
+            for pos, o in enumerate(op.operands):
+                if o not in param_of:
+                    continue
+                idx = param_of[o]
+                if op.kind in ("slice", "dynamic-slice", "gather"):
+                    eff[idx] += _shape_elems_bytes(op.result_s)[1]
+                elif op.kind == "dynamic-update-slice" and pos == 0:
+                    upd = op.operands[1] if len(op.operands) > 1 else None
+                    eff[idx] += _shape_elems_bytes(
+                        shapes.get(upd, ""))[1] if upd else full[idx]
+                else:
+                    eff[idx] += full[idx]
+        table = {
+            i: min(eff.get(i, full.get(i, 0.0)), full.get(i, 0.0))
+            for i in full
+        }
+        # in-place root update: result traffic ~ update region
+        root = comp.ops[-1] if comp.ops else None
+        if root is not None and root.kind == "dynamic-update-slice" \
+                and len(root.operands) > 1:
+            table[-1] = _shape_elems_bytes(
+                shapes.get(root.operands[1], ""))[1]
+        fusion_param_eff[name] = table
+
+    mult_cache: dict[str, float] = {}
+
+    def multiplier(name: str, depth=0) -> float:
+        if name in mult_cache:
+            return mult_cache[name]
+        if depth > 200:
+            return 1.0
+        mult_cache[name] = 1.0  # cycle guard
+        ms = [multiplier(c, depth + 1) for c in callers.get(name, [])]
+        base = max(ms) if ms else 1.0
+        base *= loop_info.get(name, 1)
+        mult_cache[name] = base
+        return base
+
+    # -- accounting -----------------------------------------------------------
+    flops = dot_flops = bytes_acc = 0.0
+    coll_bytes = dict.fromkeys(COLLECTIVES, 0.0)
+    coll_counts = dict.fromkeys(COLLECTIVES, 0)
+    dot_breakdown: dict[str, float] = defaultdict(float)
+    bytes_breakdown: dict[str, float] = defaultdict(float)
+    coll_breakdown: dict[str, float] = defaultdict(float)
+
+    def _tag(op: Op) -> str:
+        m = _META_RE.search(op.attrs)
+        return m.group(1) if m else op.name
+
+    for comp in comps.values():
+        mult = multiplier(comp.name)
+        in_fusion = comp.name in called_as_fusion
+        for op in comp.ops:
+            res_elems, res_bytes = _shape_elems_bytes(op.result_s)
+
+            if op.kind in ("dot", "convolution"):
+                csize = _contracted_size(op, shapes)
+                f = 2.0 * res_elems * csize
+                flops += f * mult
+                dot_flops += f * mult
+                dot_breakdown[_tag(op)] += f * mult
+            elif op.kind in ELEMENTWISE:
+                flops += res_elems * mult
+
+            if not in_fusion and op.kind not in SKIP_BYTES:
+                if op.kind in ("slice", "dynamic-slice", "gather"):
+                    # these read only the selected region, not the operand
+                    b = 2 * res_bytes * mult
+                elif op.kind in ("dynamic-update-slice", "scatter"):
+                    # in-place update: traffic ~ the update region (operand
+                    # 1), not the whole buffer
+                    upd = op_bytes(op.operands[1:2]) if len(op.operands) > 1 \
+                        else res_bytes
+                    b = 2 * upd * mult
+                elif op.kind == "fusion":
+                    # per-parameter effective reads: a fused slice of a
+                    # stacked scan-residual array touches the slice, not
+                    # the whole operand
+                    m_call = re.search(r"calls=\s*%?([\w\.\-]+)", op.attrs)
+                    eff = fusion_param_eff.get(m_call.group(1), {}) \
+                        if m_call else {}
+                    ob = 0.0
+                    for pos, o in enumerate(op.operands):
+                        fullb = _shape_elems_bytes(shapes.get(o, ""))[1]
+                        ob += min(eff.get(pos, fullb), fullb)
+                    res_eff = min(eff.get(-1, res_bytes), res_bytes)
+                    b = (res_eff + ob) * mult
+                else:
+                    b = (res_bytes + op_bytes(op.operands)) * mult
+                bytes_acc += b
+                bytes_breakdown[_tag(op)] += b
+
+            kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if kind in COLLECTIVES and not op.kind.endswith("-done"):
+                ob = op_bytes(op.operands)
+                if kind == "all-reduce":
+                    b = 2 * ob
+                elif kind == "all-gather":
+                    b = res_bytes
+                else:
+                    b = ob
+                coll_bytes[kind] += b * mult
+                coll_counts[kind] += int(mult)
+                coll_breakdown[f"{kind}|{_tag(op)}"] += b * mult
+
+    return HLOAnalysis(
+        flops=flops,
+        dot_flops=dot_flops,
+        bytes_accessed=bytes_acc,
+        collective_bytes=coll_bytes,
+        collective_counts=coll_counts,
+        total_collective_bytes=float(sum(coll_bytes.values())),
+        loops=loops_list,
+        unknown_trip_counts=unknown,
+        dot_breakdown=dict(dot_breakdown),
+        bytes_breakdown=dict(bytes_breakdown),
+        coll_breakdown=dict(coll_breakdown),
+    )
+
+
+def _contracted_size(op: Op, shapes: dict) -> int:
+    """Product of contracted dim sizes of a dot/conv."""
+    lhs_s = shapes.get(op.operands[0], "") if op.operands else ""
+    m_l = _SHAPE_RE.search(lhs_s)
+    lhs_dims = [int(d) for d in m_l.group(2).split(",") if d] if m_l else []
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    if m and lhs_dims:
+        csize = 1
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                csize *= lhs_dims[int(d)]
+        return csize
+    if op.kind == "convolution" and len(op.operands) > 1:
+        rhs_s = shapes.get(op.operands[1], "")
+        m_r = _SHAPE_RE.search(rhs_s)
+        if m_r:
+            dims = [int(d) for d in m_r.group(2).split(",") if d]
+            if dims:
+                n = 1
+                for d in dims[:-1]:
+                    n *= d
+                return n
+    return 1

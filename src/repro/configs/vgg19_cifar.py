@@ -1,0 +1,4 @@
+"""vgg19-cifar: the paper's own VGG19 (Liu et al. CIFAR adaptation)."""
+from repro.models.vision import VisionConfig
+
+CONFIG = VisionConfig(name="vgg19-cifar", n_classes=10)

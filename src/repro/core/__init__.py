@@ -1,0 +1,48 @@
+"""Core RBGP library: graphs, products, spectra, RBGP4 layout."""
+from .graphs import (
+    BipartiteGraph,
+    complete_bipartite,
+    two_lift,
+    is_ramanujan,
+    second_singular_value,
+    generate_biregular,
+    generate_ramanujan,
+)
+from .product import (
+    graph_product,
+    product_mask,
+    ProductStructure,
+    rcubs_levels,
+    connectivity_storage_edges,
+)
+from .rbgp import RBGP4Spec, RBGP4Layout, design_rbgp4
+from .spectral import (
+    singular_values,
+    spectral_gap,
+    ideal_spectral_gap,
+    product_second_eigenvalue,
+    theorem1_ratio,
+)
+
+__all__ = [
+    "BipartiteGraph",
+    "complete_bipartite",
+    "two_lift",
+    "is_ramanujan",
+    "second_singular_value",
+    "generate_biregular",
+    "generate_ramanujan",
+    "graph_product",
+    "product_mask",
+    "ProductStructure",
+    "rcubs_levels",
+    "connectivity_storage_edges",
+    "RBGP4Spec",
+    "RBGP4Layout",
+    "design_rbgp4",
+    "singular_values",
+    "spectral_gap",
+    "ideal_spectral_gap",
+    "product_second_eigenvalue",
+    "theorem1_ratio",
+]

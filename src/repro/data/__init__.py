@@ -1,0 +1,3 @@
+from .synthetic import TokenStream, GaussianClassImages, Prefetcher, host_shard
+
+__all__ = ["TokenStream", "GaussianClassImages", "Prefetcher", "host_shard"]

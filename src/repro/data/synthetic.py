@@ -1,0 +1,131 @@
+"""Deterministic synthetic data: token streams + CIFAR-shaped images.
+
+CIFAR itself is not available offline (DESIGN.md §7); these generators are
+seeded and *learnable* (low-entropy structure), so loss-decrease and
+accuracy-parity experiments are meaningful:
+
+  * TokenStream: affine-recurrence sequences (t_{i+1} = a*t_i + c mod V)
+    with random restarts and noise — an LM can reach low loss by learning
+    the recurrence;
+  * GaussianClassImages: fixed class prototypes + noise — linearly
+    separable CIFAR-shaped images for the VGG/WRN accuracy-parity runs.
+
+The loader shards the global batch across hosts (process_index slicing) and
+prefetches with a background thread (double buffering).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["TokenStream", "GaussianClassImages", "Prefetcher", "host_shard"]
+
+
+def host_shard(global_batch: int, process_index: Optional[int] = None,
+               process_count: Optional[int] = None) -> tuple[int, int]:
+    """(start, size) of this host's slice of the global batch."""
+    pi = jax.process_index() if process_index is None else process_index
+    pc = jax.process_count() if process_count is None else process_count
+    if global_batch % pc:
+        raise ValueError(f"global batch {global_batch} not divisible by {pc} hosts")
+    size = global_batch // pc
+    return pi * size, size
+
+
+class TokenStream:
+    """Deterministic learnable token batches: (B, S) or (B, S, n_codebooks)."""
+
+    def __init__(self, vocab: int, batch: int, seq_len: int,
+                 n_codebooks: int = 1, seed: int = 0, noise: float = 0.05,
+                 restart_p: float = 0.02):
+        self.vocab = vocab
+        self.batch = batch
+        self.seq = seq_len
+        self.ncb = n_codebooks
+        self.seed = seed
+        self.noise = noise
+        self.restart_p = restart_p
+        rng = np.random.default_rng(seed)
+        # affine recurrence coefficients (co-prime-ish with V)
+        self.a = int(rng.integers(2, max(vocab - 1, 3)) | 1)
+        self.c = int(rng.integers(1, vocab))
+
+    def batch_at(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        shape = (self.batch, self.seq, self.ncb) if self.ncb > 1 else (
+            self.batch, self.seq)
+        toks = np.zeros(shape, np.int32)
+        cur = rng.integers(0, self.vocab, size=shape[:1] + shape[2:])
+        for s in range(self.seq):
+            toks[:, s] = cur
+            cur = (self.a * cur + self.c) % self.vocab
+            restart = rng.random(cur.shape) < self.restart_p
+            cur = np.where(restart, rng.integers(0, self.vocab, cur.shape), cur)
+            flip = rng.random(cur.shape) < self.noise
+            cur = np.where(flip, rng.integers(0, self.vocab, cur.shape), cur)
+        return toks
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield {"tokens": self.batch_at(step)}
+            step += 1
+
+
+class GaussianClassImages:
+    """CIFAR-shaped (B, 32, 32, 3) images from fixed class prototypes."""
+
+    def __init__(self, n_classes: int, batch: int, seed: int = 0,
+                 noise: float = 0.6, size: int = 32):
+        self.n = n_classes
+        self.batch = batch
+        self.noise = noise
+        self.size = size
+        rng = np.random.default_rng(seed)
+        self.protos = rng.standard_normal(
+            (n_classes, size, size, 3)).astype(np.float32)
+        self.seed = seed
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed + 1, step))
+        labels = rng.integers(0, self.n, self.batch)
+        imgs = self.protos[labels] + self.noise * rng.standard_normal(
+            (self.batch, self.size, self.size, 3)).astype(np.float32)
+        return {"images": imgs.astype(np.float32), "labels": labels.astype(np.int32)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread double buffering around any batch iterator."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._it = iter(it)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

@@ -1,0 +1,6 @@
+"""RBGP4 Pallas kernels (TPU target, interpret-mode validated on CPU)."""
+from .rbgp4mm import KernelDims, rbgp4mm, rbgp4mm_rhs, rbgp4_sddmm
+from .ops import RBGP4Op, default_interpret
+from . import ref
+
+__all__ = ["KernelDims", "rbgp4mm", "rbgp4mm_rhs", "rbgp4_sddmm", "RBGP4Op", "default_interpret", "ref"]

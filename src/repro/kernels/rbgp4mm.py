@@ -1,0 +1,365 @@
+"""Pallas TPU kernels for RBGP4 sparse x dense matmul (paper §5, Alg. 1).
+
+TPU adaptation of the paper's GPU algorithm (see DESIGN.md §2):
+
+  * The Pallas grid cell ``(i, j, k)`` computes output tile ``(i, j)``'s
+    contribution from the ``k``-th non-zero W-tile of tile-row ``i``
+    (``k`` in ``[0, d_o)`` — the role of ``G_o``: zero tiles are never
+    visited, and their I-tiles are never DMA'd from HBM).
+  * ``G_o``'s adjacency list is **scalar-prefetched** so the dense input's
+    BlockSpec index_map can do data-dependent tile selection
+    (``adj_ref[i, k]``), the canonical Pallas block-sparse pattern.
+  * ``G_i``'s adjacency is **static at trace time** (masks are predefined
+    before training), so the intra-tile gather is unrolled into static
+    contiguous slices of the VMEM-resident I-tile — the role of the complete
+    factors ``G_r (x) G_b`` is to make each such slice a dense ``(G, C)``
+    block so the MXU runs on packed non-zeros only.
+  * fp32 accumulation in a VMEM scratch buffer, written back on the last
+    ``k`` step (bf16-in / bf16-out with f32 accumulate is the MXU-native
+    mode).
+
+Three kernels share this structure:
+  ``rbgp4mm``      O = W_s @ I                (forward; also dI via the
+                                               transposed layout)
+  ``rbgp4_sddmm``  dW = (dO @ I^T) |_mask     (compact-masked gradient)
+
+Weight storage is compact: ``Wdata`` of shape ``(M, d_o * d_i * C)``; see
+``core/rbgp.py`` for the layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["KernelDims", "rbgp4mm", "rbgp4mm_rhs", "rbgp4_sddmm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDims:
+    """Static kernel dimensions derived from an RBGP4Layout.
+
+    ``adj_i`` is a tuple-of-tuples (hashable) so this dataclass can be a
+    static argument to jit'd wrappers.
+    """
+
+    m: int               # rows of W_s / O
+    k: int               # cols of W_s == rows of I
+    tile_m: int          # TM = U_i * G
+    tile_k: int          # TK = V_i * C
+    group_rows: int      # G
+    chunk_cols: int      # C
+    d_o: int             # non-zero tiles per tile-row
+    d_i: int             # non-zero inner blocks per group-row
+    u_i: int             # |G_i.U|
+    v_i: int             # |G_i.V|
+    adj_i: tuple[tuple[int, ...], ...]
+
+    @property
+    def n_row_tiles(self) -> int:
+        return self.m // self.tile_m
+
+    @property
+    def n_col_tiles(self) -> int:
+        return self.k // self.tile_k
+
+    @property
+    def data_cols(self) -> int:
+        return self.d_o * self.d_i * self.chunk_cols
+
+    @classmethod
+    def from_layout(cls, layout) -> "KernelDims":
+        sp = layout.spec
+        return cls(
+            m=sp.m,
+            k=sp.k,
+            tile_m=sp.tile_m,
+            tile_k=sp.tile_k,
+            group_rows=sp.group_rows,
+            chunk_cols=sp.chunk_cols,
+            d_o=sp.d_o,
+            d_i=sp.d_i,
+            u_i=sp.g_i[0],
+            v_i=sp.g_i[1],
+            adj_i=tuple(tuple(int(v) for v in row) for row in layout.adj_i),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Forward: O = W_s @ I
+# ---------------------------------------------------------------------------
+
+def _mm_kernel(dims: KernelDims, adj_ref, w_ref, x_ref, o_ref, acc_ref):
+    """One (i, j, k) grid cell: O[i, j] += Wtile(i, k) @ Itile(adj[i,k], j)."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G, C, d_i = dims.group_rows, dims.chunk_cols, dims.d_i
+    # Unrolled loop over inner row-groups; all slicing is static (G_i is a
+    # trace-time constant), so each iteration is a dense (G x d_i*C) @
+    # (d_i*C x BN) matmul on the MXU.
+    for ui in range(dims.u_i):
+        w_u = w_ref[ui * G:(ui + 1) * G, :]  # (G, d_i*C)
+        cols = dims.adj_i[ui]
+        if len(cols) == dims.v_i:
+            # complete inner graph: contiguous slice, no concat needed
+            x_u = x_ref[...]
+        else:
+            x_u = jnp.concatenate(
+                [x_ref[vi * C:(vi + 1) * C, :] for vi in cols], axis=0
+            )  # (d_i*C, BN)
+        acc_ref[ui * G:(ui + 1) * G, :] += jnp.dot(
+            w_u, x_u, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(kk == dims.d_o - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def rbgp4mm(
+    dims: KernelDims,
+    adj_o: jax.Array,
+    w_data: jax.Array,
+    x: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """O = W_s @ I with W_s in compact RBGP4 storage.
+
+    Args:
+      dims: static kernel dims (from ``KernelDims.from_layout``).
+      adj_o: (n_o_l, d_o) int32 outer adjacency (scalar-prefetched).
+      w_data: (M, d_o * d_i * C) compact values.
+      x: (K, N) dense input.
+    Returns:
+      (M, N) dense output.
+    """
+    m, k = dims.m, dims.k
+    if w_data.shape != (m, dims.data_cols):
+        raise ValueError(f"w_data {w_data.shape} != {(m, dims.data_cols)}")
+    if x.shape[0] != k:
+        raise ValueError(f"x rows {x.shape[0]} != K {k}")
+    n = x.shape[1]
+    out_dtype = out_dtype or x.dtype
+
+    bn = min(block_n, _round_up(n, 128 if not interpret else 8))
+    n_pad = _round_up(n, bn)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+
+    grid = (dims.n_row_tiles, n_pad // bn, dims.d_o)
+    dcols = dims.d_i * dims.chunk_cols
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, dims),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((dims.tile_m, dcols), lambda i, j, kk, adj: (i, kk)),
+                pl.BlockSpec((dims.tile_k, bn), lambda i, j, kk, adj: (adj[i, kk], j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (dims.tile_m, bn), lambda i, j, kk, adj: (i, j)
+            ),
+            scratch_shapes=[pltpu.VMEM((dims.tile_m, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n_pad), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(adj_o, w_data.reshape(m, dims.d_o * dcols), x)
+    return out[:, :n] if n_pad != n else out
+
+
+# ---------------------------------------------------------------------------
+# SDDMM: dW = (dO @ I^T) restricted to the mask, in compact storage
+# ---------------------------------------------------------------------------
+
+def _sddmm_kernel(dims: KernelDims, adj_ref, do_ref, x_ref, dw_ref, acc_ref):
+    """One (i, k, j) grid cell: dWtile(i, k) += dOtile(i, j) @ Itile^T."""
+    jj = pl.program_id(2)
+
+    @pl.when(jj == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G, C = dims.group_rows, dims.chunk_cols
+    for ui in range(dims.u_i):
+        do_u = do_ref[ui * G:(ui + 1) * G, :]  # (G, BN)
+        for ki, vi in enumerate(dims.adj_i[ui]):
+            x_v = x_ref[vi * C:(vi + 1) * C, :]  # (C, BN)
+            acc_ref[ui * G:(ui + 1) * G, ki * C:(ki + 1) * C] += (
+                jax.lax.dot_general(
+                    do_u, x_v,
+                    dimension_numbers=(((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+            )
+
+    @pl.when(jj == pl.num_programs(2) - 1)
+    def _write():
+        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)
+
+
+def rbgp4_sddmm(
+    dims: KernelDims,
+    adj_o: jax.Array,
+    d_out: jax.Array,
+    x: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Compact masked gradient: dWdata = pack((dO @ I^T) * mask).
+
+    Args:
+      d_out: (M, N) output cotangent.
+      x: (K, N) forward input.
+    Returns:
+      (M, d_o * d_i * C) compact gradient w.r.t. w_data.
+    """
+    m, k = dims.m, dims.k
+    n = x.shape[1]
+    if d_out.shape[0] != m or x.shape[0] != k or d_out.shape[1] != n:
+        raise ValueError(f"bad shapes dO={d_out.shape} x={x.shape}")
+    out_dtype = out_dtype or d_out.dtype
+
+    bn = min(block_n, _round_up(n, 128 if not interpret else 8))
+    n_pad = _round_up(n, bn)
+    if n_pad != n:
+        d_out = jnp.pad(d_out, ((0, 0), (0, n_pad - n)))
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+
+    grid = (dims.n_row_tiles, dims.d_o, n_pad // bn)
+    dcols = dims.d_i * dims.chunk_cols
+
+    out = pl.pallas_call(
+        functools.partial(_sddmm_kernel, dims),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((dims.tile_m, bn), lambda i, kk, j, adj: (i, j)),
+                pl.BlockSpec((dims.tile_k, bn), lambda i, kk, j, adj: (adj[i, kk], j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (dims.tile_m, dcols), lambda i, kk, j, adj: (i, kk)
+            ),
+            scratch_shapes=[pltpu.VMEM((dims.tile_m, dcols), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, dims.d_o * dcols), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(adj_o, d_out, x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RHS form: Y = X @ W_s^T  (token-major activations, no transposes)
+# ---------------------------------------------------------------------------
+
+def _mm_rhs_kernel(dims: KernelDims, adj_ref, x_ref, w_ref, y_ref, acc_ref):
+    """One (i, j, k) grid cell: Y[i, j] += Xtile(i, adj[j,k]) @ Wtile(j, k)^T.
+
+    Beyond-paper variant: the paper's SDMM computes O = W_s @ I with
+    feature-major activations; model code is token-major, so the LHS form
+    costs two full activation transposes per layer.  This kernel contracts
+    over W's compact column dim directly (dot_general ((1,), (1,))), writing
+    (BN, G)-wide output slices per inner group.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G, C, d_i = dims.group_rows, dims.chunk_cols, dims.d_i
+    for ui in range(dims.u_i):
+        w_u = w_ref[ui * G:(ui + 1) * G, :]  # (G, d_i*C)
+        cols = dims.adj_i[ui]
+        if len(cols) == dims.v_i:
+            x_u = x_ref[...]
+        else:
+            x_u = jnp.concatenate(
+                [x_ref[:, vi * C:(vi + 1) * C] for vi in cols], axis=1
+            )  # (BN, d_i*C)
+        acc_ref[:, ui * G:(ui + 1) * G] += jax.lax.dot_general(
+            x_u, w_u,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(kk == dims.d_o - 1)
+    def _write():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def rbgp4mm_rhs(
+    dims: KernelDims,
+    adj_o: jax.Array,
+    x: jax.Array,
+    w_data: jax.Array,
+    *,
+    block_n: int = 256,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Y = X @ W_s^T; X (N, K) token-major -> Y (N, M)."""
+    m, k = dims.m, dims.k
+    if w_data.shape != (m, dims.data_cols):
+        raise ValueError(f"w_data {w_data.shape} != {(m, dims.data_cols)}")
+    if x.shape[1] != k:
+        raise ValueError(f"x cols {x.shape[1]} != K {k}")
+    n = x.shape[0]
+    out_dtype = out_dtype or x.dtype
+
+    bn = min(block_n, _round_up(n, 16 if not interpret else 8))
+    n_pad = _round_up(n, bn)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+
+    grid = (n_pad // bn, dims.n_row_tiles, dims.d_o)
+    dcols = dims.d_i * dims.chunk_cols
+
+    out = pl.pallas_call(
+        functools.partial(_mm_rhs_kernel, dims),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bn, dims.tile_k), lambda i, j, kk, adj: (i, adj[j, kk])),
+                pl.BlockSpec((dims.tile_m, dcols), lambda i, j, kk, adj: (j, kk)),
+            ],
+            out_specs=pl.BlockSpec(
+                (bn, dims.tile_m), lambda i, j, kk, adj: (i, j)
+            ),
+            scratch_shapes=[pltpu.VMEM((bn, dims.tile_m), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_pad, m), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(adj_o, x, w_data.reshape(m, dims.d_o * dcols))
+    return out[:n] if n_pad != n else out
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

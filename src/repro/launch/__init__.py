@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time and
+must only be imported as the __main__ entry point.
+"""
+from .mesh import make_production_mesh, make_local_mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]

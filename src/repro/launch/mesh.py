@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state.  The dry-run (and only the dry-run) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so these meshes can be built on the CPU container.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (= one 256-chip v5e pod) or 2x16x16 (two pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist locally (tests / examples)."""
+    n = len(jax.devices())
+    if n % model_parallel:
+        raise ValueError(f"{n} devices not divisible by mp={model_parallel}")
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

@@ -1,0 +1,99 @@
+"""Batched serving driver: prefill + decode loop with KV caches.
+
+Runs a small model end-to-end on local devices: builds a batch of prompts,
+prefills, then decodes N tokens per request with greedy/temperature
+sampling, reporting tokens/sec.  The same prefill/decode step functions are
+the ones the dry-run lowers at production shapes.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --batch 4 --prompt-len 32 --gen 32 --sparsity 0.75
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import apply_sparsity, get_config, reduce_config
+from repro.data import TokenStream
+from repro.models import LMModel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--pattern", default="rbgp4")
+    ap.add_argument("--sparsity", type=float, default=0.75)
+    ap.add_argument("--backend", default="xla_masked")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    if args.sparsity > 0:
+        cfg = apply_sparsity(cfg, pattern=args.pattern,
+                             sparsity=args.sparsity, backend=args.backend,
+                             min_dim=64)
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    print(f"arch={cfg.name} params={model.n_params():,} "
+          f"pattern={cfg.sparsity.pattern}@{cfg.sparsity.sparsity}")
+
+    cache_len = args.prompt_len + args.gen
+    ts = TokenStream(cfg.vocab_size, args.batch, args.prompt_len,
+                     n_codebooks=cfg.n_codebooks, seed=args.seed)
+    prompts = jnp.asarray(ts.batch_at(0))
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    cache = model.init_cache(args.batch, cache_len, jnp.float32)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, {"tokens": prompts}, cache)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    def sample(logits, key):
+        if args.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / args.temperature, axis=-1)
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    generated = []
+    tok = sample(logits, key)
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        generated.append(np.asarray(tok))
+        if cfg.n_codebooks > 1:
+            nxt = tok.reshape(args.batch, 1, cfg.n_codebooks)
+        else:
+            nxt = tok.reshape(args.batch, 1)
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, nxt, cache, jnp.int32(args.prompt_len + i))
+        tok = sample(logits, sub)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    total_new = args.batch * args.gen
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
+          f"{t_prefill*1e3:.0f}ms "
+          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+    print(f"decode : {total_new} tokens in {t_decode*1e3:.0f}ms "
+          f"({total_new/t_decode:.0f} tok/s, "
+          f"{t_decode/args.gen*1e3:.1f} ms/step)")
+    gen = np.stack(generated, axis=1)
+    print(f"sample continuation (req 0): {gen[0].reshape(args.gen, -1)[:8].ravel().tolist()}")
+
+
+if __name__ == "__main__":
+    main()

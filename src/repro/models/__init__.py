@@ -1,0 +1,17 @@
+"""Model zoo: shared components + assigned architectures + paper's models."""
+from .common import RMSNorm, Embedding, rope_frequencies, apply_rope
+from .attention import GQAttention, MLAttention
+from .mlp import GatedMLP
+from .moe import MoELayer, StackedExperts
+from .ssm import MambaMixer
+from .rwkv import RWKVBlock
+from .transformer import DecoderLayer, Stack
+from .lm import LMModel, lm_loss
+from .vision import VGG19, WideResNet, VisionConfig, SparseConv2D
+
+__all__ = [
+    "RMSNorm", "Embedding", "rope_frequencies", "apply_rope",
+    "GQAttention", "MLAttention", "GatedMLP", "MoELayer", "StackedExperts",
+    "MambaMixer", "RWKVBlock", "DecoderLayer", "Stack", "LMModel", "lm_loss",
+    "VGG19", "WideResNet", "VisionConfig", "SparseConv2D",
+]

@@ -1,0 +1,49 @@
+"""Gated MLPs (SwiGLU / GeGLU) with SparseLinear projections."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.constrain import shard
+from repro.sparsity import SparseLinear, SparsityConfig
+
+__all__ = ["GatedMLP"]
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jax.nn.relu(x) ** 2,
+}
+
+
+class GatedMLP:
+    """y = down( act(gate(x)) * up(x) ) — SwiGLU (silu) or GeGLU (gelu)."""
+
+    def __init__(
+        self,
+        d_model: int,
+        d_ff: int,
+        sparsity: SparsityConfig,
+        act: str = "silu",
+        name: str = "mlp",
+    ):
+        self.act = ACTS[act]
+        self.gate = SparseLinear(d_model, d_ff, sparsity, name=f"{name}.gate")
+        self.up = SparseLinear(d_model, d_ff, sparsity, name=f"{name}.up")
+        self.down = SparseLinear(d_ff, d_model, sparsity, name=f"{name}.down")
+
+    def init(self, key) -> dict:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "gate": self.gate.init(k1),
+            "up": self.up.init(k2),
+            "down": self.down.init(k3),
+        }
+
+    def apply(self, params, x):
+        h = self.act(self.gate.apply(params["gate"], x)) * self.up.apply(
+            params["up"], x
+        )
+        h = shard(h, "dp", None, "tp")
+        return shard(self.down.apply(params["down"], h), "dp", None, None)

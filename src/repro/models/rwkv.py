@@ -1,0 +1,193 @@
+"""RWKV-6 "Finch" block: data-dependent decay time-mix + channel-mix.
+
+Attention-free mixer with O(1) decode state — runs the ``long_500k`` cell
+natively.  Structure follows arXiv:2404.05892: token-shift with
+data-dependent linear interpolation (ddlerp, LoRA-style), per-channel
+data-dependent decay ``w = exp(-exp(w_base + lora(x)))``, per-head WKV
+recurrence with bonus ``u``, grouped RMS normalization of the read-out, and
+the squared-ReLU channel-mix.  The large square projections (r/k/v/g/o and
+channel-mix) are SparseLinear (RBGP4-capable); the tiny LoRA/mix vectors
+stay dense.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RWKVConfig
+from repro.parallel.constrain import shard
+from repro.sparsity import SparseLinear
+
+__all__ = ["RWKVBlock", "init_cache_rwkv"]
+
+
+def init_cache_rwkv(batch, d_model, n_heads, head_size, dtype=jnp.bfloat16):
+    return {
+        "x_tm": jnp.zeros((batch, 1, d_model), dtype),   # last input (time mix)
+        "x_cm": jnp.zeros((batch, 1, d_model), dtype),   # last input (chan mix)
+        "state": jnp.zeros((batch, n_heads, head_size, head_size), jnp.float32),
+    }
+
+
+def _shift(x, last):
+    """Token shift: y_t = x_{t-1}; position 0 comes from `last` (or zero)."""
+    if last is None:
+        return jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    return jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+class RWKVBlock:
+    """Full RWKV layer (time-mix + channel-mix, with internal norms)."""
+
+    MIX = ("r", "k", "v", "w", "g")
+
+    def __init__(self, cfg: ModelConfig, name: str = "rwkv"):
+        assert cfg.rwkv is not None
+        self.cfg = cfg
+        self.rc = cfg.rwkv
+        d = cfg.d_model
+        self.h = d // self.rc.head_size
+        self.hs = self.rc.head_size
+        sp = cfg.sparsity
+        self.w_r = SparseLinear(d, d, sp, name=f"{name}.r")
+        self.w_k = SparseLinear(d, d, sp, name=f"{name}.k")
+        self.w_v = SparseLinear(d, d, sp, name=f"{name}.v")
+        self.w_g = SparseLinear(d, d, sp, name=f"{name}.g")
+        self.w_o = SparseLinear(d, d, sp, name=f"{name}.o")
+        self.cm_k = SparseLinear(d, cfg.d_ff, sp, name=f"{name}.cmk")
+        self.cm_v = SparseLinear(cfg.d_ff, d, sp, name=f"{name}.cmv")
+        self.cm_r = SparseLinear(d, d, sp, name=f"{name}.cmr")
+
+    def init(self, key) -> dict:
+        cfg, rc = self.cfg, self.rc
+        d = cfg.d_model
+        ks = jax.random.split(key, 16)
+        p = {
+            "ln1_scale": jnp.ones((d,)), "ln1_bias": jnp.zeros((d,)),
+            "ln2_scale": jnp.ones((d,)), "ln2_bias": jnp.zeros((d,)),
+            "r": self.w_r.init(ks[0]), "k": self.w_k.init(ks[1]),
+            "v": self.w_v.init(ks[2]), "g": self.w_g.init(ks[3]),
+            "o": self.w_o.init(ks[4]),
+            "cmk": self.cm_k.init(ks[5]), "cmv": self.cm_v.init(ks[6]),
+            "cmr": self.cm_r.init(ks[7]),
+            # ddlerp: base mixes + low-rank data-dependent adjustment
+            "mu_x": jax.random.uniform(ks[8], (d,)),
+            "mix_w1": jax.random.normal(ks[9], (d, 5 * rc.mix_lora)) * 1e-2,
+            "mix_w2": jax.random.normal(ks[10], (5, rc.mix_lora, d)) * 1e-2,
+            # decay: per-channel base + LoRA
+            "w_base": jnp.linspace(-6.0, -1.0, d),
+            "decay_w1": jax.random.normal(ks[11], (d, rc.decay_lora)) * 1e-2,
+            "decay_w2": jax.random.normal(ks[12], (rc.decay_lora, d)) * 1e-2,
+            "u": jax.random.normal(ks[13], (d,)) * 0.1,
+            "gn_scale": jnp.ones((d,)), "gn_bias": jnp.zeros((d,)),
+            "mu_cm_k": jax.random.uniform(ks[14], (d,)),
+            "mu_cm_r": jax.random.uniform(ks[15], (d,)),
+        }
+        for i, nm in enumerate(self.MIX):
+            p[f"mu_{nm}"] = jnp.full((d,), (i + 1) / 6.0)
+        return p
+
+    @staticmethod
+    def _ln(x, scale, bias):
+        m = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+        v = jnp.var(x.astype(jnp.float32), axis=-1, keepdims=True)
+        y = (x.astype(jnp.float32) - m) * jax.lax.rsqrt(v + 1e-5)
+        return (y * scale + bias).astype(x.dtype)
+
+    def _group_norm(self, x, params):
+        """Per-head normalization of the WKV read-out; x: (B, S, H, hs)."""
+        m = jnp.mean(x, axis=-1, keepdims=True)
+        v = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - m) * jax.lax.rsqrt(v + 64e-5)
+        B, S = x.shape[:2]
+        y = y.reshape(B, S, -1)
+        return y * params["gn_scale"] + params["gn_bias"]
+
+    def _time_mix(self, params, x, cache):
+        B, S, D = x.shape
+        H, hs = self.h, self.hs
+        xs = _shift(x, cache["x_tm"] if cache is not None else None)
+        dx = xs - x
+
+        # ddlerp: token-shift amount is itself data-dependent (Finch)
+        xxx = x + dx * params["mu_x"].astype(x.dtype)
+        z = jnp.tanh(xxx @ params["mix_w1"].astype(x.dtype))
+        z = z.reshape(B, S, 5, -1)
+        adj = jnp.einsum("bsfl,fld->bsfd", z, params["mix_w2"].astype(x.dtype))
+        feeds = {
+            nm: x + dx * (params[f"mu_{nm}"].astype(x.dtype) + adj[:, :, i])
+            for i, nm in enumerate(self.MIX)
+        }
+
+        r = shard(self.w_r.apply(params["r"], feeds["r"]).reshape(B, S, H, hs),
+                  "dp", None, "tp", None)
+        k = shard(self.w_k.apply(params["k"], feeds["k"]).reshape(B, S, H, hs),
+                  "dp", None, "tp", None)
+        v = shard(self.w_v.apply(params["v"], feeds["v"]).reshape(B, S, H, hs),
+                  "dp", None, "tp", None)
+        g = jax.nn.silu(self.w_g.apply(params["g"], feeds["g"]))
+
+        # data-dependent decay in (0, 1)
+        wdec = params["w_base"].astype(jnp.float32) + (
+            jnp.tanh(feeds["w"].astype(jnp.float32)
+                     @ params["decay_w1"].astype(jnp.float32))
+            @ params["decay_w2"].astype(jnp.float32)
+        )
+        wdec = jnp.exp(-jnp.exp(wdec)).reshape(B, S, H, hs)
+        u = params["u"].astype(jnp.float32).reshape(H, hs)
+
+        s0 = (
+            cache["state"] if cache is not None
+            else jnp.zeros((B, H, hs, hs), jnp.float32)
+        )
+
+        def step(s, inp):
+            r_t, k_t, v_t, w_t = inp  # (B, H, hs) each
+            kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hs,hs)
+            y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+            s = w_t[..., :, None] * s + kv
+            return s, y
+
+        # f32 scan inputs: a bf16-xs variant was tried and REFUTED under
+        # the fusion-boundary byte model (EXPERIMENTS.md section Perf)
+        to32 = lambda a: jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+        s_last, ys = jax.lax.scan(
+            step, s0, (to32(r), to32(k), to32(v), to32(wdec)),
+            unroll=min(self.cfg.ssm_unroll, S),
+        )
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hs)  # (B,S,H,hs)
+        y = self._group_norm(y, params).astype(x.dtype) * g
+        out = self.w_o.apply(params["o"], y)
+        return out, (x[:, -1:], s_last)
+
+    def _channel_mix(self, params, x, cache):
+        xs = _shift(x, cache["x_cm"] if cache is not None else None)
+        dx = xs - x
+        xk = x + dx * params["mu_cm_k"].astype(x.dtype)
+        xr = x + dx * params["mu_cm_r"].astype(x.dtype)
+        k = jax.nn.relu(self.cm_k.apply(params["cmk"], xk)) ** 2
+        k = shard(k, "dp", None, "tp")
+        v = self.cm_v.apply(params["cmv"], k)
+        r = jax.nn.sigmoid(self.cm_r.apply(params["cmr"], xr))
+        return r * v, x[:, -1:]
+
+    def apply(self, params, x, positions, *, cache=None):
+        """Full RWKV layer; returns (y, new_cache)."""
+        h, (last_tm, state) = self._time_mix(
+            params, self._ln(x, params["ln1_scale"], params["ln1_bias"]), cache
+        )
+        x = x + h
+        h2, last_cm = self._channel_mix(
+            params, self._ln(x, params["ln2_scale"], params["ln2_bias"]), cache
+        )
+        x = x + h2
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "x_tm": last_tm.astype(cache["x_tm"].dtype),
+                "x_cm": last_cm.astype(cache["x_cm"].dtype),
+                "state": state,
+            }
+        return x, new_cache

@@ -1,0 +1,139 @@
+"""Mamba selective-SSM mixer (Jamba's sequence mixer).
+
+Selective scan over time via ``jax.lax.scan`` (HLO stays O(1) in sequence
+length — essential for the 500k-token dry-run cells).  Decode carries a
+(conv-window, ssm-state) cache of O(1) size — the reason hybrids run the
+``long_500k`` cell at all.
+
+The big in/out projections are SparseLinear (RBGP4-capable); the conv1d
+(depthwise, d_conv=4) and SSM parameters are tiny and stay dense (see
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.parallel.constrain import shard
+from repro.sparsity import SparseLinear
+
+__all__ = ["MambaMixer", "init_cache_mamba"]
+
+
+def init_cache_mamba(batch, d_inner, d_conv, d_state, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        "h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+class MambaMixer:
+    def __init__(self, cfg: ModelConfig, name: str = "mamba"):
+        assert cfg.mamba is not None
+        self.cfg = cfg
+        self.mc = cfg.mamba
+        d = cfg.d_model
+        self.d_inner = self.mc.expand * d
+        self.dt_rank = self.mc.dt_rank or max(1, math.ceil(d / 16))
+        sp = cfg.sparsity
+        self.in_proj = SparseLinear(d, 2 * self.d_inner, sp, name=f"{name}.in")
+        self.x_proj = SparseLinear(
+            self.d_inner, self.dt_rank + 2 * self.mc.d_state,
+            sp, name=f"{name}.x",
+        )
+        self.out_proj = SparseLinear(self.d_inner, d, sp, name=f"{name}.out")
+
+    def init(self, key) -> dict:
+        mc, di = self.mc, self.d_inner
+        ks = jax.random.split(key, 6)
+        dt = jnp.exp(
+            jax.random.uniform(ks[3], (di,))
+            * (math.log(0.1) - math.log(0.001)) + math.log(0.001)
+        )
+        return {
+            "in": self.in_proj.init(ks[0]),
+            "x": self.x_proj.init(ks[1]),
+            "out": self.out_proj.init(ks[2]),
+            "conv_w": jax.random.normal(ks[4], (mc.d_conv, di)) / math.sqrt(mc.d_conv),
+            "conv_b": jnp.zeros((di,)),
+            "dt_w": jax.random.normal(ks[5], (di, self.dt_rank))
+            * (self.dt_rank ** -0.5),
+            # inverse-softplus so softplus(dt_bias) == dt at init
+            "dt_bias": jnp.log(jnp.expm1(dt)),
+            "a_log": jnp.log(
+                jnp.broadcast_to(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32),
+                                 (di, mc.d_state))
+            ),
+            "d": jnp.ones((di,)),
+        }
+
+    def apply(self, params, x, positions, *, cache=None):
+        """x: (B, S, D) -> (y, new_cache)."""
+        mc, di, ds = self.mc, self.d_inner, self.mc.d_state
+        B, S, D = x.shape
+        dt_ = x.dtype
+
+        xz = self.in_proj.apply(params["in"], x)
+        xb, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+        xb = shard(xb, "dp", None, "tp")
+        z = shard(z, "dp", None, "tp")
+
+        # depthwise causal conv1d over time
+        if cache is not None:
+            ctx = jnp.concatenate([cache["conv"].astype(dt_), xb], axis=1)
+        else:
+            ctx = jnp.pad(xb, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+        w = params["conv_w"].astype(dt_)  # (d_conv, di)
+        conv = sum(
+            ctx[:, j:j + S, :] * w[j][None, None, :] for j in range(mc.d_conv)
+        )
+        xb = jax.nn.silu(conv + params["conv_b"].astype(dt_))
+
+        dbc = self.x_proj.apply(params["x"], xb)
+        dt_r = dbc[..., : self.dt_rank]
+        b_ssm = dbc[..., self.dt_rank: self.dt_rank + ds].astype(jnp.float32)
+        c_ssm = dbc[..., self.dt_rank + ds:].astype(jnp.float32)
+        delta = jax.nn.softplus(
+            dt_r.astype(jnp.float32) @ params["dt_w"].astype(jnp.float32).T
+            + params["dt_bias"]
+        )  # (B, S, di)
+        a = -jnp.exp(params["a_log"])  # (di, ds)
+
+        h0 = (
+            cache["h"] if cache is not None
+            else jnp.zeros((B, di, ds), jnp.float32)
+        )
+
+        xb32 = xb.astype(jnp.float32)
+
+        def step(h, inp):
+            d_t, b_t, c_t, x_t = inp  # (B,di) (B,ds) (B,ds) (B,di)
+            da = jnp.exp(d_t[:, :, None] * a[None])  # (B, di, ds)
+            h = da * h + (d_t * x_t)[:, :, None] * b_t[:, None, :]
+            y = jnp.einsum("bds,bs->bd", h, c_t)
+            return h, y
+
+        xs = (
+            jnp.moveaxis(delta, 1, 0),
+            jnp.moveaxis(b_ssm, 1, 0),
+            jnp.moveaxis(c_ssm, 1, 0),
+            jnp.moveaxis(xb32, 1, 0),
+        )
+        h_last, ys = jax.lax.scan(step, h0, xs,
+                                  unroll=min(self.cfg.ssm_unroll, S))
+        y = jnp.moveaxis(ys, 0, 1).astype(dt_)  # (B, S, di)
+        y = y + xb * params["d"].astype(dt_)
+        y = y * jax.nn.silu(z)
+        y = shard(y, "dp", None, "tp")
+        out = shard(self.out_proj.apply(params["out"], y), "dp", None, None)
+
+        new_cache = None
+        if cache is not None:
+            # keep the last (d_conv - 1) pre-activation inputs as the window
+            window = ctx[:, -(mc.d_conv - 1):, :]
+            new_cache = {"conv": window.astype(cache["conv"].dtype), "h": h_last}
+        return out, new_cache

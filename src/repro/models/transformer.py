@@ -1,0 +1,267 @@
+"""Generic decoder stack: heterogeneous layer patterns under lax.scan.
+
+Layers are grouped into (head, scanned periods, tail):
+
+  * the *period* is the cyclic unit of the architecture's layer pattern
+    (e.g. gemma3's 5 local + 1 global, jamba's 7 mamba + 1 attn with MoE on
+    odd layers) composed with the MoE cadence;
+  * all full periods run under one ``jax.lax.scan`` with stacked params, so
+    compiled HLO size is O(period), not O(n_layers) — a 72-layer Jamba
+    lowers the same program as a 8-layer one (essential at 512 devices);
+  * layers before the first clean period (e.g. DeepSeek-V2's dense-FFN
+    layer 0) and the remainder after the last full period run explicitly.
+
+Per-layer RBGP4 masks survive scanning: the masked SparseLinear stores only
+the tiny base-graph biadjacency factors in params, which stack across
+periods like any other parameter (succinct storage doing real work).
+Compact/pallas backends need trace-time adjacency, so scanned stacks share
+one graph sample across periods for those backends (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import GQAttention, MLAttention, init_cache_gqa, init_cache_mla
+from .common import RMSNorm
+from .mlp import GatedMLP
+from .moe import MoELayer
+from .rwkv import RWKVBlock, init_cache_rwkv
+from .ssm import MambaMixer, init_cache_mamba
+
+__all__ = ["DecoderLayer", "Stack"]
+
+
+def _layer_sparsity(cfg: ModelConfig, idx: int):
+    sp = cfg.sparsity
+    if sp.backend in ("xla_compact", "pallas"):
+        return sp  # static adjacency must be shared across scanned periods
+    return dataclasses.replace(sp, seed=sp.seed + 1000 * (idx + 1))
+
+
+class DecoderLayer:
+    """One layer: norm -> mixer -> residual; norm -> ffn -> residual."""
+
+    def __init__(self, cfg: ModelConfig, idx: int):
+        self.cfg = cfg
+        self.idx = idx
+        self.kind = cfg.layer_kind(idx)
+        lcfg = cfg.with_(sparsity=_layer_sparsity(cfg, idx))
+        self.is_moe = cfg.is_moe_layer(idx)
+
+        if self.kind == "rwkv":
+            self.block = RWKVBlock(lcfg, name=f"l{idx}")
+            return
+        self.norm1 = RMSNorm(cfg.d_model, cfg.rmsnorm_eps)
+        self.norm2 = RMSNorm(cfg.d_model, cfg.rmsnorm_eps)
+        if self.kind == "attn":
+            self.mixer = GQAttention(lcfg, window=0, name=f"l{idx}.attn")
+        elif self.kind == "swa":
+            self.mixer = GQAttention(
+                lcfg, window=cfg.sliding_window, name=f"l{idx}.swa"
+            )
+        elif self.kind == "mla":
+            self.mixer = MLAttention(lcfg, name=f"l{idx}.mla")
+        elif self.kind == "mamba":
+            self.mixer = MambaMixer(lcfg, name=f"l{idx}.mamba")
+        else:
+            raise ValueError(f"unknown layer kind {self.kind!r}")
+        if self.is_moe:
+            self.ffn = MoELayer(
+                cfg.d_model, cfg.moe, lcfg.sparsity, cfg.hidden_act,
+                name=f"l{idx}.moe",
+            )
+        else:
+            self.ffn = GatedMLP(
+                cfg.d_model, cfg.d_ff, lcfg.sparsity, cfg.hidden_act,
+                name=f"l{idx}.mlp",
+            )
+
+    @property
+    def signature(self) -> tuple:
+        return (self.kind, self.is_moe)
+
+    def init(self, key) -> dict:
+        if self.kind == "rwkv":
+            return {"rwkv": self.block.init(key)}
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "norm1": self.norm1.init(k1),
+            "mixer": self.mixer.init(k2),
+            "norm2": self.norm2.init(k3),
+            "ffn": self.ffn.init(k4),
+        }
+
+    def apply(self, params, x, positions, *, cache=None):
+        """Returns (x, new_cache, aux_loss)."""
+        aux = jnp.zeros((), jnp.float32)
+        if self.kind == "rwkv":
+            x, new_cache = self.block.apply(
+                params["rwkv"], x, positions, cache=cache
+            )
+            return x, new_cache, aux
+        h, new_cache = self.mixer.apply(
+            params["mixer"], self.norm1.apply(params["norm1"], x), positions,
+            cache=cache,
+        )
+        x = x + h
+        h2 = self.norm2.apply(params["norm2"], x)
+        if self.is_moe:
+            h2, aux = self.ffn.apply(
+                params["ffn"], h2, full_capacity=cache is not None
+            )
+        else:
+            h2 = self.ffn.apply(params["ffn"], h2)
+        return x + h2, new_cache, aux
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if self.kind in ("attn", "mla") or (self.kind == "swa"):
+            L = min(cache_len, cfg.sliding_window) if self.kind == "swa" else cache_len
+            if self.kind == "mla":
+                return init_cache_mla(batch, L, cfg.mla, dtype)
+            return init_cache_gqa(batch, L, cfg.n_kv_heads, cfg.head_dim_, dtype)
+        if self.kind == "mamba":
+            mc = cfg.mamba
+            return init_cache_mamba(
+                batch, mc.expand * cfg.d_model, mc.d_conv, mc.d_state, dtype
+            )
+        if self.kind == "rwkv":
+            rc = cfg.rwkv
+            return init_cache_rwkv(
+                batch, cfg.d_model, cfg.d_model // rc.head_size, rc.head_size,
+                dtype,
+            )
+        raise ValueError(self.kind)
+
+
+class Stack:
+    """head layers + scanned periods + tail layers."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        n = cfg.n_layers
+        period = len(cfg.layer_pattern)
+        if cfg.moe is not None:
+            period = math.lcm(period, cfg.moe.every_n_layers)
+        def periodic_from(h):
+            for i in range(h, n):
+                sig = (cfg.layer_kind(i), cfg.is_moe_layer(i))
+                ref = (cfg.layer_kind(h + (i - h) % period),
+                       cfg.is_moe_layer(h + (i - h) % period))
+                if sig != ref:
+                    return False
+            return True
+
+        h = 0
+        while h < n and not periodic_from(h):
+            h += 1
+        n_full = (n - h) // period if period else 0
+        tail_start = h + n_full * period
+        self.period = period
+        self.n_head = h
+        self.n_full = n_full
+        self.tail_start = tail_start
+
+        self.head_layers = [DecoderLayer(cfg, i) for i in range(h)]
+        self.tail_layers = [DecoderLayer(cfg, i) for i in range(tail_start, n)]
+        # apply-modules for the scanned periods (structure of period 0)
+        self.period_layers = (
+            [DecoderLayer(cfg, h + j) for j in range(period)] if n_full else []
+        )
+
+    # -- init ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 1)
+        params: dict = {
+            "head": [l.init(keys[l.idx]) for l in self.head_layers],
+            "tail": [l.init(keys[l.idx]) for l in self.tail_layers],
+        }
+        if self.n_full:
+            per_period = []
+            for t in range(self.n_full):
+                layer_params = {}
+                for j in range(self.period):
+                    idx = self.n_head + t * self.period + j
+                    mod = DecoderLayer(cfg, idx)
+                    layer_params[f"j{j}"] = mod.init(keys[idx])
+                per_period.append(layer_params)
+            params["scan"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per_period
+            )
+        else:
+            params["scan"] = {}
+        return params
+
+    # -- caches ------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        cache = {
+            "head": [l.init_cache(batch, cache_len, dtype) for l in self.head_layers],
+            "tail": [l.init_cache(batch, cache_len, dtype) for l in self.tail_layers],
+        }
+        if self.n_full:
+            per = {
+                f"j{j}": self.period_layers[j].init_cache(batch, cache_len, dtype)
+                for j in range(self.period)
+            }
+            cache["scan"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (self.n_full,) + x.shape).copy(), per
+            )
+        else:
+            cache["scan"] = {}
+        return cache
+
+    # -- apply -------------------------------------------------------------------
+    def apply(self, params, x, positions, *, caches=None, train=False):
+        """Returns (x, new_caches, aux_total)."""
+        aux = jnp.zeros((), jnp.float32)
+        new_head, new_tail = [], []
+        for i, l in enumerate(self.head_layers):
+            c = caches["head"][i] if caches is not None else None
+            x, nc, a = l.apply(params["head"][i], x, positions, cache=c)
+            new_head.append(nc)
+            aux += a
+
+        if self.n_full:
+            def body(carry, xs):
+                xc, aux_c = carry
+                p_t, c_t = xs
+                nc_t = {}
+                for j, mod in enumerate(self.period_layers):
+                    cj = c_t[f"j{j}"] if c_t is not None else None
+                    xc, ncj, a = mod.apply(p_t[f"j{j}"], xc, positions, cache=cj)
+                    nc_t[f"j{j}"] = ncj
+                    aux_c = aux_c + a
+                return (xc, aux_c), nc_t
+
+            if train and self.cfg.remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            xs = (params["scan"], caches["scan"] if caches is not None else None)
+            if caches is None:
+                # scan needs a concrete xs pytree: params only
+                (x, aux), _ = jax.lax.scan(
+                    lambda c, p: (body(c, (p, None))[0], None),
+                    (x, aux), params["scan"],
+                )
+                new_scan = {}
+            else:
+                (x, aux), new_scan = jax.lax.scan(body, (x, aux), xs)
+        else:
+            new_scan = {}
+
+        for i, l in enumerate(self.tail_layers):
+            c = caches["tail"][i] if caches is not None else None
+            x, nc, a = l.apply(params["tail"][i], x, positions, cache=c)
+            new_tail.append(nc)
+            aux += a
+
+        new_caches = None
+        if caches is not None:
+            new_caches = {"head": new_head, "scan": new_scan, "tail": new_tail}
+        return x, new_caches, aux

@@ -1,0 +1,218 @@
+"""The paper's benchmark models: VGG19 (Liu et al. CIFAR variant) and
+WideResNet-40-4, with every conv lowered to im2col + SDMM so the RBGP4
+pattern applies to conv weights exactly as in the paper (W_s of shape
+(C_out, C_in*kh*kw) multiplying the unfolded input).
+
+First conv (from the 3-channel input) and the final classifier stay dense,
+matching the paper's protocol ("equal sparsity in all layers except the
+first layer connected to input and the final classifier layer").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparsity import SparseLinear, SparsityConfig
+
+__all__ = ["SparseConv2D", "BatchNorm", "VGG19", "WideResNet", "VisionConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    name: str
+    n_classes: int = 10
+    sparsity: SparsityConfig = dataclasses.field(default_factory=SparsityConfig)
+    width: int = 4          # WRN width multiplier
+    depth: int = 40         # WRN depth (6n + 4)
+
+
+class SparseConv2D:
+    """kxk conv as im2col + SparseLinear — the paper's SDMM formulation."""
+
+    def __init__(self, c_in, c_out, k=3, stride=1, sparsity=None, name="conv",
+                 force_dense=False):
+        self.c_in, self.c_out, self.k, self.stride = c_in, c_out, k, stride
+        cfg = sparsity or SparsityConfig()
+        if force_dense:
+            cfg = SparsityConfig()
+        self.lin = SparseLinear(c_in * k * k, c_out, cfg, name=name)
+
+    def init(self, key):
+        return self.lin.init(key)
+
+    def apply(self, params, x):
+        """x: (B, H, W, C_in) -> (B, H', W', C_out)."""
+        B, H, W, C = x.shape
+        k, s = self.k, self.stride
+        pad = (k - 1) // 2
+        # im2col via conv_general_dilated_patches (NHWC)
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (k, k), (s, s), padding=((pad, pad), (pad, pad)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )  # (B, H', W', C*k*k)
+        return self.lin.apply(params, patches)
+
+
+class BatchNorm:
+    """Batch-stat normalization (training mode); running stats in state."""
+
+    def __init__(self, dim, momentum=0.9):
+        self.dim = dim
+        self.momentum = momentum
+
+    def init(self, key):
+        return {"scale": jnp.ones((self.dim,)), "bias": jnp.zeros((self.dim,))}
+
+    def init_state(self):
+        return {"mean": jnp.zeros((self.dim,)), "var": jnp.ones((self.dim,))}
+
+    def apply(self, params, x, state=None, train=True):
+        if train or state is None:
+            axes = tuple(range(x.ndim - 1))
+            mean = jnp.mean(x, axes)
+            var = jnp.var(x, axes)
+            new_state = None
+            if state is not None:
+                m = self.momentum
+                new_state = {
+                    "mean": m * state["mean"] + (1 - m) * mean,
+                    "var": m * state["var"] + (1 - m) * var,
+                }
+        else:
+            mean, var = state["mean"], state["var"]
+            new_state = state
+        y = (x - mean) * jax.lax.rsqrt(var + 1e-5)
+        return y * params["scale"] + params["bias"], new_state
+
+
+# ---------------------------------------------------------------------------
+# VGG19 (CIFAR variant of Liu et al.: 16 convs + classifier)
+# ---------------------------------------------------------------------------
+
+VGG19_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+              512, 512, 512, 512, "M", 512, 512, 512, 512, "M"]
+
+
+class VGG19:
+    def __init__(self, cfg: VisionConfig):
+        self.cfg = cfg
+        self.convs = []
+        self.bns = []
+        c_prev = 3
+        i = 0
+        for v in VGG19_PLAN:
+            if v == "M":
+                continue
+            self.convs.append(
+                SparseConv2D(c_prev, v, 3, 1, cfg.sparsity,
+                             name=f"conv{i}", force_dense=(i == 0))
+            )
+            self.bns.append(BatchNorm(v))
+            c_prev = v
+            i += 1
+        self.fc = SparseLinear(512, cfg.n_classes, SparsityConfig(), name="fc",
+                               use_bias=True)
+
+    def init(self, key):
+        ks = jax.random.split(key, len(self.convs) + 1)
+        return {
+            "convs": [c.init(ks[i]) for i, c in enumerate(self.convs)],
+            "bns": [b.init(ks[i]) for i, b in enumerate(self.bns)],
+            "fc": self.fc.init(ks[-1]),
+        }
+
+    def apply(self, params, x, train=True):
+        """x: (B, 32, 32, 3) -> logits (B, n_classes)."""
+        ci = 0
+        for v in VGG19_PLAN:
+            if v == "M":
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                )
+                continue
+            x = self.convs[ci].apply(params["convs"][ci], x)
+            x, _ = self.bns[ci].apply(params["bns"][ci], x, train=train)
+            x = jax.nn.relu(x)
+            ci += 1
+        x = x.mean(axis=(1, 2))
+        return self.fc.apply(params["fc"], x)
+
+
+# ---------------------------------------------------------------------------
+# WideResNet-40-4
+# ---------------------------------------------------------------------------
+
+class WRNBlock:
+    def __init__(self, c_in, c_out, stride, sparsity, name):
+        self.bn1 = BatchNorm(c_in)
+        self.conv1 = SparseConv2D(c_in, c_out, 3, stride, sparsity, f"{name}.c1")
+        self.bn2 = BatchNorm(c_out)
+        self.conv2 = SparseConv2D(c_out, c_out, 3, 1, sparsity, f"{name}.c2")
+        self.proj = None
+        if stride != 1 or c_in != c_out:
+            self.proj = SparseConv2D(c_in, c_out, 1, stride, None, f"{name}.proj",
+                                     force_dense=True)
+
+    def init(self, key):
+        ks = jax.random.split(key, 5)
+        p = {
+            "bn1": self.bn1.init(ks[0]), "conv1": self.conv1.init(ks[1]),
+            "bn2": self.bn2.init(ks[2]), "conv2": self.conv2.init(ks[3]),
+        }
+        if self.proj is not None:
+            p["proj"] = self.proj.init(ks[4])
+        return p
+
+    def apply(self, params, x, train=True):
+        h, _ = self.bn1.apply(params["bn1"], x, train=train)
+        h = jax.nn.relu(h)
+        sc = self.proj.apply(params["proj"], h) if self.proj is not None else x
+        h = self.conv1.apply(params["conv1"], h)
+        h, _ = self.bn2.apply(params["bn2"], h, train=train)
+        h = jax.nn.relu(h)
+        h = self.conv2.apply(params["conv2"], h)
+        return h + sc
+
+
+class WideResNet:
+    """WRN-depth-width (paper: 40-4). depth = 6n + 4."""
+
+    def __init__(self, cfg: VisionConfig):
+        self.cfg = cfg
+        n = (cfg.depth - 4) // 6
+        widths = [16, 16 * cfg.width, 32 * cfg.width, 64 * cfg.width]
+        self.stem = SparseConv2D(3, widths[0], 3, 1, None, "stem", force_dense=True)
+        self.blocks = []
+        c_prev = widths[0]
+        for g, w in enumerate(widths[1:]):
+            for b in range(n):
+                stride = 2 if (g > 0 and b == 0) else 1
+                self.blocks.append(
+                    WRNBlock(c_prev, w, stride, cfg.sparsity, f"g{g}b{b}")
+                )
+                c_prev = w
+        self.bn_f = BatchNorm(c_prev)
+        self.fc = SparseLinear(c_prev, cfg.n_classes, SparsityConfig(),
+                               name="fc", use_bias=True)
+        self.c_final = c_prev
+
+    def init(self, key):
+        ks = jax.random.split(key, len(self.blocks) + 3)
+        return {
+            "stem": self.stem.init(ks[0]),
+            "blocks": [b.init(ks[1 + i]) for i, b in enumerate(self.blocks)],
+            "bn_f": self.bn_f.init(ks[-2]),
+            "fc": self.fc.init(ks[-1]),
+        }
+
+    def apply(self, params, x, train=True):
+        x = self.stem.apply(params["stem"], x)
+        for i, b in enumerate(self.blocks):
+            x = b.apply(params["blocks"][i], x, train=train)
+        x, _ = self.bn_f.apply(params["bn_f"], x, train=train)
+        x = jax.nn.relu(x).mean(axis=(1, 2))
+        return self.fc.apply(params["fc"], x)

@@ -1,0 +1,9 @@
+from .sharding import (
+    dp_axes, param_spec, param_sharding_tree, batch_specs, cache_specs,
+    named, spec_tree_to_shardings,
+)
+
+__all__ = [
+    "dp_axes", "param_spec", "param_sharding_tree", "batch_specs",
+    "cache_specs", "named", "spec_tree_to_shardings",
+]

@@ -1,0 +1,79 @@
+"""Activation sharding constraints.
+
+``shard(x, 'dp', None, 'tp', ...)`` pins an activation's layout under pjit:
+'dp' = the data-parallel mesh axes (pod+data), 'tp' = the model axis.  The
+dry-run exposed why this is load-bearing: without constraints XLA SPMD chose
+a batch-replicated layout for the chunked-attention scan (16x redundant
+score FLOPs per device).
+
+No-op unless a mesh is installed (``activation_mesh(mesh)`` context — set by
+the dry-run / launchers); tests and CPU examples run unconstrained.  Axes
+that don't divide the dimension are dropped silently, so one model codebase
+serves every (arch x mesh) combination.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_mesh", "shard", "current_mesh"]
+
+_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _resolve(axis, mesh: Mesh):
+    if axis is None:
+        return None
+    if axis == "dp":
+        axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+    if axis == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    return axis
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint with divisibility-checked logical axes."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    out = []
+    used = set()
+    for dim, ax in zip(x.shape, spec):
+        r = _resolve(ax, mesh)
+        if r is None:
+            out.append(None)
+            continue
+        names = r if isinstance(r, tuple) else (r,)
+        if any(n in used for n in names):
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        if dim % size != 0 or dim < size:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(r)
+    out += [None] * (len(x.shape) - len(out))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))

@@ -1,0 +1,8 @@
+"""Sparsity integration: pattern registry + SparseLinear layer."""
+from .patterns import SparsityConfig, PatternInstance, make_pattern, PATTERNS
+from .layer import SparseLinear, expand_rbgp4_mask
+
+__all__ = [
+    "SparsityConfig", "PatternInstance", "make_pattern", "PATTERNS",
+    "SparseLinear", "expand_rbgp4_mask",
+]

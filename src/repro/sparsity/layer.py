@@ -1,0 +1,179 @@
+"""SparseLinear: every projection in the framework goes through this layer.
+
+Modes (selected by SparsityConfig):
+
+  dense          plain y = x @ W^T.
+  masked         dense weights x a fixed {0,1} mask (the paper's predefined-
+                 sparsity training path).  For the rbgp4 pattern the mask is
+                 *reconstructed in-jit* from the tiny base-graph biadjacency
+                 matrices (Kronecker expansion) — the succinct-storage
+                 property means we never materialize masks in params, so a
+                 scanned 72-layer stack carries only (L, |G_o|) uint8 factors.
+  compact        weights stored compact (M, nnz_row) — 2|E| memory; executed
+                 either with the XLA gather+einsum formulation or the Pallas
+                 RBGP4MM kernels (custom VJP), per ``backend``.
+
+Params returned by ``init`` are a flat dict; keys starting with ``_`` are
+non-trainable constants (masks / graph factors) — the optimizer and
+weight-decay skip them by convention (see train/optim.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RBGP4Layout
+from repro.kernels import RBGP4Op
+from repro.kernels import ref as kref
+from .patterns import PatternInstance, SparsityConfig, make_pattern
+
+__all__ = ["SparseLinear", "expand_rbgp4_mask"]
+
+
+def expand_rbgp4_mask(ba_o: jax.Array, ba_i: jax.Array, G: int, C: int) -> jax.Array:
+    """mask = kron(ba_o, kron(ba_i, ones(G, C))) without materializing krons.
+
+    ba_o: (n_o_l, n_o_r); ba_i: (u_i, v_i) -> (M, K) = (n_o_l*u_i*G, n_o_r*v_i*C).
+    """
+    inner = ba_o[:, None, :, None] * ba_i[None, :, None, :]  # (ol,ui,or,vi)
+    ol, ui, onr, vi = inner.shape
+    mask = jnp.broadcast_to(
+        inner[:, :, None, :, :, None], (ol, ui, G, onr, vi, C)
+    )
+    return mask.reshape(ol * ui * G, onr * vi * C)
+
+
+class SparseLinear:
+    """y = x @ W_s^T (+ b) with a configurable sparsity pattern.
+
+    Functional module: ``init(key) -> params``, ``apply(params, x) -> y``.
+    """
+
+    def __init__(
+        self,
+        in_features: int,
+        out_features: int,
+        cfg: Optional[SparsityConfig] = None,
+        *,
+        use_bias: bool = False,
+        param_dtype=jnp.float32,
+        name: str = "linear",
+    ):
+        self.in_features = in_features
+        self.out_features = out_features
+        self.cfg = cfg or SparsityConfig()
+        self.use_bias = use_bias
+        self.param_dtype = param_dtype
+        self.name = name
+
+        m, k = out_features, in_features
+        if not self.cfg.applies_to(m, k):
+            self.mode = "dense"
+            self.pattern: Optional[PatternInstance] = None
+        else:
+            self.pattern = make_pattern(self.cfg, m, k)
+            if self.cfg.backend == "xla_masked":
+                self.mode = "masked"
+            elif self.cfg.backend in ("xla_compact", "pallas"):
+                if self.pattern.layout is None:
+                    raise ValueError(
+                        f"backend {self.cfg.backend} requires pattern=rbgp4 "
+                        f"(compact storage is an RBGP property), got "
+                        f"{self.cfg.pattern}"
+                    )
+                self.mode = "compact"
+            else:
+                raise ValueError(f"unknown backend {self.cfg.backend!r}")
+
+        self._op: Optional[RBGP4Op] = None
+        if self.mode == "compact" and self.cfg.backend == "pallas":
+            self._op = RBGP4Op(self.pattern.layout)
+
+    # -- parameter counts / memory ------------------------------------------
+    @property
+    def layout(self) -> Optional[RBGP4Layout]:
+        return self.pattern.layout if self.pattern else None
+
+    def n_params(self) -> int:
+        if self.mode in ("dense", "masked"):
+            n = self.in_features * self.out_features
+        else:
+            n = self.pattern.nnz
+        return n + (self.out_features if self.use_bias else 0)
+
+    def n_effective_params(self) -> int:
+        """Trainable-and-used parameters (masked mode counts only on-mask)."""
+        n = self.pattern.nnz if self.pattern else self.in_features * self.out_features
+        return n + (self.out_features if self.use_bias else 0)
+
+    # -- init ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        m, k = self.out_features, self.in_features
+        wkey, _ = jax.random.split(key)
+        params: dict = {}
+        if self.mode in ("dense", "masked"):
+            fan_in = k if self.mode == "dense" else max(
+                round((1 - self.pattern.sparsity) * k), 1
+            )
+            w = jax.random.normal(wkey, (m, k)) * (2.0 / fan_in) ** 0.5
+            params["w"] = w.astype(self.param_dtype)
+            if self.mode == "masked":
+                lay = self.layout
+                if lay is not None:
+                    params["_ba_o"] = jnp.asarray(lay.graph_o.biadjacency)
+                    params["_ba_i"] = jnp.asarray(lay.graph_i.biadjacency)
+                else:
+                    params["_mask"] = jnp.asarray(self.pattern.mask())
+        else:  # compact
+            lay = self.layout
+            fan_in = lay.spec.nnz_per_row
+            w = jax.random.normal(wkey, lay.data_shape) * (2.0 / fan_in) ** 0.5
+            params["w_data"] = w.astype(self.param_dtype)
+        if self.use_bias:
+            params["b"] = jnp.zeros((m,), self.param_dtype)
+        return params
+
+    # -- apply ------------------------------------------------------------------
+    def _mask_of(self, params: dict) -> jax.Array:
+        lay = self.layout
+        if lay is not None:
+            sp = lay.spec
+            return expand_rbgp4_mask(
+                params["_ba_o"], params["_ba_i"], sp.group_rows, sp.chunk_cols
+            )
+        return params["_mask"]
+
+    def apply(self, params: dict, x: jax.Array, *, dtype=None) -> jax.Array:
+        """x: (..., in_features) -> (..., out_features)."""
+        dtype = dtype or x.dtype
+        if self.mode == "dense":
+            w = params["w"].astype(dtype)
+            y = x.astype(dtype) @ w.T
+        elif self.mode == "masked":
+            w = params["w"].astype(dtype)
+            w = w * self._mask_of(params).astype(dtype)
+            y = x.astype(dtype) @ w.T
+        else:  # compact
+            w_data = params["w_data"].astype(dtype)
+            if self.cfg.backend == "pallas":
+                y = self._op.linear(x.astype(dtype), w_data)
+            else:  # xla_compact
+                lead = x.shape[:-1]
+                x2 = x.astype(dtype).reshape(-1, self.in_features)
+                y = kref.compact_gather_mm(self.layout, w_data, x2.T).T
+                y = y.reshape(*lead, self.out_features)
+        if self.use_bias:
+            y = y + params["b"].astype(dtype)
+        return y
+
+    # -- dense view (tests / export) ---------------------------------------------
+    def dense_weight(self, params: dict) -> jax.Array:
+        if self.mode == "dense":
+            return params["w"]
+        if self.mode == "masked":
+            return params["w"] * self._mask_of(params).astype(params["w"].dtype)
+        return kref.unpack_dense(self.layout, params["w_data"])

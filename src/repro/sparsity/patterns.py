@@ -1,0 +1,160 @@
+"""Sparsity pattern registry: dense | unstructured | block | rbgp4.
+
+These are the four patterns benchmarked in the paper's Table 1.  Each maker
+returns a ``PatternInstance`` holding the (lazy) mask and analytic memory
+accounting.  Masks are deterministic in (shape, sparsity, seed) so that every
+data-parallel rank reconstructs identical masks with no communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import RBGP4Layout, RBGP4Spec, design_rbgp4
+
+__all__ = ["SparsityConfig", "PatternInstance", "make_pattern", "PATTERNS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Per-model sparsity settings (a first-class config field).
+
+    pattern: one of PATTERNS.
+    sparsity: target fraction of zeros (rbgp4/block require 1 - 2^-k).
+    backend: 'xla_masked' (paper-faithful dense-masked training),
+             'xla_compact' (compact storage, gather+einsum),
+             'pallas' (compact storage, RBGP4MM kernels; interpret on CPU).
+    block: (bh, bw) for the 'block' pattern (paper Table 1 uses (4, 4)).
+    min_dim: skip sparsification for matrices with any dim below this
+             (embeddings/heads/tiny projections stay dense, as in the paper
+             which keeps first & classifier layers dense).
+    """
+
+    pattern: str = "dense"
+    sparsity: float = 0.0
+    backend: str = "xla_masked"
+    block: tuple[int, int] = (4, 4)
+    seed: int = 0
+    min_dim: int = 256
+
+    def applies_to(self, m: int, k: int) -> bool:
+        if self.pattern == "dense" or self.sparsity <= 0.0:
+            return False
+        return min(m, k) >= self.min_dim
+
+
+@dataclasses.dataclass
+class PatternInstance:
+    """A realized mask for one (m, k) weight matrix."""
+
+    name: str
+    m: int
+    k: int
+    sparsity: float
+    mask_fn: Callable[[], np.ndarray]  # lazy: masks can be big
+    layout: Optional[RBGP4Layout] = None  # rbgp4 only
+    nnz: int = 0
+    index_bytes_succinct: int = 0
+    index_bytes_full: int = 0
+
+    def mask(self) -> np.ndarray:
+        return self.mask_fn()
+
+    def memory_bytes(self, value_bytes: int = 4, index_bytes: int = 4) -> dict:
+        """Paper Table-1 'Mem' model: values + index storage."""
+        values = self.nnz * value_bytes
+        if self.name == "dense":
+            return {"values": self.m * self.k * value_bytes, "index": 0,
+                    "total": self.m * self.k * value_bytes}
+        idx = {
+            "unstructured": self.index_bytes_full,
+            "block": self.index_bytes_full,
+            "rbgp4": self.index_bytes_succinct,
+        }[self.name]
+        return {"values": values, "index": idx * index_bytes // 4,
+                "total": values + idx * index_bytes // 4}
+
+
+# ---------------------------------------------------------------------------
+# makers
+# ---------------------------------------------------------------------------
+
+def _dense(m, k, sparsity, cfg):
+    return PatternInstance(
+        name="dense", m=m, k=k, sparsity=0.0,
+        mask_fn=lambda: np.ones((m, k), np.uint8), nnz=m * k,
+    )
+
+
+def _unstructured(m, k, sparsity, cfg):
+    """Row-uniform random mask (Prabhu et al. expander-style; paper §2)."""
+    nnz_row = round((1.0 - sparsity) * k)
+    nnz_row = max(nnz_row, 1)
+
+    def mk():
+        rng = np.random.default_rng(cfg.seed ^ (m * 0x9E3779B1 + k))
+        mask = np.zeros((m, k), np.uint8)
+        for r in range(m):
+            mask[r, rng.choice(k, nnz_row, replace=False)] = 1
+        return mask
+
+    nnz = nnz_row * m
+    return PatternInstance(
+        name="unstructured", m=m, k=k, sparsity=1 - nnz / (m * k),
+        mask_fn=mk, nnz=nnz,
+        index_bytes_full=nnz * 4, index_bytes_succinct=nnz * 4,
+    )
+
+
+def _block(m, k, sparsity, cfg):
+    """Uniform block-sparse mask with (bh, bw) blocks (paper's 'Block')."""
+    bh, bw = cfg.block
+    if m % bh or k % bw:
+        raise ValueError(f"block {cfg.block} does not tile {m}x{k}")
+    br, bc = m // bh, k // bw
+    nnz_blocks_row = max(round((1.0 - sparsity) * bc), 1)
+
+    def mk():
+        rng = np.random.default_rng(cfg.seed ^ (m * 0x85EBCA77 + k))
+        mask = np.zeros((br, bc), np.uint8)
+        for r in range(br):
+            mask[r, rng.choice(bc, nnz_blocks_row, replace=False)] = 1
+        return np.kron(mask, np.ones((bh, bw), np.uint8))
+
+    nnz = nnz_blocks_row * br * bh * bw
+    # BSR index: one int per non-zero block
+    return PatternInstance(
+        name="block", m=m, k=k, sparsity=1 - nnz / (m * k),
+        mask_fn=mk, nnz=nnz,
+        index_bytes_full=(nnz // (bh * bw)) * 4,
+        index_bytes_succinct=(nnz // (bh * bw)) * 4,
+    )
+
+
+def _rbgp4(m, k, sparsity, cfg):
+    spec = design_rbgp4(m, k, sparsity, seed=cfg.seed)
+    layout = RBGP4Layout(spec)
+    mem = layout.memory_bytes()
+    return PatternInstance(
+        name="rbgp4", m=m, k=k, sparsity=spec.sparsity,
+        mask_fn=layout.mask, layout=layout, nnz=spec.nnz,
+        index_bytes_succinct=mem["index_succinct"],
+        index_bytes_full=mem["index_full"],
+    )
+
+
+PATTERNS = {
+    "dense": _dense,
+    "unstructured": _unstructured,
+    "block": _block,
+    "rbgp4": _rbgp4,
+}
+
+
+def make_pattern(cfg: SparsityConfig, m: int, k: int) -> PatternInstance:
+    if cfg.pattern not in PATTERNS:
+        raise ValueError(f"unknown pattern {cfg.pattern!r}; have {list(PATTERNS)}")
+    return PATTERNS[cfg.pattern](m, k, cfg.sparsity, cfg)

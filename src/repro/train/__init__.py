@@ -1,0 +1,14 @@
+"""Training substrate: optimizers, loop, checkpoints, distillation, compression."""
+from .optim import Optimizer, make_optimizer, make_schedule, global_norm, clip_by_global_norm
+from .checkpoint import CheckpointManager, save_pytree, load_pytree
+from .distill import kd_loss, distillation_loss
+from .compress import compress_decompress, init_error_feedback, quantize_int8, dequantize_int8
+from .loop import TrainState, make_train_step, Trainer, init_train_state
+
+__all__ = [
+    "Optimizer", "make_optimizer", "make_schedule", "global_norm",
+    "clip_by_global_norm", "CheckpointManager", "save_pytree", "load_pytree",
+    "kd_loss", "distillation_loss", "compress_decompress",
+    "init_error_feedback", "quantize_int8", "dequantize_int8",
+    "TrainState", "make_train_step", "Trainer", "init_train_state",
+]

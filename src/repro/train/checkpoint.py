@@ -1,0 +1,169 @@
+"""Checkpointing: atomic .npz snapshots, async writer, auto-resume.
+
+Fault-tolerance contract (see launch/train.py):
+  * ``save`` writes to a temp file then os.replace()s it — a crash mid-write
+    never corrupts the latest checkpoint;
+  * ``save(..., blocking=False)`` hands the host copy to a writer thread so
+    the train loop doesn't stall on I/O (the device->host transfer still
+    happens synchronously — the snapshot is consistent);
+  * ``latest_step``/``restore`` implement auto-resume after restart;
+  * a retention policy keeps the newest k checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import queue
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+
+def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    leaves_paths = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None
+    )[0]
+    from repro.utils import path_str
+
+    for path, leaf in leaves_paths:
+        key = path_str(path)
+        if leaf is None:
+            flat[f"__none__/{key}"] = np.zeros((), np.int8)
+        else:
+            flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree, extra: Optional[dict] = None) -> None:
+    """Atomic write of a pytree snapshot (+ small json metadata)."""
+    flat = _flatten_with_paths(tree)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    if extra is not None:
+        mtmp = path + ".meta.tmp"
+        with open(mtmp, "w") as f:
+            json.dump(extra, f)
+        os.replace(mtmp, path + ".meta")
+
+
+def load_pytree(path: str, like) -> Any:
+    """Restore into the structure of `like` (paths must match)."""
+    data = np.load(path, allow_pickle=False)
+    from repro.utils import path_str
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        like, is_leaf=lambda x: x is None
+    )
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = path_str(path)
+        if leaf is None:
+            leaves.append(None)
+            continue
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: shape {arr.shape} != expected {want}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- paths ------------------------------------------------------------
+    def path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.dir):
+            m = re.fullmatch(r"ckpt_(\d+)\.npz", fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save/restore -------------------------------------------------------
+    def _write(self, step: int, host_tree, extra):
+        save_pytree(self.path(step), host_tree, extra)
+        self._gc()
+
+    def _gc(self):
+        for s in self.steps()[: -self.keep]:
+            for suffix in (".npz", ".npz.meta"):
+                p = os.path.join(self.dir, f"ckpt_{s:08d}{suffix}")
+                if os.path.exists(p):
+                    os.remove(p)
+
+    def save(self, step: int, tree, extra: Optional[dict] = None,
+             blocking: bool = True) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint writer failed") from err
+        # device -> host copy happens here (consistent snapshot)
+        host_tree = jax.tree_util.tree_map(
+            lambda x: None if x is None else np.asarray(x),
+            tree, is_leaf=lambda x: x is None,
+        )
+        extra = dict(extra or {}, step=step)
+        if blocking:
+            self._write(step, host_tree, extra)
+            return
+        self._ensure_worker()
+        self._q.put((step, host_tree, extra))
+
+    def _ensure_worker(self):
+        if self._worker is not None and self._worker.is_alive():
+            return
+
+        def run():
+            while True:
+                item = self._q.get()
+                if item is None:
+                    return
+                try:
+                    self._write(*item)
+                except BaseException as e:  # surfaced on next save()
+                    self._error = e
+
+        self._worker = threading.Thread(target=run, daemon=True)
+        self._worker.start()
+
+    def wait(self):
+        """Drain the async writer (call before exit)."""
+        if self._worker is not None and self._worker.is_alive():
+            self._q.put(None)
+            self._worker.join()
+            self._worker = None
+
+    def restore(self, like, step: Optional[int] = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        tree = load_pytree(self.path(step), like)
+        meta_path = self.path(step) + ".meta"
+        meta = None
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                meta = json.load(f)
+        return tree, (meta or {"step": step})

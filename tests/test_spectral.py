@@ -1,0 +1,67 @@
+"""Tests for spectral analysis incl. paper Theorem 1."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    complete_bipartite,
+    generate_ramanujan,
+    graph_product,
+    ideal_spectral_gap,
+    product_second_eigenvalue,
+    singular_values,
+    spectral_gap,
+    theorem1_ratio,
+)
+
+
+def test_kron_singular_values_are_products():
+    g1 = generate_ramanujan(8, 8, 0.5, seed=0)
+    g2 = generate_ramanujan(4, 4, 0.5, seed=1)
+    gp = graph_product(g1, g2)
+    s1, s2 = singular_values(g1), singular_values(g2)
+    expect = np.sort(np.outer(s1, s2).ravel())[::-1]
+    got = np.sort(singular_values(gp))[::-1]
+    assert np.allclose(got, expect, atol=1e-8)
+
+
+def test_product_second_eigenvalue_matches_dense():
+    g1 = generate_ramanujan(16, 16, 0.5, seed=2)
+    g2 = generate_ramanujan(8, 8, 0.5, seed=3)
+    gp = graph_product(g1, g2)
+    lam2_dense = float(np.sort(singular_values(gp))[::-1][1])
+    lam2_fast = product_second_eigenvalue([g1, g2])
+    assert np.isclose(lam2_dense, lam2_fast, atol=1e-8)
+
+
+def test_spectral_gap_of_complete():
+    g = complete_bipartite(8, 8)
+    # K_{8,8}: lambda_1 = 8, lambda_2 = 0
+    assert np.isclose(spectral_gap(g), 8.0)
+
+
+def test_ideal_gap_formula():
+    assert np.isclose(ideal_spectral_gap(4), 4 - 2 * np.sqrt(3))
+    assert ideal_spectral_gap(1) == 1.0
+
+
+@pytest.mark.parametrize("n,sp", [(16, 0.5), (32, 0.5), (64, 0.5), (128, 0.5)])
+def test_theorem1_ratio_decreases_to_one(n, sp):
+    """Theorem 1: the ratio -> 1 as n (hence d) grows at fixed sparsity."""
+    g1 = generate_ramanujan(n, n, sp, seed=10)
+    g2 = generate_ramanujan(n, n, sp, seed=11)
+    r = theorem1_ratio(g1, g2)
+    assert r >= 0.99  # ideal/actual: actual gap can't beat ideal asymptotics
+    # for d = n/2 >= 8 the ratio should already be within 2x of ideal
+    if n >= 32:
+        assert r < 2.0
+
+
+def test_theorem1_ratio_monotone_trend():
+    ratios = []
+    for n in (16, 32, 64, 128):
+        g1 = generate_ramanujan(n, n, 0.5, seed=20)
+        g2 = generate_ramanujan(n, n, 0.5, seed=21)
+        ratios.append(theorem1_ratio(g1, g2))
+    # converging toward 1 (allow small sampling noise)
+    assert ratios[-1] < ratios[0]
+    assert ratios[-1] < 1.5

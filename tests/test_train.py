@@ -1,0 +1,197 @@
+"""Train substrate tests: optimizers, schedules, loop, checkpoint/restart,
+distillation, gradient compression, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, get_config, reduce_config
+from repro.data import GaussianClassImages, Prefetcher, TokenStream, host_shard
+from repro.models import LMModel
+from repro.train import (
+    CheckpointManager,
+    Trainer,
+    distillation_loss,
+    init_train_state,
+    kd_loss,
+    make_schedule,
+    make_train_step,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.utils import merge_trees
+
+
+def tiny_model():
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    cfg = cfg.with_(n_layers=2, vocab_size=64)
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def loss_fn(full, batch):
+        loss, (ce, aux) = model.loss(full, batch)
+        return loss, {"ce": ce}
+
+    return cfg, model, params, loss_fn
+
+
+def data_for(cfg, batch=4, seq=16):
+    return TokenStream(cfg.vocab_size, batch, seq, seed=3)
+
+
+def test_schedules():
+    cos = make_schedule(TrainConfig(schedule="cosine", lr=1.0, warmup_steps=10,
+                                    total_steps=100))
+    assert float(cos(jnp.int32(0))) == 0.0
+    assert abs(float(cos(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(cos(jnp.int32(100))) < 1e-6
+    step = make_schedule(TrainConfig(schedule="step", lr=1.0,
+                                     lr_step_epochs=(5, 10), lr_step_gamma=0.1))
+    assert abs(float(step(jnp.int32(0))) - 1.0) < 1e-6
+    assert abs(float(step(jnp.int32(7))) - 0.1) < 1e-6
+    assert abs(float(step(jnp.int32(12))) - 0.01) < 1e-6
+
+
+@pytest.mark.parametrize("opt", ["sgdm", "adamw"])
+def test_loss_decreases(opt, tmp_path):
+    cfg, model, params, loss_fn = tiny_model()
+    tcfg = TrainConfig(optimizer=opt, lr=0.05 if opt == "sgdm" else 1e-3,
+                       schedule="constant", grad_clip=1.0,
+                       checkpoint_dir=str(tmp_path), checkpoint_every=1000)
+    tr = Trainer(loss_fn, params, tcfg, data_for(cfg), checkpoint=False)
+    hist = tr.run(30)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.1, (first, last)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg, model, params, loss_fn = tiny_model()
+    data = data_for(cfg, batch=8)
+    batch = jax.tree_util.tree_map(jnp.asarray, next(iter(data)))
+
+    tcfg1 = TrainConfig(optimizer="sgdm", lr=0.1, schedule="constant",
+                        grad_clip=0.0, microbatches=1)
+    tcfg4 = TrainConfig(optimizer="sgdm", lr=0.1, schedule="constant",
+                        grad_clip=0.0, microbatches=4)
+    s1 = init_train_state(params, tcfg1)
+    s4 = init_train_state(params, tcfg4)
+    step1 = make_train_step(loss_fn, tcfg1)
+    step4 = make_train_step(loss_fn, tcfg4)
+
+    s1n, m1 = step1(s1, batch)
+    mb = jax.tree_util.tree_map(
+        lambda x: x.reshape(4, 2, *x.shape[1:]), batch)
+    s4n, m4 = step4(s4, mb)
+    # microbatch losses average over chunks; grads average -> same update up
+    # to accumulation-order float error
+    for a, b in zip(jax.tree_util.tree_leaves(s1n.params),
+                    jax.tree_util.tree_leaves(s4n.params)):
+        if a is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_checkpoint_restart_resumes_identically(tmp_path):
+    cfg, model, params, loss_fn = tiny_model()
+    tcfg = TrainConfig(optimizer="sgdm", lr=0.05, schedule="constant",
+                       checkpoint_dir=str(tmp_path), checkpoint_every=5)
+    # run 10 steps, checkpointing every 5
+    tr = Trainer(loss_fn, params, tcfg, data_for(cfg))
+    tr.run(10)
+    # fresh trainer resumes from step 10
+    tr2 = Trainer(loss_fn, params, tcfg, data_for(cfg))
+    resumed = tr2.try_resume()
+    assert resumed == 10
+    for a, b in zip(jax.tree_util.tree_leaves(tr.state.params),
+                    jax.tree_util.tree_leaves(tr2.state.params)):
+        if a is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_simulated_failure_then_restart(tmp_path):
+    cfg, model, params, loss_fn = tiny_model()
+    tcfg = TrainConfig(optimizer="sgdm", lr=0.05, schedule="constant",
+                       checkpoint_dir=str(tmp_path), checkpoint_every=4)
+    tr = Trainer(loss_fn, params, tcfg, data_for(cfg))
+    with pytest.raises(RuntimeError, match="simulated node failure"):
+        tr.run(20, fail_at_step=9)
+    # new process: auto-resume from the last checkpoint (step 8)
+    tr2 = Trainer(loss_fn, params, tcfg, data_for(cfg))
+    assert tr2.try_resume() == 8
+    tr2.run(4)
+    assert int(tr2.state.step) == 12
+
+
+def test_checkpoint_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 2))}}
+    for s in (1, 2, 3):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.steps() == [2, 3]  # retention
+    got, meta = mgr.restore(tree)
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(5.0))
+    # no stray tmp files
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_kd_loss_properties():
+    s = jnp.asarray([[2.0, 0.0, -2.0]])
+    assert float(kd_loss(s, s)) < 1e-9  # zero at teacher==student
+    t = jnp.asarray([[0.0, 2.0, -1.0]])
+    assert float(kd_loss(s, t)) > 0.0
+    hard = jnp.float32(1.0)
+    mixed = distillation_loss(s, t, hard, alpha=0.5)
+    assert float(mixed) != float(hard)
+    assert float(distillation_loss(s, t, hard, alpha=0.0)) == 1.0
+
+
+def test_int8_quantization_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,)) * 3
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x)).max()
+    assert err <= float(scale) * 0.51
+
+
+def test_int8_compression_training_converges(tmp_path):
+    cfg, model, params, loss_fn = tiny_model()
+    tcfg = TrainConfig(optimizer="sgdm", lr=0.05, schedule="constant",
+                       grad_compression="int8", checkpoint_dir=str(tmp_path))
+    tr = Trainer(loss_fn, params, tcfg, data_for(cfg), checkpoint=False)
+    hist = tr.run(30)
+    assert np.mean([h["loss"] for h in hist[-5:]]) < \
+        np.mean([h["loss"] for h in hist[:5]]) - 0.05
+
+
+def test_token_stream_determinism_and_learnability():
+    ts = TokenStream(64, 4, 32, seed=1)
+    a, b = ts.batch_at(7), ts.batch_at(7)
+    np.testing.assert_array_equal(a, b)
+    # low-entropy: the affine recurrence makes successor deterministic >90%
+    t = ts.batch_at(0)
+    succ_match = np.mean(t[:, 1:] == (ts.a * t[:, :-1] + ts.c) % 64)
+    assert succ_match > 0.85
+
+
+def test_prefetcher_and_host_shard():
+    ts = TokenStream(64, 4, 8, seed=0)
+    pf = Prefetcher(ts, depth=2)
+    b1 = next(pf)
+    assert b1["tokens"].shape == (4, 8)
+    start, size = host_shard(256, process_index=0, process_count=1)
+    assert (start, size) == (0, 256)
+    start, size = host_shard(256, process_index=3, process_count=8)
+    assert (start, size) == (96, 32)
+
+
+def test_vision_data():
+    g = GaussianClassImages(10, 8, seed=0)
+    b = g.batch_at(0)
+    assert b["images"].shape == (8, 32, 32, 3)
+    assert b["labels"].shape == (8,)
+    np.testing.assert_array_equal(b["images"], g.batch_at(0)["images"])
