@@ -6,7 +6,9 @@
      succinct (paper Fig. 3),
   3. run the Pallas RBGP4MM kernel (interpret mode on CPU) against the
      pure-jnp oracle,
-  4. train a tiny RBGP4-sparse MLP on a toy task — the mask is fixed,
+  4. dispatch one layer through every registered sparse backend via the
+     pluggable API (repro.sparsity.api) and check they agree,
+  5. train a tiny RBGP4-sparse MLP on a toy task — the mask is fixed,
      learning happens through the sparse connections only.
 
 Run: PYTHONPATH=src python examples/quickstart.py
@@ -24,7 +26,13 @@ from repro.core import (
 )
 from repro.kernels import RBGP4Op
 from repro.kernels import ref as kref
-from repro.sparsity import SparseLinear, SparsityConfig
+from repro.sparsity import (
+    SparseLinear,
+    SparsityConfig,
+    available_backends,
+    dense_weight,
+    sparse_linear,
+)
 
 # 1. ------------------------------------------------------------------
 spec = design_rbgp4(4096, 4096, 0.9375)
@@ -65,6 +73,21 @@ print(f"  O = W_s @ I: out {out.shape}, max |kernel - oracle| = {err:.2e}")
 assert err < 1e-4
 
 # 4. ------------------------------------------------------------------
+print("\nOne layer through every registered backend (pluggable API):")
+lin = SparseLinear(512, 512, SparsityConfig(pattern="rbgp4", sparsity=0.75,
+                                            backend="auto", min_dim=1))
+weight = lin.init(jax.random.PRNGKey(5))   # CompactWeight pytree
+xq = jax.random.normal(jax.random.PRNGKey(6), (8, 512))
+y_ref = xq @ dense_weight(weight).T
+for name in available_backends(weight=weight):
+    y = sparse_linear(weight, xq, backend=name)
+    err = float(jnp.abs(y - y_ref).max())
+    print(f"  backend={name:12s} max err vs dense ref = {err:.2e}")
+    assert err < 1e-3
+print(f"  (auto on this host resolves to "
+      f"{'pallas' if jax.default_backend() == 'tpu' else 'xla_compact'})")
+
+# 5. ------------------------------------------------------------------
 print("\nTraining through the fixed RBGP4 mask (tiny regression):")
 lin = SparseLinear(256, 256, SparsityConfig(pattern="rbgp4", sparsity=0.75,
                                             backend="xla_masked", min_dim=1))

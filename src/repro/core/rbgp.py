@@ -175,6 +175,16 @@ class RBGP4Layout:
         self.adj_o = self.graph_o.left_adjacency()  # (n_o_l, d_o)
         self.adj_i = self.graph_i.left_adjacency()  # (U_i, d_i)
 
+    # Layouts are pure functions of their spec (deterministic sampling), so
+    # equality/hash by spec: two reconstructions are interchangeable.  This
+    # is what lets a layout ride as pytree aux data (treedefs compare equal
+    # across flatten/unflatten and across ranks).
+    def __eq__(self, other) -> bool:
+        return isinstance(other, RBGP4Layout) and self.spec == other.spec
+
+    def __hash__(self) -> int:
+        return hash(self.spec)
+
     # -- sizes ------------------------------------------------------------
     @property
     def m(self) -> int:

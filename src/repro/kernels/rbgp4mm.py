@@ -40,6 +40,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["KernelDims", "rbgp4mm", "rbgp4mm_rhs", "rbgp4_sddmm"]
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelDims:
@@ -177,7 +180,7 @@ def rbgp4mm(
             scratch_shapes=[pltpu.VMEM((dims.tile_m, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((m, n_pad), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -263,7 +266,7 @@ def rbgp4_sddmm(
             scratch_shapes=[pltpu.VMEM((dims.tile_m, dcols), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((m, dims.d_o * dcols), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
@@ -353,7 +356,7 @@ def rbgp4mm_rhs(
             scratch_shapes=[pltpu.VMEM((bn, dims.tile_m), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((n_pad, m), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

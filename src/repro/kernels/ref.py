@@ -18,6 +18,7 @@ __all__ = [
     "ref_rbgp4_sddmm",
     "ref_masked_mm",
     "compact_gather_mm",
+    "compact_gather_mm_rhs",
 ]
 
 
@@ -82,3 +83,29 @@ def compact_gather_mm(layout, w_data: jax.Array, x: jax.Array) -> jax.Array:
     w = w_data.reshape(n_o_l, u_i, G, d_o, d_i, C)
     out = jnp.einsum("ougkic,okuicn->ougn", w, xg)
     return out.reshape(sp.m, n)
+
+
+def compact_gather_mm_rhs(layout, w_data: jax.Array, x: jax.Array) -> jax.Array:
+    """Y = X @ W_s^T from compact storage; X (N, K) token-major -> (N, M).
+
+    The token-major twin of ``compact_gather_mm``: the contraction runs
+    directly in the activation layout model code uses, so the layer pays no
+    transposes around the gather+einsum (the LHS form cost two full
+    activation transposes per call when driven from (N, K) inputs).
+    """
+    sp = layout.spec
+    n = x.shape[0]
+    n_o_l, _ = sp.g_o
+    u_i, v_i = sp.g_i
+    G, C = sp.group_rows, sp.chunk_cols
+    adj_o = jnp.asarray(layout.adj_o)  # (n_o_l, d_o)
+    adj_i = jnp.asarray(layout.adj_i)  # (u_i, d_i)
+
+    xt = x.reshape(n, sp.g_o[1], v_i, C)
+    # outer gather: (n, n_o_l, d_o, v_i, C)
+    xg = xt[:, adj_o]
+    # inner gather: (n, n_o_l, d_o, u_i, d_i, C)
+    xg = xg[:, :, :, adj_i]
+    w = w_data.reshape(n_o_l, u_i, G, sp.d_o, sp.d_i, C)
+    out = jnp.einsum("nokuic,ougkic->noug", xg, w)
+    return out.reshape(n, sp.m)

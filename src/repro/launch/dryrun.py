@@ -72,7 +72,8 @@ def active_param_count(cfg, model: LMModel) -> tuple[int, int]:
         n = int(np.prod(leaf.shape))
         total += n
         name = path_str(path)
-        if "embed" in name or "_ba" in name or "_mask" in name:
+        if "embed" in name or "ba_o" in name or "ba_i" in name \
+                or name.endswith("/mask") or "_mask" in name:
             continue
         if "experts/" in name:
             frac = cfg.moe.top_k / cfg.moe.n_experts
@@ -242,6 +243,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, pattern: str,
     # raw XLA cost analysis (counts while bodies ONCE — recorded for
     # reference only; the roofline uses the trip-count-aware analyzer)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
     rec["xla_cost_analysis"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -8,7 +8,16 @@ import so these meshes can be built on the CPU container.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; Auto is the old behavior
+    from jax.sharding import AxisType
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # older jax: every mesh axis is implicitly Auto
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes)
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
@@ -17,7 +26,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (= one 256-chip v5e pod) or 2x16x16 (two pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
@@ -25,7 +34,4 @@ def make_local_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     if n % model_parallel:
         raise ValueError(f"{n} devices not divisible by mp={model_parallel}")
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return _mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -30,9 +30,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    from repro.sparsity import available_backends
+
     ap.add_argument("--pattern", default="rbgp4")
     ap.add_argument("--sparsity", type=float, default=0.75)
-    ap.add_argument("--backend", default="xla_masked")
+    ap.add_argument("--backend", default="xla_masked",
+                    choices=["auto"] + available_backends(),
+                    help="execution backend from the sparsity registry "
+                         "('auto': compact storage, pallas-on-TPU)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

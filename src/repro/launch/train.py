@@ -94,9 +94,14 @@ def main():
     ap.add_argument("--optimizer", default="sgdm", choices=["sgdm", "adamw"])
     ap.add_argument("--schedule", default="cosine",
                     choices=["cosine", "step", "constant"])
+    from repro.sparsity import available_backends
+
     ap.add_argument("--pattern", default="rbgp4")
     ap.add_argument("--sparsity", type=float, default=0.75)
-    ap.add_argument("--backend", default="xla_masked")
+    ap.add_argument("--backend", default="xla_masked",
+                    choices=["auto"] + available_backends(),
+                    help="execution backend from the sparsity registry "
+                         "('auto': compact storage, pallas-on-TPU)")
     ap.add_argument("--min-dim", type=int, default=64)
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8"])

@@ -19,6 +19,7 @@ storage property: one base-graph set per layer, not per expert).
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Optional
 
 import jax
@@ -27,10 +28,23 @@ import numpy as np
 
 from repro.configs.base import MoEConfig
 from repro.parallel.constrain import current_mesh, shard
-from repro.sparsity import SparsityConfig, make_pattern, expand_rbgp4_mask
+from repro.sparsity import MaskedWeight, SparsityConfig, make_pattern
 from .mlp import ACTS, GatedMLP
 
 __all__ = ["StackedExperts", "MoELayer"]
+
+
+def _shard_map(f, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map moved out of experimental; support both spellings."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(mesh.axis_names), check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)
 
 
 class StackedExperts:
@@ -50,48 +64,79 @@ class StackedExperts:
                 raise NotImplementedError("stacked experts support rbgp4/dense")
             self.pat_in = make_pattern(sparsity, d_expert, d_model)
             self.pat_out = make_pattern(sparsity, d_model, d_expert)
+            # one factor-array set per pattern, shared by gate and up (the
+            # succinct-storage story: one base-graph sample per layer)
+            mk = lambda pat: (jnp.asarray(pat.layout.graph_o.biadjacency),
+                              jnp.asarray(pat.layout.graph_i.biadjacency))
+            self._ba_in = mk(self.pat_in)
+            self._ba_out = mk(self.pat_out)
+
+    def _wrap(self, w: jax.Array, pat) -> jax.Array | MaskedWeight:
+        """Wrap a stacked (E, ...) expert weight in a typed container.
+
+        One RBGP4 mask is shared across the expert dim (cloned-mask EP);
+        the container's factor leaves are typed non-trainable, so the
+        optimizer and checkpoints need no key-name convention.
+        """
+        if not self.masked:
+            return w
+        ba_o, ba_i = self._ba_in if pat is self.pat_in else self._ba_out
+        return MaskedWeight(
+            w=w, ba_o=ba_o, ba_i=ba_i,
+            group_rows=pat.layout.spec.group_rows,
+            chunk_cols=pat.layout.spec.chunk_cols,
+        )
 
     def init(self, key) -> dict:
         ks = jax.random.split(key, 3)
         dens = 1.0 - (self.sparsity.sparsity if self.masked else 0.0)
         s_in = (2.0 / (self.d * dens)) ** 0.5
         s_out = (2.0 / (self.h * dens)) ** 0.5
-        p = {
-            "gate": jax.random.normal(ks[0], (self.e, self.h, self.d)) * s_in,
-            "up": jax.random.normal(ks[1], (self.e, self.h, self.d)) * s_in,
-            "down": jax.random.normal(ks[2], (self.e, self.d, self.h)) * s_out,
+        pi = self.pat_in if self.masked else None
+        po = self.pat_out if self.masked else None
+        return {
+            "gate": self._wrap(
+                jax.random.normal(ks[0], (self.e, self.h, self.d)) * s_in, pi),
+            "up": self._wrap(
+                jax.random.normal(ks[1], (self.e, self.h, self.d)) * s_in, pi),
+            "down": self._wrap(
+                jax.random.normal(ks[2], (self.e, self.d, self.h)) * s_out, po),
         }
-        if self.masked:
-            li, lo = self.pat_in.layout, self.pat_out.layout
-            p["_ba_o_in"] = jnp.asarray(li.graph_o.biadjacency)
-            p["_ba_i_in"] = jnp.asarray(li.graph_i.biadjacency)
-            p["_ba_o_out"] = jnp.asarray(lo.graph_o.biadjacency)
-            p["_ba_i_out"] = jnp.asarray(lo.graph_i.biadjacency)
-        return p
 
-    def _masks(self, params, dtype):
-        li, lo = self.pat_in.layout, self.pat_out.layout
-        m_in = expand_rbgp4_mask(
-            params["_ba_o_in"], params["_ba_i_in"],
-            li.spec.group_rows, li.spec.chunk_cols,
-        ).astype(dtype)
-        m_out = expand_rbgp4_mask(
-            params["_ba_o_out"], params["_ba_i_out"],
-            lo.spec.group_rows, lo.spec.chunk_cols,
-        ).astype(dtype)
-        return m_in, m_out
+    def coerce(self, params: dict) -> dict:
+        """Upgrade pre-registry flat-dict expert params (deprecation shim).
+
+        The legacy layout stored raw (E, ...) arrays plus ``_ba_*`` keys;
+        the factors are deterministic in the pattern, so re-wrapping from
+        the instance's own patterns reproduces the same masks.
+        """
+        if not self.masked or isinstance(params["gate"], MaskedWeight):
+            return params
+        warnings.warn(
+            "flat-dict StackedExperts params are deprecated; pass the "
+            "MaskedWeight containers returned by init()",
+            DeprecationWarning, stacklevel=3,
+        )
+        return {
+            "gate": self._wrap(params["gate"], self.pat_in),
+            "up": self._wrap(params["up"], self.pat_in),
+            "down": self._wrap(params["down"], self.pat_out),
+        }
 
     def apply(self, params, xe: jax.Array) -> jax.Array:
         """xe: (G, E, C, D) -> (G, E, C, D)."""
         dt = xe.dtype
-        wg = params["gate"].astype(dt)
-        wu = params["up"].astype(dt)
-        wd = params["down"].astype(dt)
+        params = self.coerce(params)
         if self.masked:
-            m_in, m_out = self._masks(params, dt)
-            wg = wg * m_in
-            wu = wu * m_in
-            wd = wd * m_out
+            # expand each mask once; gate and up share m_in
+            m_in = params["gate"].mask_array(dt)
+            wg = params["gate"].w.astype(dt) * m_in
+            wu = params["up"].w.astype(dt) * m_in
+            wd = params["down"].materialize(dt)
+        else:
+            wg = params["gate"].astype(dt)
+            wu = params["up"].astype(dt)
+            wd = params["down"].astype(dt)
         h = self.act(jnp.einsum("gecd,ehd->gech", xe, wg))
         h = h * jnp.einsum("gecd,ehd->gech", xe, wu)
         h = shard(h, "dp", "tp", None, None)
@@ -188,15 +233,20 @@ class MoELayer:
         epm = -(-E // nmp)          # experts per model rank
         Ep = epm * nmp              # padded expert count
 
-        ex = params["experts"]
+        ex = self.experts.coerce(params["experts"])
         f32 = jnp.float32
+
+        def raw(leaf):
+            return leaf.w if isinstance(leaf, MaskedWeight) else leaf
 
         def pad_e(w):
             return jnp.pad(w.astype(f32), ((0, Ep - E),) + ((0, 0),) * (w.ndim - 1))
 
-        wg, wu, wd = pad_e(ex["gate"]), pad_e(ex["up"]), pad_e(ex["down"])
+        wg, wu, wd = pad_e(raw(ex["gate"])), pad_e(raw(ex["up"])), \
+            pad_e(raw(ex["down"]))
         if self.experts.masked:
-            m_in, m_out = self.experts._masks(ex, f32)
+            m_in = ex["gate"].mask_array(f32)
+            m_out = ex["down"].mask_array(f32)
         else:
             m_in = m_out = jnp.ones((), f32)
         router = params["router"].astype(f32)
@@ -242,13 +292,11 @@ class MoELayer:
 
         wspec_in = P("model", None, dp)   # (E, h, d): E on model, d FSDP
         wspec_out = P("model", dp, None)  # (E, d, h)
-        y, aux = jax.shard_map(
-            body, mesh=mesh,
+        y, aux = _shard_map(
+            body, mesh,
             in_specs=(P(), wspec_in, wspec_in, wspec_out, P(), P(),
                       P(dp)),
             out_specs=(P(dp), P(dp)),
-            axis_names=set(mesh.axis_names),
-            check_vma=False,
         )(router, wg, wu, wd, m_in, m_out,
           x.reshape(T, D).astype(f32))
         return y.reshape(B, S, D).astype(x.dtype), jnp.mean(aux)

@@ -39,8 +39,13 @@ __all__ = ["DecoderLayer", "Stack"]
 
 def _layer_sparsity(cfg: ModelConfig, idx: int):
     sp = cfg.sparsity
-    if sp.backend in ("xla_compact", "pallas"):
-        return sp  # static adjacency must be shared across scanned periods
+    if sp.pattern != "dense" and sp.sparsity > 0.0:
+        from repro.sparsity import storage_kind
+
+        if storage_kind(sp.backend, has_layout=sp.pattern == "rbgp4") == "compact":
+            # compact storage bakes the adjacency into the program at trace
+            # time, so scanned periods must share one graph sample
+            return sp
     return dataclasses.replace(sp, seed=sp.seed + 1000 * (idx + 1))
 
 

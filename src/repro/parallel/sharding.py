@@ -49,7 +49,9 @@ def dp_axes(mesh: Mesh):
 # 'F' = fsdp axes placeholder, 'M' = model axis.
 _PARAM_RULES: list[tuple[str, tuple]] = [
     # tiny constants / graph factors / norms / router / rwkv mixes
-    (r"_ba_o|_ba_i|_mask", ("R",)),
+    # (ba_o/ba_i/mask are the typed MaskedWeight factor leaves; the
+    # underscore-prefixed spellings cover legacy flat-dict params)
+    (r"ba_o|ba_i|_mask|/mask$", ("R",)),
     (r"norm|scale|bias|ln\d|gn_", ("R",)),
     (r"router", ("R",)),
     (r"mu_|mix_w1|mix_w2|decay_w1|decay_w2|/u$|w_base", ("R",)),

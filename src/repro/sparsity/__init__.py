@@ -1,8 +1,29 @@
-"""Sparsity integration: pattern registry + SparseLinear layer."""
+"""Sparsity integration: pattern registry + backend registry + SparseLinear."""
 from .patterns import SparsityConfig, PatternInstance, make_pattern, PATTERNS
-from .layer import SparseLinear, expand_rbgp4_mask
+from .api import (
+    BackendCapabilities,
+    SparseBackend,
+    register_backend,
+    get_backend,
+    available_backends,
+    resolve_backend,
+    storage_kind,
+    SparseWeight,
+    DenseWeight,
+    MaskedWeight,
+    CompactWeight,
+    sparse_linear,
+    sparse_matmul,
+    dense_weight,
+    expand_rbgp4_mask,
+)
+from .layer import SparseLinear
 
 __all__ = [
     "SparsityConfig", "PatternInstance", "make_pattern", "PATTERNS",
+    "BackendCapabilities", "SparseBackend", "register_backend", "get_backend",
+    "available_backends", "resolve_backend", "storage_kind",
+    "SparseWeight", "DenseWeight", "MaskedWeight", "CompactWeight",
+    "sparse_linear", "sparse_matmul", "dense_weight",
     "SparseLinear", "expand_rbgp4_mask",
 ]

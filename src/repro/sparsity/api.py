@@ -1,0 +1,505 @@
+"""Pluggable sparse-backend API: weight pytrees + backend registry.
+
+This module is the single dispatch point for every sparse (and dense)
+projection in the framework.  It replaces the string-mode if/elif ladders
+that used to live inside ``SparseLinear.apply`` with two orthogonal
+concepts:
+
+**Weight containers** — pytree-registered dataclasses that say *how the
+values are stored*:
+
+  ``DenseWeight``    plain (M, K) values.
+  ``MaskedWeight``   dense (M, K) trainable values plus a fixed {0,1} mask.
+                     For the rbgp4 pattern the mask is reconstructed in-jit
+                     from the tiny base-graph biadjacency factors
+                     (``ba_o``/``ba_i`` — succinct storage: a scanned
+                     72-layer stack carries only (L, |G_o|) uint8 factors);
+                     other patterns carry the full ``mask``.  The factor /
+                     mask leaves are *data* (they stack across scanned
+                     periods like any parameter) but are typed
+                     non-trainable: ``utils.split_trainable`` routes them to
+                     the static half by container type, not by key-name
+                     convention.
+  ``CompactWeight``  compact (M, nnz_row) values — 2|E| memory — whose
+                     ``RBGP4Layout`` rides along as *static aux data*, so
+                     the container flows through ``jax.jit``, optimizers,
+                     checkpointing, and sharding as an ordinary pytree
+                     whose only leaves are the trainable values (+ bias).
+
+**Backends** — registered executors that say *how the matmul runs*:
+
+  ``ref``          dense materialization oracle (works on any container).
+  ``xla_masked``   (W * mask) @ x — the paper-faithful training path.
+  ``xla_compact``  gather + einsum from compact storage (no dense W).
+  ``pallas``       the RBGP4MM Pallas kernels (custom VJP; interpret on
+                   CPU, native on TPU).
+
+Each backend declares :class:`BackendCapabilities` (needs_layout,
+compact_storage, grad_support, platforms) so callers can filter with
+:func:`available_backends` and new formats/kernels (blocked-CSR, Triton,
+quantized storage) can be added with :func:`register_backend` without
+touching any model file.
+
+The functional entry points :func:`sparse_linear` (token-major
+``y = x @ W_s^T``) and :func:`sparse_matmul` (feature-major
+``O = W_s @ I``) dispatch on ``(weight type, backend name)``;
+``backend="auto"`` selects pallas on TPU and xla_compact elsewhere for
+compact storage, xla_masked for masked storage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RBGP4Layout
+from repro.kernels import RBGP4Op
+from repro.kernels import ref as kref
+
+__all__ = [
+    "BackendCapabilities",
+    "SparseBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "resolve_backend",
+    "storage_kind",
+    "SparseWeight",
+    "DenseWeight",
+    "MaskedWeight",
+    "CompactWeight",
+    "sparse_linear",
+    "sparse_matmul",
+    "dense_weight",
+    "expand_rbgp4_mask",
+]
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def expand_rbgp4_mask(ba_o: jax.Array, ba_i: jax.Array, G: int, C: int) -> jax.Array:
+    """mask = kron(ba_o, kron(ba_i, ones(G, C))) without materializing krons.
+
+    ba_o: (n_o_l, n_o_r); ba_i: (u_i, v_i) -> (M, K) = (n_o_l*u_i*G, n_o_r*v_i*C).
+    """
+    inner = ba_o[:, None, :, None] * ba_i[None, :, None, :]  # (ol,ui,or,vi)
+    ol, ui, onr, vi = inner.shape
+    mask = jnp.broadcast_to(
+        inner[:, :, None, :, :, None], (ol, ui, G, onr, vi, C)
+    )
+    return mask.reshape(ol * ui * G, onr * vi * C)
+
+
+# ---------------------------------------------------------------------------
+# weight containers
+# ---------------------------------------------------------------------------
+
+class SparseWeight:
+    """Base class for the weight containers (isinstance / shared helpers).
+
+    Subclasses are registered pytrees whose *data* leaves stack, shard,
+    checkpoint, and differentiate like plain parameters.  ``_TRAINABLE``
+    names the data fields the optimizer may update; everything else in
+    ``_DATA`` is a fixed constant (mask factors).  ``trainable_split`` is
+    the type-driven hook ``utils.split_trainable`` consumes.
+    """
+
+    _DATA: tuple[str, ...] = ()
+    _TRAINABLE: tuple[str, ...] = ()
+
+    def trainable_split(self):
+        """(trainable_half, static_half) with None in the masked positions."""
+        null_train = {f: None for f in self._DATA if f not in self._TRAINABLE}
+        null_static = {f: None for f in self._TRAINABLE}
+        return (
+            dataclasses.replace(self, **null_train),
+            dataclasses.replace(self, **null_static),
+        )
+
+    # legacy flat-dict key access ("w", "w_data", "_ba_o", "_mask", "b")
+    _LEGACY_KEYS = {
+        "_ba_o": "ba_o", "_ba_i": "ba_i", "_mask": "mask",
+    }
+
+    def __getitem__(self, key: str):
+        field = self._LEGACY_KEYS.get(key, key)
+        if field in {f.name for f in dataclasses.fields(self)}:
+            return getattr(self, field)
+        raise KeyError(key)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("w", "b"),
+    meta_fields=(),
+)
+@dataclasses.dataclass
+class DenseWeight(SparseWeight):
+    """Plain dense values: ``w`` (..., M, K), optional bias ``b`` (M,)."""
+
+    w: jax.Array
+    b: Optional[jax.Array] = None
+
+    _DATA = ("w", "b")
+    _TRAINABLE = ("w", "b")
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.w.shape)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("w", "ba_o", "ba_i", "mask", "b"),
+    meta_fields=("group_rows", "chunk_cols"),
+)
+@dataclasses.dataclass
+class MaskedWeight(SparseWeight):
+    """Dense trainable values under a fixed {0,1} mask.
+
+    Exactly one mask source is set: (``ba_o``, ``ba_i``) biadjacency
+    factors with the (``group_rows``, ``chunk_cols``) static repetition
+    sizes (rbgp4 — the mask is Kronecker-expanded in-jit and never stored),
+    or a full ``mask`` array (unstructured / block patterns).  ``w`` may
+    carry extra leading dims (e.g. stacked MoE experts (E, M, K)); the mask
+    broadcasts over them.
+    """
+
+    w: jax.Array
+    ba_o: Optional[jax.Array] = None
+    ba_i: Optional[jax.Array] = None
+    mask: Optional[jax.Array] = None
+    b: Optional[jax.Array] = None
+    group_rows: Optional[int] = None
+    chunk_cols: Optional[int] = None
+
+    _DATA = ("w", "ba_o", "ba_i", "mask", "b")
+    _TRAINABLE = ("w", "b")
+
+    def mask_array(self, dtype=None) -> jax.Array:
+        """The (M, K) {0,1} mask (expanded from factors if succinct)."""
+        if self.mask is not None:
+            m = self.mask
+        else:
+            m = expand_rbgp4_mask(
+                self.ba_o, self.ba_i, self.group_rows, self.chunk_cols
+            )
+        return m.astype(dtype) if dtype is not None else m
+
+    def materialize(self, dtype=None) -> jax.Array:
+        """w * mask — the effective dense weight."""
+        dtype = dtype or self.w.dtype
+        return self.w.astype(dtype) * self.mask_array(dtype)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("w_data", "b"),
+    meta_fields=("layout",),
+)
+@dataclasses.dataclass
+class CompactWeight(SparseWeight):
+    """Compact RBGP4 storage: ``w_data`` (M, nnz_row) + static layout aux.
+
+    The layout is pytree *aux data*: it survives
+    ``tree_flatten``/``tree_unflatten`` and ``jax.jit`` (treedef equality
+    is by ``RBGP4Layout.__eq__``, i.e. by spec), never appears as a leaf,
+    and therefore never reaches optimizers, checkpoints, or shardings.
+    """
+
+    w_data: jax.Array
+    b: Optional[jax.Array] = None
+    layout: Optional[RBGP4Layout] = None
+
+    _DATA = ("w_data", "b")
+    _TRAINABLE = ("w_data", "b")
+
+
+# ---------------------------------------------------------------------------
+# backend protocol + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """Declared properties used for validation, filtering, and auto-select.
+
+    needs_layout:    requires an RBGP4Layout (trace-time adjacency).
+    compact_storage: consumes CompactWeight (2|E| values, no dense W).
+    grad_support:    differentiable (autodiff or custom VJP).
+    platforms:       jax backends the implementation runs on.
+    """
+
+    needs_layout: bool = False
+    compact_storage: bool = False
+    grad_support: bool = True
+    platforms: tuple[str, ...] = ("cpu", "gpu", "tpu")
+
+    def supports_platform(self, platform: str) -> bool:
+        return platform in self.platforms
+
+
+@runtime_checkable
+class SparseBackend(Protocol):
+    """One way of executing a sparse projection.
+
+    ``linear`` is token-major (``x`` (..., K) -> (..., M)); ``matmul`` is
+    the paper's feature-major SDMM (``x`` (K, N) -> (M, N)).  Both operate
+    on *unbiased* weights — bias is applied by the dispatchers.
+    """
+
+    name: str
+    capabilities: BackendCapabilities
+    accepts: tuple[type, ...]
+
+    def linear(self, weight: SparseWeight, x: jax.Array) -> jax.Array: ...
+
+    def matmul(self, weight: SparseWeight, x: jax.Array) -> jax.Array: ...
+
+
+_REGISTRY: dict[str, SparseBackend] = {}
+
+
+def register_backend(backend: SparseBackend, *, name: Optional[str] = None,
+                     overwrite: bool = False) -> SparseBackend:
+    """Register a backend instance under ``name`` (default: backend.name)."""
+    name = name or backend.name
+    if name == "auto":
+        raise ValueError("'auto' is reserved for dispatch-time selection")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[name] = backend
+    return backend
+
+
+def get_backend(name: str) -> SparseBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown sparse backend {name!r}; available: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends(
+    *,
+    platform: Optional[str] = None,
+    weight: Optional[Any] = None,
+    needs_layout: Optional[bool] = None,
+    compact_storage: Optional[bool] = None,
+    grad_support: Optional[bool] = None,
+) -> list[str]:
+    """Backend names filtered by capability / platform / weight type."""
+    out = []
+    for name, be in sorted(_REGISTRY.items()):
+        caps = be.capabilities
+        if platform is not None and not caps.supports_platform(platform):
+            continue
+        if needs_layout is not None and caps.needs_layout != needs_layout:
+            continue
+        if compact_storage is not None and caps.compact_storage != compact_storage:
+            continue
+        if grad_support is not None and caps.grad_support != grad_support:
+            continue
+        if weight is not None:
+            wtype = weight if isinstance(weight, type) else type(weight)
+            if not issubclass(wtype, be.accepts):
+                continue
+        out.append(name)
+    return out
+
+
+def storage_kind(backend: str, *, has_layout: bool) -> str:
+    """'dense' is never returned: 'compact' or 'masked' storage for a
+    sparsified layer given the configured backend name.
+
+    ``auto`` prefers compact storage whenever the pattern has an RBGP4
+    layout (succinct values + runtime-efficient kernels); backends that
+    declare ``compact_storage`` require one.
+    """
+    if backend == "auto":
+        return "compact" if has_layout else "masked"
+    caps = get_backend(backend).capabilities
+    if caps.compact_storage:
+        if not has_layout:
+            raise ValueError(
+                f"backend {backend!r} requires pattern=rbgp4 "
+                f"(compact storage is an RBGP property)"
+            )
+        return "compact"
+    return "masked"
+
+
+def resolve_backend(weight: SparseWeight, backend: str = "auto") -> SparseBackend:
+    """Pick the executing backend for ``weight``.
+
+    ``auto``: DenseWeight -> ref; MaskedWeight -> xla_masked;
+    CompactWeight -> pallas on TPU, xla_compact elsewhere.
+    An explicitly named backend is validated against the weight type.
+    """
+    if backend == "auto":
+        if isinstance(weight, CompactWeight):
+            platform = jax.default_backend()
+            pallas = _REGISTRY.get("pallas")
+            if pallas is not None and pallas.capabilities.supports_platform(
+                    platform) and platform == "tpu":
+                return pallas
+            return get_backend("xla_compact")
+        if isinstance(weight, MaskedWeight):
+            return get_backend("xla_masked")
+        return get_backend("ref")
+    be = get_backend(backend)
+    if not isinstance(weight, be.accepts):
+        raise TypeError(
+            f"backend {be.name!r} accepts "
+            f"{tuple(t.__name__ for t in be.accepts)}, got "
+            f"{type(weight).__name__}"
+        )
+    return be
+
+
+# ---------------------------------------------------------------------------
+# functional entry points
+# ---------------------------------------------------------------------------
+
+def sparse_linear(weight: SparseWeight, x: jax.Array, *,
+                  backend: str = "auto", dtype=None) -> jax.Array:
+    """y = x @ W_s^T (+ b); x (..., K) token-major -> (..., M)."""
+    dtype = dtype or x.dtype
+    be = resolve_backend(weight, backend)
+    y = be.linear(weight, x.astype(dtype))
+    if weight.b is not None:
+        y = y + weight.b.astype(dtype)
+    return y
+
+
+def sparse_matmul(weight: SparseWeight, x: jax.Array, *,
+                  backend: str = "auto", dtype=None) -> jax.Array:
+    """O = W_s @ I (+ b per row); x (K, N) feature-major -> (M, N)."""
+    dtype = dtype or x.dtype
+    be = resolve_backend(weight, backend)
+    out = be.matmul(weight, x.astype(dtype))
+    if weight.b is not None:
+        out = out + weight.b.astype(dtype)[:, None]
+    return out
+
+
+def dense_weight(weight: SparseWeight, dtype=None) -> jax.Array:
+    """Materialize the effective dense (M, K) matrix (tests / export)."""
+    if isinstance(weight, DenseWeight):
+        w = weight.w
+        return w.astype(dtype) if dtype is not None else w
+    if isinstance(weight, MaskedWeight):
+        return weight.materialize(dtype or weight.w.dtype)
+    if isinstance(weight, CompactWeight):
+        w_data = weight.w_data
+        if dtype is not None:
+            w_data = w_data.astype(dtype)
+        return kref.unpack_dense(weight.layout, w_data)
+    raise TypeError(f"not a SparseWeight: {type(weight).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+class RefBackend:
+    """Dense-materialization oracle: correct for every container type.
+
+    Memory-heavy ((M, K) is materialized) but fully differentiable and
+    platform-agnostic — the parity anchor the other backends are tested
+    against.
+    """
+
+    name = "ref"
+    capabilities = BackendCapabilities()
+    accepts = (DenseWeight, MaskedWeight, CompactWeight)
+
+    def linear(self, weight, x):
+        return x @ dense_weight(weight, x.dtype).T
+
+    def matmul(self, weight, x):
+        return dense_weight(weight, x.dtype) @ x
+
+
+class XlaMaskedBackend:
+    """(W * mask) @ x — the paper-faithful predefined-sparsity training path."""
+
+    name = "xla_masked"
+    capabilities = BackendCapabilities()
+    accepts = (MaskedWeight,)
+
+    def linear(self, weight, x):
+        return x @ weight.materialize(x.dtype).T
+
+    def matmul(self, weight, x):
+        return weight.materialize(x.dtype) @ x
+
+
+class XlaCompactBackend:
+    """Gather + einsum from compact storage (XLA-expressible, no dense W).
+
+    ``linear`` uses the token-major RHS formulation directly — no
+    activation transposes around the contraction (the old path paid a
+    double transpose per call).
+    """
+
+    name = "xla_compact"
+    capabilities = BackendCapabilities(needs_layout=True, compact_storage=True)
+    accepts = (CompactWeight,)
+
+    def linear(self, weight, x):
+        lay = weight.layout
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, lay.k)
+        y = kref.compact_gather_mm_rhs(lay, weight.w_data.astype(x.dtype), x2)
+        return y.reshape(*lead, lay.m)
+
+    def matmul(self, weight, x):
+        return kref.compact_gather_mm(
+            weight.layout, weight.w_data.astype(x.dtype), x
+        )
+
+
+class PallasBackend:
+    """RBGP4MM Pallas kernels (custom VJP); interpret-mode off-TPU.
+
+    ``RBGP4Op`` construction (transpose layout + slot permutation) is
+    cached per layout so repeated dispatches are free.
+    """
+
+    name = "pallas"
+    capabilities = BackendCapabilities(
+        needs_layout=True, compact_storage=True, platforms=("cpu", "tpu")
+    )
+    accepts = (CompactWeight,)
+
+    def __init__(self):
+        self._ops: dict[RBGP4Layout, RBGP4Op] = {}
+
+    def _op(self, layout: RBGP4Layout) -> RBGP4Op:
+        op = self._ops.get(layout)
+        if op is None:
+            op = self._ops[layout] = RBGP4Op(layout)
+        return op
+
+    def linear(self, weight, x):
+        return self._op(weight.layout).linear(x, weight.w_data.astype(x.dtype))
+
+    def matmul(self, weight, x):
+        return self._op(weight.layout).matmul(
+            weight.w_data.astype(x.dtype), x
+        )
+
+
+register_backend(RefBackend())
+register_backend(XlaMaskedBackend())
+register_backend(XlaCompactBackend())
+register_backend(PallasBackend())

@@ -1,56 +1,59 @@
 """SparseLinear: every projection in the framework goes through this layer.
 
-Modes (selected by SparsityConfig):
+The layer is now a *thin shim* over the pluggable backend API in
+``repro.sparsity.api``: it decides the storage container at construction
+time (``DenseWeight`` / ``MaskedWeight`` / ``CompactWeight`` via
+``storage_kind``), initializes it, and hands every ``apply`` to the
+functional :func:`repro.sparsity.api.sparse_linear` dispatcher — there are
+no backend string conditionals here.  Execution backend is whatever
+``SparsityConfig.backend`` names in the registry (``"auto"`` picks
+pallas-on-TPU / xla_compact-elsewhere for compact storage).
 
-  dense          plain y = x @ W^T.
+Storage kinds:
+
+  dense          plain y = x @ W^T (pattern not applicable to this shape).
   masked         dense weights x a fixed {0,1} mask (the paper's predefined-
                  sparsity training path).  For the rbgp4 pattern the mask is
-                 *reconstructed in-jit* from the tiny base-graph biadjacency
-                 matrices (Kronecker expansion) — the succinct-storage
-                 property means we never materialize masks in params, so a
-                 scanned 72-layer stack carries only (L, |G_o|) uint8 factors.
-  compact        weights stored compact (M, nnz_row) — 2|E| memory; executed
-                 either with the XLA gather+einsum formulation or the Pallas
-                 RBGP4MM kernels (custom VJP), per ``backend``.
+                 reconstructed in-jit from the tiny base-graph biadjacency
+                 factors carried by ``MaskedWeight`` — succinct storage: a
+                 scanned 72-layer stack carries only (L, |G_o|) uint8
+                 factors, typed non-trainable (no ``_``-key convention).
+  compact        ``CompactWeight`` (M, nnz_row) values — 2|E| memory — with
+                 the RBGP4 layout as static pytree aux data.
 
-Params returned by ``init`` are a flat dict; keys starting with ``_`` are
-non-trainable constants (masks / graph factors) — the optimizer and
-weight-decay skip them by convention (see train/optim.py).
+``init`` returns the weight container itself (bias included); legacy flat
+dicts (``{"w", "_ba_o", ...}`` / ``{"w_data"}``) are still accepted by
+``apply``/``dense_weight`` and upgraded on the fly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+import warnings
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import RBGP4Layout
-from repro.kernels import RBGP4Op
-from repro.kernels import ref as kref
+from .api import (
+    CompactWeight,
+    DenseWeight,
+    MaskedWeight,
+    SparseWeight,
+    dense_weight,
+    expand_rbgp4_mask,
+    sparse_linear,
+    storage_kind,
+)
 from .patterns import PatternInstance, SparsityConfig, make_pattern
 
 __all__ = ["SparseLinear", "expand_rbgp4_mask"]
 
 
-def expand_rbgp4_mask(ba_o: jax.Array, ba_i: jax.Array, G: int, C: int) -> jax.Array:
-    """mask = kron(ba_o, kron(ba_i, ones(G, C))) without materializing krons.
-
-    ba_o: (n_o_l, n_o_r); ba_i: (u_i, v_i) -> (M, K) = (n_o_l*u_i*G, n_o_r*v_i*C).
-    """
-    inner = ba_o[:, None, :, None] * ba_i[None, :, None, :]  # (ol,ui,or,vi)
-    ol, ui, onr, vi = inner.shape
-    mask = jnp.broadcast_to(
-        inner[:, :, None, :, :, None], (ol, ui, G, onr, vi, C)
-    )
-    return mask.reshape(ol * ui * G, onr * vi * C)
-
-
 class SparseLinear:
     """y = x @ W_s^T (+ b) with a configurable sparsity pattern.
 
-    Functional module: ``init(key) -> params``, ``apply(params, x) -> y``.
+    Functional module: ``init(key) -> SparseWeight``, ``apply(weight, x)``.
     """
 
     def __init__(
@@ -76,22 +79,14 @@ class SparseLinear:
             self.pattern: Optional[PatternInstance] = None
         else:
             self.pattern = make_pattern(self.cfg, m, k)
-            if self.cfg.backend == "xla_masked":
-                self.mode = "masked"
-            elif self.cfg.backend in ("xla_compact", "pallas"):
-                if self.pattern.layout is None:
-                    raise ValueError(
-                        f"backend {self.cfg.backend} requires pattern=rbgp4 "
-                        f"(compact storage is an RBGP property), got "
-                        f"{self.cfg.pattern}"
-                    )
-                self.mode = "compact"
-            else:
-                raise ValueError(f"unknown backend {self.cfg.backend!r}")
-
-        self._op: Optional[RBGP4Op] = None
-        if self.mode == "compact" and self.cfg.backend == "pallas":
-            self._op = RBGP4Op(self.pattern.layout)
+            # validates the backend name against the registry and resolves
+            # the storage container kind from its declared capabilities
+            self.mode = storage_kind(
+                self.cfg.backend, has_layout=self.pattern.layout is not None
+            )
+        # execution backend name handed to dispatch ("auto" resolves by
+        # weight type: DenseWeight -> ref, etc.)
+        self.backend_name = "auto" if self.mode == "dense" else self.cfg.backend
 
     # -- parameter counts / memory ------------------------------------------
     @property
@@ -111,69 +106,70 @@ class SparseLinear:
         return n + (self.out_features if self.use_bias else 0)
 
     # -- init ------------------------------------------------------------------
-    def init(self, key: jax.Array) -> dict:
+    def init(self, key: jax.Array) -> SparseWeight:
         m, k = self.out_features, self.in_features
         wkey, _ = jax.random.split(key)
-        params: dict = {}
-        if self.mode in ("dense", "masked"):
-            fan_in = k if self.mode == "dense" else max(
-                round((1 - self.pattern.sparsity) * k), 1
-            )
+        b = jnp.zeros((m,), self.param_dtype) if self.use_bias else None
+        if self.mode == "dense":
+            w = jax.random.normal(wkey, (m, k)) * (2.0 / k) ** 0.5
+            return DenseWeight(w=w.astype(self.param_dtype), b=b)
+        if self.mode == "masked":
+            fan_in = max(round((1 - self.pattern.sparsity) * k), 1)
             w = jax.random.normal(wkey, (m, k)) * (2.0 / fan_in) ** 0.5
-            params["w"] = w.astype(self.param_dtype)
-            if self.mode == "masked":
-                lay = self.layout
-                if lay is not None:
-                    params["_ba_o"] = jnp.asarray(lay.graph_o.biadjacency)
-                    params["_ba_i"] = jnp.asarray(lay.graph_i.biadjacency)
-                else:
-                    params["_mask"] = jnp.asarray(self.pattern.mask())
-        else:  # compact
+            w = w.astype(self.param_dtype)
             lay = self.layout
-            fan_in = lay.spec.nnz_per_row
-            w = jax.random.normal(wkey, lay.data_shape) * (2.0 / fan_in) ** 0.5
-            params["w_data"] = w.astype(self.param_dtype)
-        if self.use_bias:
-            params["b"] = jnp.zeros((m,), self.param_dtype)
-        return params
+            if lay is not None:
+                return MaskedWeight(
+                    w=w,
+                    ba_o=jnp.asarray(lay.graph_o.biadjacency),
+                    ba_i=jnp.asarray(lay.graph_i.biadjacency),
+                    b=b,
+                    group_rows=lay.spec.group_rows,
+                    chunk_cols=lay.spec.chunk_cols,
+                )
+            return MaskedWeight(w=w, mask=jnp.asarray(self.pattern.mask()), b=b)
+        # compact
+        lay = self.layout
+        fan_in = lay.spec.nnz_per_row
+        w = jax.random.normal(wkey, lay.data_shape) * (2.0 / fan_in) ** 0.5
+        return CompactWeight(
+            w_data=w.astype(self.param_dtype), b=b, layout=lay
+        )
 
     # -- apply ------------------------------------------------------------------
-    def _mask_of(self, params: dict) -> jax.Array:
-        lay = self.layout
-        if lay is not None:
-            sp = lay.spec
-            return expand_rbgp4_mask(
-                params["_ba_o"], params["_ba_i"], sp.group_rows, sp.chunk_cols
-            )
-        return params["_mask"]
-
-    def apply(self, params: dict, x: jax.Array, *, dtype=None) -> jax.Array:
+    def apply(self, params: Union[SparseWeight, dict], x: jax.Array, *,
+              dtype=None) -> jax.Array:
         """x: (..., in_features) -> (..., out_features)."""
-        dtype = dtype or x.dtype
-        if self.mode == "dense":
-            w = params["w"].astype(dtype)
-            y = x.astype(dtype) @ w.T
-        elif self.mode == "masked":
-            w = params["w"].astype(dtype)
-            w = w * self._mask_of(params).astype(dtype)
-            y = x.astype(dtype) @ w.T
-        else:  # compact
-            w_data = params["w_data"].astype(dtype)
-            if self.cfg.backend == "pallas":
-                y = self._op.linear(x.astype(dtype), w_data)
-            else:  # xla_compact
-                lead = x.shape[:-1]
-                x2 = x.astype(dtype).reshape(-1, self.in_features)
-                y = kref.compact_gather_mm(self.layout, w_data, x2.T).T
-                y = y.reshape(*lead, self.out_features)
-        if self.use_bias:
-            y = y + params["b"].astype(dtype)
-        return y
+        weight = self._coerce(params)
+        return sparse_linear(
+            weight, x, backend=self.backend_name, dtype=dtype or x.dtype
+        )
 
     # -- dense view (tests / export) ---------------------------------------------
-    def dense_weight(self, params: dict) -> jax.Array:
-        if self.mode == "dense":
-            return params["w"]
-        if self.mode == "masked":
-            return params["w"] * self._mask_of(params).astype(params["w"].dtype)
-        return kref.unpack_dense(self.layout, params["w_data"])
+    def dense_weight(self, params: Union[SparseWeight, dict]) -> jax.Array:
+        return dense_weight(self._coerce(params))
+
+    # -- legacy flat-dict params --------------------------------------------------
+    def _coerce(self, params: Union[SparseWeight, dict]) -> SparseWeight:
+        """Upgrade pre-registry flat dicts ({'w', '_ba_o', ...}) in place."""
+        if isinstance(params, SparseWeight):
+            return params
+        if not isinstance(params, dict):
+            raise TypeError(f"expected SparseWeight or dict, got {type(params)}")
+        warnings.warn(
+            "flat-dict SparseLinear params are deprecated; pass the "
+            "SparseWeight container returned by init()",
+            DeprecationWarning, stacklevel=3,
+        )
+        b = params.get("b")
+        if "w_data" in params:
+            return CompactWeight(w_data=params["w_data"], b=b, layout=self.layout)
+        if "_ba_o" in params:
+            sp = self.layout.spec
+            return MaskedWeight(
+                w=params["w"], ba_o=params["_ba_o"], ba_i=params["_ba_i"],
+                b=b, group_rows=sp.group_rows, chunk_cols=sp.chunk_cols,
+            )
+        if "_mask" in params:
+            return MaskedWeight(w=params["w"], mask=params["_mask"], b=b)
+        return DenseWeight(w=params["w"], b=b)

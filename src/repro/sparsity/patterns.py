@@ -8,6 +8,7 @@ data-parallel rank reconstructs identical masks with no communication.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Optional
 
@@ -24,9 +25,13 @@ class SparsityConfig:
 
     pattern: one of PATTERNS.
     sparsity: target fraction of zeros (rbgp4/block require 1 - 2^-k).
-    backend: 'xla_masked' (paper-faithful dense-masked training),
+    backend: any name registered in ``repro.sparsity.api`` —
+             'xla_masked' (paper-faithful dense-masked training),
              'xla_compact' (compact storage, gather+einsum),
-             'pallas' (compact storage, RBGP4MM kernels; interpret on CPU).
+             'pallas' (compact storage, RBGP4MM kernels; interpret on CPU),
+             'ref' (dense-materialization oracle) — or 'auto' (compact
+             storage when the pattern has an RBGP4 layout, with
+             pallas-on-TPU / xla_compact-elsewhere execution).
     block: (bh, bw) for the 'block' pattern (paper Table 1 uses (4, 4)).
     min_dim: skip sparsification for matrices with any dim below this
              (embeddings/heads/tiny projections stay dense, as in the paper
@@ -134,9 +139,19 @@ def _block(m, k, sparsity, cfg):
     )
 
 
+@functools.lru_cache(maxsize=1024)
+def _layout_for(spec: RBGP4Spec) -> RBGP4Layout:
+    """Memoized layout construction (layouts are pure functions of spec).
+
+    Sharing the instance means every layer with the same spec reuses one
+    adjacency/permutation set and one Pallas op-cache entry.
+    """
+    return RBGP4Layout(spec)
+
+
 def _rbgp4(m, k, sparsity, cfg):
     spec = design_rbgp4(m, k, sparsity, seed=cfg.seed)
-    layout = RBGP4Layout(spec)
+    layout = _layout_for(spec)
     mem = layout.memory_bytes()
     return PatternInstance(
         name="rbgp4", m=m, k=k, sparsity=spec.sparsity,

@@ -54,6 +54,30 @@ def save_pytree(path: str, tree, extra: Optional[dict] = None) -> None:
         os.replace(mtmp, path + ".meta")
 
 
+def _legacy_keys(key: str) -> list[str]:
+    """Pre-container spellings of a leaf path, tried when `key` is absent.
+
+    The weight-container API renamed '_ba_o' -> 'ba_o' / '_mask' -> 'mask',
+    moved raw weights one level down ('experts/gate' -> 'experts/gate/w'),
+    and moved the MoE shared factors from the experts dict into each
+    container ('experts/_ba_o_in' -> 'experts/gate/ba_o' and
+    'experts/up/ba_o'; '_ba_*_out' -> 'experts/down/ba_*'), so snapshots
+    written before the migration restore into the new structure.
+    """
+    out = []
+    head, _, last = key.rpartition("/")
+    if last in ("ba_o", "ba_i", "mask"):
+        out.append(f"{head}/_{last}" if head else f"_{last}")
+        ghead, _, comp = head.rpartition("/")
+        if comp in ("gate", "up", "down"):
+            suffix = "_out" if comp == "down" else "_in"
+            out.append(f"{ghead}/_{last}{suffix}" if ghead
+                       else f"_{last}{suffix}")
+    if last == "w" and head:
+        out.append(head)  # container 'w' was the bare array leaf
+    return out
+
+
 def load_pytree(path: str, like) -> Any:
     """Restore into the structure of `like` (paths must match)."""
     data = np.load(path, allow_pickle=False)
@@ -69,7 +93,10 @@ def load_pytree(path: str, like) -> Any:
             leaves.append(None)
             continue
         if key not in data:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
+            key = next((k for k in _legacy_keys(key) if k in data), None)
+            if key is None:
+                raise KeyError(
+                    f"checkpoint missing leaf {path_str(path)!r}")
         arr = data[key]
         want = tuple(np.shape(leaf))
         if tuple(arr.shape) != want:

@@ -1,8 +1,13 @@
 """Optimizers (SGD+momentum — the paper's — and AdamW) + LR schedules.
 
 Implemented in-house (no optax in this environment).  Optimizer state is a
-pytree congruent with the *trainable* params (see utils.split_trainable);
-masks / graph factors never receive state or updates.
+pytree congruent with the *trainable* params: ``utils.split_trainable``
+partitions by weight-container type (``MaskedWeight`` factor leaves and
+other typed constants go to the static half — see
+``repro.sparsity.api.SparseWeight.trainable_split``), so masks / graph
+factors never receive state or updates regardless of key names.  The old
+``_``-key-prefix convention still splits correctly for plain dicts (with a
+DeprecationWarning).
 """
 from __future__ import annotations
 

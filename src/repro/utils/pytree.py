@@ -1,12 +1,17 @@
 """Pytree utilities: trainable/static parameter partitioning.
 
-Convention (see sparsity/layer.py): dict keys starting with ``_`` hold
-non-trainable constants (masks, graph factors); integer-dtype leaves are
-likewise non-trainable.  ``split_trainable`` separates them so ``jax.grad``
-and the optimizer only ever see inexact trainable leaves.
+Trainability is *type-driven*: weight containers (anything exposing a
+``trainable_split() -> (trainable, static)`` method — see
+``repro.sparsity.api.SparseWeight``) declare their own split, so mask
+factors never reach ``jax.grad`` or the optimizer regardless of how their
+fields are named.  For plain leaves outside containers, two legacy rules
+remain as a deprecation shim: dict keys starting with ``_`` anywhere in the
+path, and non-inexact dtypes, classify as static (the ``_``-prefix rule
+warns — convert to containers).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -35,34 +40,49 @@ def path_str(path) -> str:
     return "/".join(parts)
 
 
+def _splits_itself(x) -> bool:
+    """Weight containers declare their own trainable/static partition."""
+    return hasattr(x, "trainable_split")
+
+
 def split_trainable(params: Any) -> tuple[Any, Any]:
     """Split params into (trainable, static) trees of identical structure.
 
     Non-selected positions are ``None`` in each half; ``merge_trees``
-    re-assembles.  Static = '_'-prefixed key anywhere in the path, or a
-    non-inexact dtype.
+    re-assembles.  Containers with ``trainable_split`` partition by type;
+    plain leaves fall back to the legacy rules: '_'-prefixed key anywhere
+    in the path (deprecated — warns), or a non-inexact dtype.
     """
 
-    def classify(path, leaf):
-        if leaf is None:
-            return None
-        static = any(_is_static_key(p) for p in path)
-        if not static:
-            dt = getattr(leaf, "dtype", None)
-            if dt is None:
-                dt = np.asarray(leaf).dtype
-            static = not jnp.issubdtype(dt, jnp.inexact)
-        return "static" if static else "train"
+    class _Pair(tuple):
+        """Sentinel so unzip never mistakes a structural tuple for a pair."""
 
-    labels = jax.tree_util.tree_map_with_path(classify, params)
-    train = jax.tree_util.tree_map(
-        lambda lab, leaf: leaf if lab == "train" else None, labels, params,
-        is_leaf=lambda x: x is None,
+    def classify(path, node):
+        if node is None:
+            return _Pair((None, None))
+        if _splits_itself(node):
+            return _Pair(node.trainable_split())
+        static = any(_is_static_key(p) for p in path)
+        if static:
+            warnings.warn(
+                f"'_'-prefixed non-trainable param key at {path_str(path)!r} "
+                "is deprecated; use a typed weight container "
+                "(repro.sparsity.api) instead",
+                DeprecationWarning, stacklevel=4,
+            )
+        else:
+            dt = getattr(node, "dtype", None)
+            if dt is None:
+                dt = np.asarray(node).dtype
+            static = not jnp.issubdtype(dt, jnp.inexact)
+        return _Pair((None, node)) if static else _Pair((node, None))
+
+    pairs = jax.tree_util.tree_map_with_path(
+        classify, params, is_leaf=lambda x: x is None or _splits_itself(x)
     )
-    static = jax.tree_util.tree_map(
-        lambda lab, leaf: leaf if lab == "static" else None, labels, params,
-        is_leaf=lambda x: x is None,
-    )
+    is_pair = lambda x: isinstance(x, _Pair)
+    train = jax.tree_util.tree_map(lambda p: p[0], pairs, is_leaf=is_pair)
+    static = jax.tree_util.tree_map(lambda p: p[1], pairs, is_leaf=is_pair)
     return train, static
 
 

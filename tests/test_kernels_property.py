@@ -3,6 +3,9 @@ configurations x random data must match the oracle (interpret mode)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import RBGP4Layout, RBGP4Spec

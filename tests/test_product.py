@@ -1,6 +1,8 @@
 """Property tests for graph products and RCUBS structure (paper §3-4)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,6 +1,8 @@
 """Tests for RBGP4 spec, layout, compact pack/unpack, transpose, designer."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import RBGP4Layout, RBGP4Spec, design_rbgp4

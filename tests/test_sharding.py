@@ -12,13 +12,17 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 
 from repro.parallel.sharding import param_spec, dp_axes, cache_specs
 from repro.parallel.constrain import activation_mesh, shard
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+try:
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+except ImportError:  # older jax: mesh axes are implicitly Auto
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 # -- param rules --------------------------------------------------------------
 assert dp_axes(mesh) == ("pod", "data")

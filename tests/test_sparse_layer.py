@@ -1,10 +1,20 @@
 """Tests for SparseLinear: backend equivalence, masks, grads, memory model."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.sparsity import SparseLinear, SparsityConfig, expand_rbgp4_mask, make_pattern
+from repro.sparsity import (
+    CompactWeight,
+    DenseWeight,
+    MaskedWeight,
+    SparseLinear,
+    SparsityConfig,
+    expand_rbgp4_mask,
+    make_pattern,
+)
 
 
 def cfg(pattern="rbgp4", sparsity=0.5, backend="xla_masked", **kw):
@@ -16,6 +26,7 @@ def test_dense_mode_when_not_applicable():
     lin = SparseLinear(512, 512, SparsityConfig(pattern="rbgp4", sparsity=0.5,
                                                 min_dim=1024))
     assert lin.mode == "dense"
+    assert isinstance(lin.init(jax.random.PRNGKey(0)), DenseWeight)
     lin2 = SparseLinear(512, 512, SparsityConfig())
     assert lin2.mode == "dense"
 
@@ -23,9 +34,11 @@ def test_dense_mode_when_not_applicable():
 def test_expand_rbgp4_mask_matches_layout():
     lin = SparseLinear(256, 256, cfg(backend="xla_masked"))
     p = lin.init(jax.random.PRNGKey(0))
-    mask = expand_rbgp4_mask(p["_ba_o"], p["_ba_i"],
+    assert isinstance(p, MaskedWeight)
+    mask = expand_rbgp4_mask(p.ba_o, p.ba_i,
                              lin.layout.spec.group_rows, lin.layout.spec.chunk_cols)
     np.testing.assert_array_equal(np.asarray(mask), lin.layout.mask())
+    np.testing.assert_array_equal(np.asarray(p.mask_array()), lin.layout.mask())
 
 
 @pytest.mark.parametrize("pattern", ["unstructured", "block", "rbgp4"])
@@ -33,8 +46,7 @@ def test_masked_apply_zeroes_off_mask(pattern):
     lin = SparseLinear(256, 128, cfg(pattern=pattern, block=(4, 4)))
     p = lin.init(jax.random.PRNGKey(1))
     w_eff = np.asarray(lin.dense_weight(p))
-    mask = (lin.layout.mask() if pattern == "rbgp4"
-            else np.asarray(p["_mask"]))
+    mask = (lin.layout.mask() if pattern == "rbgp4" else np.asarray(p.mask))
     assert (w_eff[mask == 0] == 0).all()
     frac = (w_eff != 0).mean()
     assert abs(frac - 0.5) < 0.05
@@ -53,7 +65,8 @@ def test_compact_backends_match_masked(backend):
     pm = lin_m.init(key)
     dense = np.asarray(lin_m.dense_weight(pm))
     pc = lin_c.init(key)
-    pc["w_data"] = jnp.asarray(lin_c.layout.pack(dense))
+    assert isinstance(pc, CompactWeight)
+    pc = dataclasses.replace(pc, w_data=jnp.asarray(lin_c.layout.pack(dense)))
     x = jax.random.normal(jax.random.PRNGKey(4), (2, 7, 256))
     ym = lin_m.apply(pm, x)
     yc = lin_c.apply(pc, x)
@@ -67,7 +80,7 @@ def test_compact_grads_match_masked():
     pm = lin_m.init(key)
     dense = np.asarray(lin_m.dense_weight(pm))
     pp = lin_p.init(key)
-    pp["w_data"] = jnp.asarray(lin_p.layout.pack(dense))
+    pp = dataclasses.replace(pp, w_data=jnp.asarray(lin_p.layout.pack(dense)))
     x = jax.random.normal(jax.random.PRNGKey(6), (4, 128))
 
     from repro.utils import merge_trees, split_trainable
@@ -75,8 +88,8 @@ def test_compact_grads_match_masked():
     tm, sm = split_trainable(pm)
     gm = jax.grad(
         lambda t: jnp.sum(lin_m.apply(merge_trees(t, sm), x) ** 2)
-    )(tm)["w"]
-    gp = jax.grad(lambda p: jnp.sum(lin_p.apply(p, x) ** 2))(pp)["w_data"]
+    )(tm).w
+    gp = jax.grad(lambda p: jnp.sum(lin_p.apply(p, x) ** 2))(pp).w_data
     # masked grad on the mask support == compact grad
     packed_gm = lin_p.layout.pack(np.asarray(gm))
     np.testing.assert_allclose(np.asarray(gp), packed_gm, rtol=1e-4, atol=1e-4)
@@ -98,6 +111,22 @@ def test_param_counts_and_memory_model():
 def test_bias_and_leading_dims():
     lin = SparseLinear(64, 32, cfg(sparsity=0.5), use_bias=True)
     p = lin.init(jax.random.PRNGKey(0))
+    assert p.b is not None
     x = jnp.ones((2, 3, 5, 64))
     y = lin.apply(p, x)
     assert y.shape == (2, 3, 5, 32)
+
+
+def test_legacy_flat_dict_params_still_apply():
+    """Pre-registry flat dicts are coerced (deprecation shim)."""
+    lin = SparseLinear(128, 64, cfg(backend="xla_masked"))
+    p = lin.init(jax.random.PRNGKey(7))
+    legacy = {"w": p.w, "_ba_o": p.ba_o, "_ba_i": p.ba_i}
+    x = jax.random.normal(jax.random.PRNGKey(8), (3, 128))
+    with pytest.warns(DeprecationWarning):
+        y = lin.apply(legacy, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(lin.apply(p, x)),
+                               rtol=1e-6, atol=1e-6)
+    # legacy key access on containers
+    np.testing.assert_array_equal(np.asarray(p["_ba_o"]), np.asarray(p.ba_o))
+    np.testing.assert_array_equal(np.asarray(p["w"]), np.asarray(p.w))

@@ -127,6 +127,61 @@ def test_simulated_failure_then_restart(tmp_path):
     assert int(tr2.state.step) == 12
 
 
+def test_legacy_checkpoint_keys_restore_into_containers(tmp_path):
+    """Pre-container .npz snapshots restore into the new weight pytrees."""
+    from repro.sparsity import SparseLinear, SparsityConfig
+    from repro.train.checkpoint import load_pytree, save_pytree
+
+    lin = SparseLinear(64, 64, SparsityConfig(pattern="rbgp4", sparsity=0.5,
+                                              backend="xla_masked", min_dim=1))
+    w = lin.init(jax.random.PRNGKey(0))
+    legacy = {"layer": {"w": np.asarray(w.w), "_ba_o": np.asarray(w.ba_o),
+                        "_ba_i": np.asarray(w.ba_i)},
+              "experts": {"gate": np.ones((2, 4, 4), np.float32)}}
+    p = str(tmp_path / "legacy.npz")
+    save_pytree(p, legacy)
+    # restore into the container-shaped structure the new code builds
+    import dataclasses as dc
+    like = {"layer": w,
+            "experts": {"gate": dc.replace(w, w=jnp.zeros((2, 4, 4)),
+                                           ba_o=None, ba_i=None)}}
+    got = load_pytree(p, like)
+    np.testing.assert_array_equal(np.asarray(got["layer"].w), np.asarray(w.w))
+    np.testing.assert_array_equal(np.asarray(got["layer"].ba_o),
+                                  np.asarray(w.ba_o))
+    np.testing.assert_array_equal(np.asarray(got["experts"]["gate"].w),
+                                  np.ones((2, 4, 4), np.float32))
+
+
+def test_legacy_moe_factor_keys_restore_into_containers(tmp_path):
+    """Old experts/_ba_*_{in,out} keys restore into per-container factors."""
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import StackedExperts
+    from repro.sparsity import SparsityConfig
+    from repro.train.checkpoint import load_pytree, save_pytree
+
+    sp = SparsityConfig(pattern="rbgp4", sparsity=0.5, backend="xla_masked",
+                        min_dim=1)
+    ex = StackedExperts(2, 64, 64, sp)
+    new = ex.init(jax.random.PRNGKey(0))
+    legacy = {"experts": {
+        "gate": np.asarray(new["gate"].w), "up": np.asarray(new["up"].w),
+        "down": np.asarray(new["down"].w),
+        "_ba_o_in": np.asarray(new["gate"].ba_o),
+        "_ba_i_in": np.asarray(new["gate"].ba_i),
+        "_ba_o_out": np.asarray(new["down"].ba_o),
+        "_ba_i_out": np.asarray(new["down"].ba_i),
+    }}
+    p = str(tmp_path / "legacy_moe.npz")
+    save_pytree(p, legacy)
+    got = load_pytree(p, {"experts": new})
+    for name in ("gate", "up", "down"):
+        np.testing.assert_array_equal(np.asarray(got["experts"][name].w),
+                                      np.asarray(new[name].w))
+        np.testing.assert_array_equal(np.asarray(got["experts"][name].ba_o),
+                                      np.asarray(new[name].ba_o))
+
+
 def test_checkpoint_atomicity(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2)
     tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 2))}}
