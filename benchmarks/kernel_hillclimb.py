@@ -75,6 +75,23 @@ def run(print_fn=print) -> list[tuple]:
         out.append((f"kernel_hillclimb,{label.split(':')[0]}",
                     est.t_total_s * 1e6, speed))
         prev = est.t_total_s
+    # it5: the block-N search from it4 now lives in-tree — resolve the same
+    # workload through repro.kernels.autotune (what block_n="auto" does at
+    # every sparse_linear call site) and report the cached pick
+    from repro.kernels import autotune
+
+    dims_f = KernelDims.from_layout(RBGP4Layout(STEPS[-1][1]))
+    tuned = autotune.autotune(dims_f, N, dtype="bfloat16", kind="rhs",
+                              platform="v5e-model")
+    est_t = estimate_rbgp4mm(STEPS[-1][1], N, block_n=tuned.block_n)
+    print_fn(f"\nit5: kernels/autotune.py pick (block_n={tuned.block_n}, "
+             f"order={tuned.grid_order}, source={tuned.source}) — the same "
+             f"search block_n='auto' resolves through at model build time")
+    print_fn(f"  total {est_t.t_total_s*1e6:8.1f} us "
+             f"({dense.t_total_s/est_t.t_total_s:4.1f}x vs dense)")
+    out.append(("kernel_hillclimb,it5_autotuned", est_t.t_total_s * 1e6,
+                dense.t_total_s / est_t.t_total_s))
+
     # correctness gate: the tuned config must match the oracle exactly
     spec = STEPS[-1][1]
     lay = RBGP4Layout(spec)

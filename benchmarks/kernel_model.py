@@ -1,116 +1,29 @@
 """Analytic TPU-v5e roofline model of the RBGP4MM kernel.
 
-This container has no TPU, so the paper's runtime tables (2 and 3) are
-reproduced through a first-principles cost model of our Pallas kernel,
-parameterized exactly by the RBGP4 configuration knobs the paper varies.
-The kernel itself is validated against pure-jnp oracles in tests/ (interpret
-mode); this model supplies the *time* axis:
-
-  memory time   = (W reads + I reads + O writes) / HBM_BW
-    W: nnz * bytes, read once per N-tile pass;
-    I: each output tile consumes d_o input tiles (G_o sparsity skips the
-       zero tiles — the paper's central runtime mechanism);
-    O: M*N written once.
-  compute time  = 2*M*N*nnz_row / (PEAK * u_rows * u_contract)
-    MXU utilization: each inner sub-matmul is (G x d_i*C) @ (d_i*C x BN);
-    rows pack into 16-row bf16 sublanes (u_rows = G / roundup(G, 16)),
-    contraction into 128-lane chunks (u_k = d_i*C / roundup(d_i*C, 128)) —
-    the role of the complete factors G_r (x) G_b is exactly to raise these
-    (paper Table 3's "row repetition" on GPU registers, re-derived for MXU).
-
-time = max(memory, compute) (+ both reported).
+The model now lives in :mod:`repro.kernels.perf_model` so the in-tree
+autotuner (:mod:`repro.kernels.autotune`) can score candidate launch
+configurations with it; this module re-exports it unchanged for the
+benchmark harness (``kernel_hillclimb``, ``table2``/``table3``,
+``stacked_experts``).
 """
 from __future__ import annotations
 
-import dataclasses
+from repro.kernels.perf_model import (  # noqa: F401
+    HBM_BW,
+    PEAK_FLOPS,
+    KernelEstimate,
+    estimate_dense,
+    estimate_rbgp4mm,
+    estimate_rbgp4mm_dims,
+    estimate_unstructured,
+)
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-
-
-def _round_up(x, m):
-    return ((x + m - 1) // m) * m
-
-
-@dataclasses.dataclass
-class KernelEstimate:
-    flops: float
-    bytes_w: float
-    bytes_i: float
-    bytes_o: float
-    u_rows: float
-    u_contract: float
-    t_compute_s: float
-    t_memory_s: float
-
-    @property
-    def t_total_s(self) -> float:
-        return max(self.t_compute_s, self.t_memory_s)
-
-    @property
-    def bytes_total(self) -> float:
-        return self.bytes_w + self.bytes_i + self.bytes_o
-
-
-def estimate_rbgp4mm(
-    spec, n: int, *, bytes_per_el: int = 2, block_n: int = 512
-) -> KernelEstimate:
-    """Cost of O = W_s @ I for W_s (M, K) with RBGP4Spec `spec`, I (K, n)."""
-    m_dim, k_dim = spec.m, spec.k
-    TM, TK = spec.tile_m, spec.tile_k
-    G, C = spec.group_rows, spec.chunk_cols
-    d_o, d_i = spec.d_o, spec.d_i
-    bn = min(block_n, n)
-
-    nnz = spec.nnz
-    flops = 2.0 * m_dim * n * spec.nnz_per_row
-
-    n_tiles_m = m_dim // TM
-    n_tiles_n = max(n // bn, 1)
-    # W: compact values streamed once per N pass
-    bytes_w = nnz * bytes_per_el * n_tiles_n
-    # I: per output tile, d_o gathered input tiles (zero tiles skipped)
-    bytes_i = n_tiles_m * n_tiles_n * d_o * (TK * bn) * bytes_per_el
-    bytes_o = m_dim * n * bytes_per_el
-
-    u_rows = G / _round_up(G, 16)
-    kk = d_i * C
-    u_contract = kk / _round_up(kk, 128)
-    t_comp = flops / (PEAK_FLOPS * u_rows * u_contract)
-    t_mem = (bytes_w + bytes_i + bytes_o) / HBM_BW
-    return KernelEstimate(flops, bytes_w, bytes_i, bytes_o,
-                          u_rows, u_contract, t_comp, t_mem)
-
-
-def estimate_dense(m_dim: int, k_dim: int, n: int, *, bytes_per_el: int = 2,
-                   block=(512, 512)) -> KernelEstimate:
-    """Dense matmul reference (cuBLAS row of the paper's tables)."""
-    bm, bn = block
-    flops = 2.0 * m_dim * k_dim * n
-    bytes_w = m_dim * k_dim * bytes_per_el * max(n // bn, 1)
-    bytes_i = k_dim * n * bytes_per_el * max(m_dim // bm, 1)
-    bytes_o = m_dim * n * bytes_per_el
-    t_comp = flops / PEAK_FLOPS
-    t_mem = (bytes_w + bytes_i + bytes_o) / HBM_BW
-    return KernelEstimate(flops, bytes_w, bytes_i, bytes_o, 1.0, 1.0,
-                          t_comp, t_mem)
-
-
-def estimate_unstructured(m_dim: int, k_dim: int, n: int, sparsity: float,
-                          *, bytes_per_el: int = 2) -> KernelEstimate:
-    """Unstructured CSR SDMM: gather-bound, no tile reuse.
-
-    Every non-zero triggers an uncoalesced row read of I (the paper's 5-9x
-    gap); model: I bytes = nnz * bn * bytes (no reuse across rows), plus
-    index reads.
-    """
-    nnz = (1.0 - sparsity) * m_dim * k_dim
-    flops = 2.0 * nnz * n
-    bytes_w = nnz * (bytes_per_el + 4)  # values + column index
-    bytes_i = nnz * n * bytes_per_el / 8  # ~1/8 cache-line utility
-    bytes_o = m_dim * n * bytes_per_el
-    # scalar-ish compute: no MXU packing for random access
-    t_comp = flops / (PEAK_FLOPS * 0.05)
-    t_mem = (bytes_w + bytes_i + bytes_o) / HBM_BW
-    return KernelEstimate(flops, bytes_w, bytes_i, bytes_o, 0.05, 1.0,
-                          t_comp, t_mem)
+__all__ = [
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "KernelEstimate",
+    "estimate_rbgp4mm",
+    "estimate_rbgp4mm_dims",
+    "estimate_dense",
+    "estimate_unstructured",
+]

@@ -6,10 +6,20 @@ human-readable tables in '#'-prefixed prose lines.
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # all tables
   PYTHONPATH=src python -m benchmarks.run --train 40 # + accuracy parity
+  PYTHONPATH=src python -m benchmarks.run --train 0 \
+      --only kernels,stacked --json BENCH_ci.json    # CI smoke subset
+
+``--json PATH`` additionally writes the rows as a ``{name: us_per_call}``
+map (plus a ``derived`` sub-map), so the perf trajectory is
+machine-readable across PRs (CI uploads ``BENCH_<rev>.json`` artifacts).
 """
 from __future__ import annotations
 
 import argparse
+import json
+
+
+SECTIONS = ("table1", "table2", "table3", "kernels", "stacked", "roofline")
 
 
 def main() -> None:
@@ -17,26 +27,65 @@ def main() -> None:
     ap.add_argument("--train", type=int, default=40,
                     help="steps for the Table-1 accuracy-parity run (0=off)")
     ap.add_argument("--dryrun-path", default="results/dryrun_optimized.jsonl")
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated subset of {SECTIONS}")
+    ap.add_argument("--json", default="",
+                    help="also write rows as a name -> us_per_call JSON map")
     args = ap.parse_args()
 
-    from . import kernel_hillclimb, roofline, table1_models, \
-        table2_sparsity_dist, table3_row_repetition
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    unknown = only - set(SECTIONS)
+    if unknown:
+        raise SystemExit(f"--only: unknown sections {sorted(unknown)}; "
+                         f"have {SECTIONS}")
+
+    def want(section: str) -> bool:
+        return not only or section in only
 
     rows: list[tuple] = []
-    print("# === Table 1 (paper: accuracy/mem/time per model x pattern) ===")
-    rows += table1_models.run(print, train_steps=args.train)
-    print("\n# === Table 2 (paper: sparsity split between G_o and G_i) ===")
-    rows += table2_sparsity_dist.run(print)
-    print("\n# === Table 3 (paper: row repetition via G_r/G_b) ===")
-    rows += table3_row_repetition.run(print)
-    print("\n# === Kernel hillclimb (EXPERIMENTS.md section Perf) ===")
-    rows += kernel_hillclimb.run(print)
-    print("\n# === Roofline (dry-run derived; see EXPERIMENTS.md) ===")
-    rows += roofline.run(print, path=args.dryrun_path)
+    if want("table1"):
+        from . import table1_models
+
+        print("# === Table 1 (paper: accuracy/mem/time per model x pattern) ===")
+        rows += table1_models.run(print, train_steps=args.train)
+    if want("table2"):
+        from . import table2_sparsity_dist
+
+        print("\n# === Table 2 (paper: sparsity split between G_o and G_i) ===")
+        rows += table2_sparsity_dist.run(print)
+    if want("table3"):
+        from . import table3_row_repetition
+
+        print("\n# === Table 3 (paper: row repetition via G_r/G_b) ===")
+        rows += table3_row_repetition.run(print)
+    if want("kernels"):
+        from . import kernel_hillclimb
+
+        print("\n# === Kernel hillclimb (EXPERIMENTS.md section Perf) ===")
+        rows += kernel_hillclimb.run(print)
+    if want("stacked"):
+        from . import stacked_experts
+
+        print("\n# === Stacked experts (masked-dense vs batched-compact) ===")
+        rows += stacked_experts.run(print)
+    if want("roofline"):
+        from . import roofline
+
+        print("\n# === Roofline (dry-run derived; see EXPERIMENTS.md) ===")
+        rows += roofline.run(print, path=args.dryrun_path)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived:.4f}")
+
+    if args.json:
+        payload = {
+            "us_per_call": {name: us for name, us, _ in rows},
+            "derived": {name: derived for name, _, derived in rows},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

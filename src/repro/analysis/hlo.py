@@ -27,7 +27,7 @@ import re
 from collections import defaultdict
 from typing import Optional
 
-__all__ = ["analyze_hlo", "HLOAnalysis"]
+__all__ = ["analyze_hlo", "HLOAnalysis", "op_result_shapes"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -382,6 +382,45 @@ def analyze_hlo(text: str) -> HLOAnalysis:
         bytes_breakdown=dict(bytes_breakdown),
         coll_breakdown=dict(coll_breakdown),
     )
+
+
+# two StableHLO result-type spellings: functional form with an explicit
+# arrow ("... : (tensor<a>, tensor<b>) -> tensor<c>") and the compact form
+# same-type ops print ("stablehlo.add %a, %b : tensor<4x8xf32>") — in both,
+# the *last* tensor type on the line is the result type
+_STABLEHLO_OP_RE = re.compile(r"=\s*stablehlo\.(\w+)\b")
+_STABLEHLO_TYPE_RE = re.compile(r"tensor<(?:([0-9]+(?:x[0-9]+)*)x)?"
+                                r"([a-z][a-z0-9]*)>")
+
+
+def op_result_shapes(text: str, kind: str) -> list[tuple[str, tuple[int, ...]]]:
+    """Result (dtype, dims) of every op of ``kind`` in an HLO/StableHLO dump.
+
+    Accepts both optimized HLO (``compiled.as_text()``) and the
+    pre-optimization StableHLO from ``lowered.as_text()`` — regression
+    tests use the latter, where layout-changing ops (e.g. the activation
+    transposes a backward pass materializes) are still explicit rather
+    than fused into dots.
+    """
+    out = []
+    for line in text.splitlines():
+        m = _OP_RE.match(line)
+        if m and m.group(3) == kind:
+            sm = _SHAPE_RE.search(m.group(2))
+            if sm:
+                out.append((
+                    sm.group(1),
+                    tuple(int(d) for d in sm.group(2).split(",") if d),
+                ))
+            continue
+        sm = _STABLEHLO_OP_RE.search(line)
+        if sm and sm.group(1) == kind:
+            types = _STABLEHLO_TYPE_RE.findall(line)
+            if types:
+                dims_s, dtype = types[-1]
+                dims = tuple(int(d) for d in dims_s.split("x") if d)
+                out.append((dtype, dims))
+    return out
 
 
 def _contracted_size(op: Op, shapes: dict) -> int:

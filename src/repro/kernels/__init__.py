@@ -1,6 +1,35 @@
 """RBGP4 Pallas kernels (TPU target, interpret-mode validated on CPU)."""
-from .rbgp4mm import KernelDims, rbgp4mm, rbgp4mm_rhs, rbgp4_sddmm
-from .ops import RBGP4Op, default_interpret
-from . import ref
+from .rbgp4mm import (
+    EPILOGUE_ACTS,
+    KernelDims,
+    kernel_dims,
+    rbgp4mm,
+    rbgp4mm_rhs,
+    rbgp4mm_rhs_stacked,
+    rbgp4_sddmm,
+    rbgp4_sddmm_rhs,
+    rbgp4_sddmm_rhs_stacked,
+)
+from .rbgp4mm import layout_cache_key
+from .ops import RBGP4Op, get_op, compact_init, default_interpret
+from . import autotune, perf_model, ref
 
-__all__ = ["KernelDims", "rbgp4mm", "rbgp4mm_rhs", "rbgp4_sddmm", "RBGP4Op", "default_interpret", "ref"]
+__all__ = [
+    "EPILOGUE_ACTS",
+    "KernelDims",
+    "kernel_dims",
+    "rbgp4mm",
+    "rbgp4mm_rhs",
+    "rbgp4mm_rhs_stacked",
+    "rbgp4_sddmm",
+    "rbgp4_sddmm_rhs",
+    "rbgp4_sddmm_rhs_stacked",
+    "RBGP4Op",
+    "get_op",
+    "compact_init",
+    "layout_cache_key",
+    "default_interpret",
+    "autotune",
+    "perf_model",
+    "ref",
+]

@@ -1,0 +1,335 @@
+"""Launch-configuration autotuner for the RBGP4 Pallas kernels.
+
+Every kernel wrapper in :mod:`repro.kernels.rbgp4mm` accepts
+``block_n="auto"`` (the default used by :class:`repro.kernels.ops.RBGP4Op`)
+which resolves here.  The tuner searches the token-tile width ``block_n``
+and the parallel-grid ordering of the RHS kernel per
+``(KernelDims, dtype, platform)`` key and memoizes the winner in
+
+  * an in-process dict (hit on every subsequent trace of the same layer),
+  * a persistent JSON cache on disk (hit across processes / restarts),
+
+so the search runs at most once per distinct kernel shape per machine.
+The cache path is ``$REPRO_AUTOTUNE_CACHE`` when set (the launch drivers
+expose ``--autotune-cache``), else ``~/.cache/repro-rbgp4/autotune.json``;
+:func:`set_cache_path` overrides it programmatically (tests).
+
+Two search modes:
+
+  * **model** (default, and the only mode off-TPU): candidates are scored
+    with the analytic roofline model in :mod:`repro.kernels.perf_model`
+    (the search previously hand-rolled in ``benchmarks/kernel_hillclimb.py``
+    — the block-N step of that hillclimb is literally this search).  The
+    model is deterministic, so CI and tests never depend on machine noise.
+  * **measure** (``REPRO_AUTOTUNE_MODE=measure``, TPU only): each feasible
+    candidate is compiled and timed on the real device (median of
+    ``MEASURE_REPS``); requires the caller to thread the concrete
+    ``adj_o`` through.  Model ties (the first-order model cannot separate
+    the two grid orders) are resolved by measurement in this mode.
+
+Candidates are pruned by a VMEM working-set bound (accumulator + double-
+buffered input/output blocks must fit), so an "auto" launch never exceeds
+the hardware even at extreme shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Callable, Optional
+
+from .perf_model import estimate_rbgp4mm_dims
+
+__all__ = [
+    "TuneResult",
+    "resolve",
+    "autotune",
+    "cache_path",
+    "set_cache_path",
+    "clear_memory_cache",
+    "candidate_block_ns",
+]
+
+# Token-tile widths considered (clipped by n and the VMEM bound).
+BLOCK_N_CANDIDATES = (128, 256, 512, 1024, 2048)
+GRID_ORDERS = ("nm", "mn")
+# Conservative per-core VMEM working-set budget: accumulator (f32) +
+# double-buffered x/w/out blocks.
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+MEASURE_REPS = 5
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """One resolved launch configuration."""
+
+    block_n: int
+    grid_order: str = "nm"
+    us_estimate: float = 0.0
+    source: str = "model"  # "model" | "measured" | "default"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TuneResult":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)
+                      if f.name in d})
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+_mem_cache: dict[str, TuneResult] = {}
+_disk_loaded = False
+_cache_path_override: Optional[str] = None
+_lock = threading.Lock()
+
+
+def cache_path() -> str:
+    if _cache_path_override is not None:
+        return _cache_path_override
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-rbgp4", "autotune.json"
+    )
+
+
+def set_cache_path(path: Optional[str]) -> None:
+    """Point the persistent cache at ``path`` (None restores the default).
+
+    Clears the in-memory cache so the next resolve re-reads from disk.
+    """
+    global _cache_path_override, _disk_loaded
+    with _lock:
+        _cache_path_override = path
+        _disk_loaded = False
+        _mem_cache.clear()
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process cache (the disk cache is untouched)."""
+    global _disk_loaded
+    with _lock:
+        _mem_cache.clear()
+        _disk_loaded = False
+
+
+def _load_disk_locked() -> None:
+    global _disk_loaded
+    if _disk_loaded:
+        return
+    _disk_loaded = True
+    try:
+        with open(cache_path()) as f:
+            data = json.load(f)
+        for key, entry in data.items():
+            _mem_cache.setdefault(key, TuneResult.from_json(entry))
+    except (OSError, ValueError, KeyError, TypeError):
+        pass  # missing / unreadable cache degrades to a fresh search
+
+
+def _store(key: str, result: TuneResult) -> None:
+    with _lock:
+        _mem_cache[key] = result
+        path = cache_path()
+        try:
+            try:
+                with open(path) as f:
+                    data = json.load(f)
+            except (OSError, ValueError):
+                data = {}
+            data[key] = result.to_json()
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=0, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            pass  # read-only FS: in-memory cache still works
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def _n_bucket(n: int) -> int:
+    """Round n up to a power of two so cache keys stay bounded."""
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+def _key(kind: str, dims, n_bucket: int, dtype: str, platform: str) -> str:
+    return (
+        f"{kind}|{platform}|{dtype}|m{dims.m}k{dims.k}"
+        f"tm{dims.tile_m}tk{dims.tile_k}G{dims.group_rows}C{dims.chunk_cols}"
+        f"do{dims.d_o}di{dims.d_i}|n{n_bucket}"
+    )
+
+
+def candidate_block_ns(dims, n: int, dtype: str) -> list[int]:
+    """Feasible block_n values: <= padded n, within the VMEM budget."""
+    el = _DTYPE_BYTES.get(dtype, 4)
+    dcols = dims.d_i * dims.chunk_cols
+    out = []
+    for bn in BLOCK_N_CANDIDATES:
+        if bn > max(_n_bucket(n), BLOCK_N_CANDIDATES[0]):
+            break
+        working_set = (
+            bn * dims.tile_m * 4                      # f32 accumulator
+            + 2 * bn * dims.tile_k * el               # x block, double-buffered
+            + 2 * dims.tile_m * dims.d_o * dcols * el  # w row strip
+            + 2 * bn * dims.tile_m * el               # out block
+        )
+        if working_set <= VMEM_BUDGET_BYTES:
+            out.append(bn)
+    if not out:
+        out = [BLOCK_N_CANDIDATES[0]]
+    return out
+
+
+def _search_model(dims, n: int, dtype: str, kind: str) -> TuneResult:
+    """Pick (block_n, grid_order) by the analytic roofline model.
+
+    The first-order traffic model cannot separate the two grid orders (both
+    move the same bytes; they differ only in which operand enjoys
+    consecutive-step block reuse), so the model path keeps the default
+    ``"nm"`` order and lets measured mode (TPU) split the tie.
+    """
+    el = _DTYPE_BYTES.get(dtype, 4)
+    cands = candidate_block_ns(dims, n, dtype)
+    if kind.startswith("sddmm"):
+        # the reduction runs over n: per-candidate traffic is bn-invariant,
+        # so take the largest feasible tile (fewest grid steps)
+        bn = cands[-1]
+        est = estimate_rbgp4mm_dims(dims, n, bytes_per_el=el, block_n=bn)
+        return TuneResult(bn, "nm", est.t_total_s * 1e6, "model")
+    best = None
+    for bn in cands:
+        est = estimate_rbgp4mm_dims(dims, n, bytes_per_el=el, block_n=bn)
+        if best is None or est.t_total_s < best[0]:
+            best = (est.t_total_s, bn)
+    return TuneResult(best[1], "nm", best[0] * 1e6, "model")
+
+
+def _search_measured(dims, n: int, dtype: str, kind: str,
+                     adj_o) -> TuneResult:
+    """Time real kernels on the current device (TPU); falls back to the
+    model when the kernels cannot be built (e.g. no adjacency supplied)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from . import rbgp4mm as K
+
+    if adj_o is None:
+        return _search_model(dims, n, dtype, kind)
+    key = jax.random.PRNGKey(0)
+    kw, kx = jax.random.split(key)
+    w = jax.random.normal(kw, (dims.m, dims.data_cols)).astype(dtype)
+    x = jax.random.normal(kx, (n, dims.k)).astype(dtype)
+    adj = jnp.asarray(adj_o)
+    best = None
+    for order in (GRID_ORDERS if kind == "rhs" else ("nm",)):
+        for bn in candidate_block_ns(dims, n, dtype):
+            if kind == "rhs":
+                fn = jax.jit(lambda x, w, _bn=bn, _o=order: K.rbgp4mm_rhs(
+                    dims, adj, x, w, block_n=_bn, grid_order=_o))
+            elif kind == "lhs":
+                fn = jax.jit(lambda x, w, _bn=bn: K.rbgp4mm(
+                    dims, adj, w, x.T, block_n=_bn))
+            elif kind == "sddmm_lhs":
+                g_lhs = jax.random.normal(kw, (dims.m, n)).astype(dtype)
+                fn = jax.jit(lambda x, w, _bn=bn: K.rbgp4_sddmm(
+                    dims, adj, g_lhs, x.T, block_n=_bn))
+            else:  # "sddmm": token-major
+                g = jax.random.normal(kw, (n, dims.m)).astype(dtype)
+                fn = jax.jit(lambda x, w, _bn=bn: K.rbgp4_sddmm_rhs(
+                    dims, adj, g, x, block_n=_bn))
+            try:
+                jax.block_until_ready(fn(x, w))  # compile + warm
+                ts = []
+                for _ in range(MEASURE_REPS):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(x, w))
+                    ts.append(time.perf_counter() - t0)
+                us = sorted(ts)[len(ts) // 2] * 1e6
+            except Exception:
+                continue
+            if best is None or us < best.us_estimate:
+                best = TuneResult(bn, order, us, "measured")
+    return best if best is not None else _search_model(dims, n, dtype, kind)
+
+
+def autotune(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
+             platform: Optional[str] = None, adj_o=None,
+             search_fn: Optional[Callable[..., TuneResult]] = None
+             ) -> TuneResult:
+    """Resolve the launch configuration for one kernel shape, cached.
+
+    Args:
+      dims: ``KernelDims`` (or any object with the same fields).
+      n: token count (bucketed to the next power of two for the cache key).
+      dtype: operand dtype name.
+      kind: "rhs" | "lhs" | "sddmm" (token-major) | "sddmm_lhs"
+        (feature-major) — distinct kernels never share cache entries.
+      platform: jax backend name; default ``jax.default_backend()``.
+      adj_o: optional concrete outer adjacency — required for measured mode.
+      search_fn: test hook replacing the search (same signature as
+        ``_search_model``).
+    """
+    if platform is None:
+        import jax
+
+        platform = jax.default_backend()
+    nb = _n_bucket(n)
+    key = _key(kind, dims, nb, dtype, platform)
+    with _lock:
+        hit = _mem_cache.get(key)
+        if hit is None:
+            _load_disk_locked()
+            hit = _mem_cache.get(key)
+    if hit is not None:
+        # validate against the *current* candidate set: a hand-edited /
+        # corrupt / cross-version disk entry must trigger a re-search, not
+        # a bad launch (block_n=0 would divide-by-zero deep in a forward)
+        if (hit.grid_order in GRID_ORDERS
+                and hit.block_n in candidate_block_ns(dims, nb, dtype)):
+            return hit
+        with _lock:
+            _mem_cache.pop(key, None)
+    if search_fn is not None:
+        result = search_fn(dims, nb, dtype, kind)
+    elif (platform == "tpu"
+          and os.environ.get("REPRO_AUTOTUNE_MODE") == "measure"):
+        result = _search_measured(dims, nb, dtype, kind, adj_o)
+    else:
+        result = _search_model(dims, nb, dtype, kind)
+    _store(key, result)
+    return result
+
+
+def resolve(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
+            interpret: bool = False, platform: Optional[str] = None,
+            adj_o=None) -> TuneResult:
+    """The entry point ``block_n="auto"`` goes through (see rbgp4mm.py).
+
+    Interpret-mode launches key the cache under platform "interpret": the
+    VMEM bound still applies (the config must be valid when the same trace
+    later compiles natively) but results never pollute real-device entries.
+    The kernel wrappers thread their concrete ``adj_o`` through so measured
+    mode can build real kernels.
+    """
+    if interpret:
+        platform = "interpret"
+    return autotune(dims, n, dtype=dtype, kind=kind, platform=platform,
+                    adj_o=adj_o)

@@ -40,7 +40,15 @@ def main():
                          "('auto': compact storage, pallas-on-TPU)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune-cache", default="",
+                    help="persistent kernel-autotune cache path (resolves "
+                         "block_n='auto' for the compact/pallas backends)")
     args = ap.parse_args()
+
+    if args.autotune_cache:
+        from repro.kernels import autotune
+
+        autotune.set_cache_path(args.autotune_cache)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -110,7 +110,16 @@ def main():
     ap.add_argument("--simulate-failure", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--autotune-cache", default="",
+                    help="persistent kernel-autotune cache path (resolves "
+                         "block_n='auto' for the compact/pallas backends; "
+                         "default ~/.cache/repro-rbgp4/autotune.json)")
     args = ap.parse_args()
+
+    if args.autotune_cache:
+        from repro.kernels import autotune
+
+        autotune.set_cache_path(args.autotune_cache)
 
     cfg, model, loss_fn, params, tcfg, data = build(args)
     print(f"arch={cfg.name} params={model.n_params():,} "

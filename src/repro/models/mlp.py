@@ -1,9 +1,18 @@
-"""Gated MLPs (SwiGLU / GeGLU) with SparseLinear projections."""
+"""Gated MLPs (SwiGLU / GeGLU) with SparseLinear projections.
+
+The gate projection requests its activation as a fused kernel epilogue
+(``fuse=act``): on epilogue-capable backends (pallas) the activation runs
+on the matmul's f32 accumulator before the single write-back, so the layer
+emits no separate XLA activation op; other backends get identical math as
+ordinary ops.  Activations outside ``EPILOGUE_ACTS`` (e.g. relu2) fall
+back to the unfused path automatically.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import EPILOGUE_ACTS
 from repro.parallel.constrain import shard
 from repro.sparsity import SparseLinear, SparsityConfig
 
@@ -29,6 +38,8 @@ class GatedMLP:
         name: str = "mlp",
     ):
         self.act = ACTS[act]
+        self.act_name = act
+        self.fuse = act if act in EPILOGUE_ACTS else None
         self.gate = SparseLinear(d_model, d_ff, sparsity, name=f"{name}.gate")
         self.up = SparseLinear(d_model, d_ff, sparsity, name=f"{name}.up")
         self.down = SparseLinear(d_ff, d_model, sparsity, name=f"{name}.down")
@@ -42,8 +53,9 @@ class GatedMLP:
         }
 
     def apply(self, params, x):
-        h = self.act(self.gate.apply(params["gate"], x)) * self.up.apply(
-            params["up"], x
-        )
+        g = self.gate.apply(params["gate"], x, fuse=self.fuse)
+        if self.fuse is None:
+            g = self.act(g)
+        h = g * self.up.apply(params["up"], x)
         h = shard(h, "dp", None, "tp")
         return shard(self.down.apply(params["down"], h), "dp", None, None)

@@ -12,9 +12,19 @@ this change.  A shard_map formulation hit an XLA:CPU AllReducePromotion
 crash under scan+remat, so grouped-pjit it is — and it needs no manual
 collectives at all.)
 
-Expert weights support the paper's technique in 'masked' form: one RBGP4
-mask shared across experts of a layer (cloned-mask EP keeps the succinct
-storage property: one base-graph set per layer, not per expert).
+Expert weights support the paper's technique in two storage forms, both
+sharing one RBGP4 mask across the experts of a layer (cloned-mask EP keeps
+the succinct storage property: one base-graph set per layer, not per
+expert):
+
+  * **masked** (``backend="xla_masked"``, the default): dense (E, M, K)
+    values under the broadcast mask — E dense masked einsums;
+  * **compact** (``backend="auto"``/``"pallas"``/``"xla_compact"``):
+    ``CompactWeight`` with stacked (E, M, nnz_row) values and one shared
+    layout, applied through ``sparse_linear_batched`` — on the pallas
+    backend that is ONE stacked-grid Pallas kernel launch per projection
+    for all experts (grid ``(expert, token-tile, row-tile, k)``), with the
+    gate activation fused into the kernel epilogue.
 """
 from __future__ import annotations
 
@@ -27,8 +37,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MoEConfig
+from repro.kernels import EPILOGUE_ACTS
 from repro.parallel.constrain import current_mesh, shard
-from repro.sparsity import MaskedWeight, SparsityConfig, make_pattern
+from repro.sparsity import (
+    CompactWeight,
+    MaskedWeight,
+    SparsityConfig,
+    make_pattern,
+    sparse_linear_batched,
+    storage_kind,
+)
 from .mlp import ACTS, GatedMLP
 
 __all__ = ["StackedExperts", "MoELayer"]
@@ -56,14 +74,25 @@ class StackedExperts:
         self.d = d_model
         self.h = d_expert
         self.act = ACTS[act]
+        self.act_name = act
         self.sparsity = sparsity
-        self.masked = sparsity.applies_to(d_expert, d_model) and \
+        self.backend = sparsity.backend
+        applies = sparsity.applies_to(d_expert, d_model) and \
             sparsity.pattern != "dense"
-        if self.masked:
-            if sparsity.pattern != "rbgp4":
-                raise NotImplementedError("stacked experts support rbgp4/dense")
+        if applies and sparsity.pattern != "rbgp4":
+            raise NotImplementedError("stacked experts support rbgp4/dense")
+        # storage kind follows the configured backend's capabilities, as in
+        # SparseLinear: masked = dense (E, M, K) values under the broadcast
+        # mask; compact = stacked (E, M, nnz_row) CompactWeight run through
+        # the batched kernels
+        self.storage = storage_kind(
+            sparsity.backend, has_layout=True) if applies else "dense"
+        self.masked = self.storage == "masked"
+        self.compact = self.storage == "compact"
+        if applies:
             self.pat_in = make_pattern(sparsity, d_expert, d_model)
             self.pat_out = make_pattern(sparsity, d_model, d_expert)
+        if self.masked:
             # one factor-array set per pattern, shared by gate and up (the
             # succinct-storage story: one base-graph sample per layer)
             mk = lambda pat: (jnp.asarray(pat.layout.graph_o.biadjacency),
@@ -87,8 +116,23 @@ class StackedExperts:
             chunk_cols=pat.layout.spec.chunk_cols,
         )
 
+    def _init_compact(self, key, pat) -> CompactWeight:
+        """Stacked (E, M, nnz_row) compact values sharing one layout."""
+        from repro.kernels import compact_init
+
+        lay = pat.layout
+        return CompactWeight(
+            w_data=compact_init(key, lay, lead=(self.e,)), layout=lay
+        )
+
     def init(self, key) -> dict:
         ks = jax.random.split(key, 3)
+        if self.compact:
+            return {
+                "gate": self._init_compact(ks[0], self.pat_in),
+                "up": self._init_compact(ks[1], self.pat_in),
+                "down": self._init_compact(ks[2], self.pat_out),
+            }
         dens = 1.0 - (self.sparsity.sparsity if self.masked else 0.0)
         s_in = (2.0 / (self.d * dens)) ** 0.5
         s_out = (2.0 / (self.h * dens)) ** 0.5
@@ -125,6 +169,8 @@ class StackedExperts:
 
     def apply(self, params, xe: jax.Array) -> jax.Array:
         """xe: (G, E, C, D) -> (G, E, C, D)."""
+        if self.compact:
+            return self._apply_compact(params, xe)
         dt = xe.dtype
         params = self.coerce(params)
         if self.masked:
@@ -141,6 +187,27 @@ class StackedExperts:
         h = h * jnp.einsum("gecd,ehd->gech", xe, wu)
         h = shard(h, "dp", "tp", None, None)
         return jnp.einsum("gech,edh->gecd", h, wd)
+
+    def _apply_compact(self, params, xe: jax.Array) -> jax.Array:
+        """Batched-compact path: one stacked kernel launch per projection.
+
+        The expert dim moves to the front ((E, G*C, D) token-major
+        buffers), all three projections run through
+        ``sparse_linear_batched`` (pallas: the stacked-grid kernel; the
+        gate activation is fused into its epilogue), and the result is
+        reshaped back to the router's (G, E, C, D) buffer layout.
+        """
+        gn, e, cc, d = xe.shape
+        x2 = jnp.moveaxis(xe, 1, 0).reshape(e, gn * cc, d)
+        fuse = self.act_name if self.act_name in EPILOGUE_ACTS else None
+        be = self.backend
+        g = sparse_linear_batched(params["gate"], x2, backend=be, fuse=fuse)
+        if fuse is None:
+            g = self.act(g)
+        h = g * sparse_linear_batched(params["up"], x2, backend=be)
+        h = shard(h, "tp", None, None)  # expert dim on the EP axis
+        y = sparse_linear_batched(params["down"], h, backend=be)
+        return jnp.moveaxis(y.reshape(e, gn, cc, d), 0, 1)
 
 
 class MoELayer:
@@ -199,7 +266,10 @@ class MoELayer:
         G = 1.
         """
         mesh = current_mesh()
-        if mesh is not None and "model" in mesh.axis_names:
+        # the manual shard_map path materializes masked weights; compact
+        # storage runs the batched kernel under the pure-pjit formulation
+        if mesh is not None and "model" in mesh.axis_names \
+                and not self.experts.compact:
             dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
             ndp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
             T = x.shape[0] * x.shape[1]

@@ -13,6 +13,7 @@ from .api import (
     MaskedWeight,
     CompactWeight,
     sparse_linear,
+    sparse_linear_batched,
     sparse_matmul,
     dense_weight,
     expand_rbgp4_mask,
@@ -24,6 +25,6 @@ __all__ = [
     "BackendCapabilities", "SparseBackend", "register_backend", "get_backend",
     "available_backends", "resolve_backend", "storage_kind",
     "SparseWeight", "DenseWeight", "MaskedWeight", "CompactWeight",
-    "sparse_linear", "sparse_matmul", "dense_weight",
+    "sparse_linear", "sparse_linear_batched", "sparse_matmul", "dense_weight",
     "SparseLinear", "expand_rbgp4_mask",
 ]

@@ -35,16 +35,33 @@ values are stored*:
                    CPU, native on TPU).
 
 Each backend declares :class:`BackendCapabilities` (needs_layout,
-compact_storage, grad_support, platforms) so callers can filter with
-:func:`available_backends` and new formats/kernels (blocked-CSR, Triton,
-quantized storage) can be added with :func:`register_backend` without
-touching any model file.
+compact_storage, grad_support, platforms, epilogue, batched) so callers can
+filter with :func:`available_backends` and new formats/kernels
+(blocked-CSR, Triton, quantized storage) can be added with
+:func:`register_backend` without touching any model file.
 
 The functional entry points :func:`sparse_linear` (token-major
 ``y = x @ W_s^T``) and :func:`sparse_matmul` (feature-major
 ``O = W_s @ I``) dispatch on ``(weight type, backend name)``;
 ``backend="auto"`` selects pallas on TPU and xla_compact elsewhere for
 compact storage, xla_masked for masked storage.
+
+Two capability-gated extensions (both degrade gracefully — callers write
+one code path and backends that lack the capability get the same math as
+separate XLA ops):
+
+  * **epilogue** — ``sparse_linear(w, x, fuse="silu", residual=r)``
+    computes ``y = act(x @ W_s^T + b) + r``.  Backends declaring
+    ``epilogue`` (pallas) fuse bias/activation/residual into the kernel's
+    f32-accumulator write-back; others apply them as ordinary ops after
+    ``linear``.  ``fuse`` names must come from
+    :data:`repro.kernels.EPILOGUE_ACTS`.
+  * **batched** — :func:`sparse_linear_batched` runs E stacked experts
+    ``x (E, ..., K) -> (E, ..., M)`` against weights whose leaves carry a
+    leading expert dim.  Backends declaring ``batched`` execute all
+    experts at once (pallas: ONE stacked-grid kernel launch; xla_*: one
+    einsum / vmapped gather); the cloned-mask expert-parallel storage
+    story means a stacked ``CompactWeight`` still carries a single layout.
 """
 from __future__ import annotations
 
@@ -57,7 +74,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import RBGP4Layout
-from repro.kernels import RBGP4Op
+from repro.kernels import EPILOGUE_ACTS, get_op
 from repro.kernels import ref as kref
 
 __all__ = [
@@ -73,6 +90,7 @@ __all__ = [
     "MaskedWeight",
     "CompactWeight",
     "sparse_linear",
+    "sparse_linear_batched",
     "sparse_matmul",
     "dense_weight",
     "expand_rbgp4_mask",
@@ -233,12 +251,19 @@ class BackendCapabilities:
     compact_storage: consumes CompactWeight (2|E| values, no dense W).
     grad_support:    differentiable (autodiff or custom VJP).
     platforms:       jax backends the implementation runs on.
+    epilogue:        fuses bias/activation/residual into the kernel
+                     (implements ``linear_fused``); without it the
+                     dispatchers apply the epilogue as separate ops.
+    batched:         executes stacked expert weights (leading E dim) in
+                     one launch (implements ``linear_batched``).
     """
 
     needs_layout: bool = False
     compact_storage: bool = False
     grad_support: bool = True
     platforms: tuple[str, ...] = ("cpu", "gpu", "tpu")
+    epilogue: bool = False
+    batched: bool = False
 
     def supports_platform(self, platform: str) -> bool:
         return platform in self.platforms
@@ -251,6 +276,16 @@ class SparseBackend(Protocol):
     ``linear`` is token-major (``x`` (..., K) -> (..., M)); ``matmul`` is
     the paper's feature-major SDMM (``x`` (K, N) -> (M, N)).  Both operate
     on *unbiased* weights — bias is applied by the dispatchers.
+
+    Capability-gated optional methods (only called when the matching
+    capability is declared):
+
+      ``linear_fused(weight, x, *, fuse, residual)``  [epilogue] — applies
+        bias + activation + residual inside the kernel; the dispatcher
+        skips its own bias/act/residual ops.
+      ``linear_batched(weight, x)``  [batched] — stacked experts, ``x``
+        (E, N, K) -> (E, N, M); epilogue-capable backends also accept
+        ``fuse=`` here.
     """
 
     name: str
@@ -295,6 +330,8 @@ def available_backends(
     needs_layout: Optional[bool] = None,
     compact_storage: Optional[bool] = None,
     grad_support: Optional[bool] = None,
+    epilogue: Optional[bool] = None,
+    batched: Optional[bool] = None,
 ) -> list[str]:
     """Backend names filtered by capability / platform / weight type."""
     out = []
@@ -307,6 +344,10 @@ def available_backends(
         if compact_storage is not None and caps.compact_storage != compact_storage:
             continue
         if grad_support is not None and caps.grad_support != grad_support:
+            continue
+        if epilogue is not None and caps.epilogue != epilogue:
+            continue
+        if batched is not None and caps.batched != batched:
             continue
         if weight is not None:
             wtype = weight if isinstance(weight, type) else type(weight)
@@ -369,15 +410,73 @@ def resolve_backend(weight: SparseWeight, backend: str = "auto") -> SparseBacken
 # functional entry points
 # ---------------------------------------------------------------------------
 
+def _check_fuse(fuse: Optional[str]) -> None:
+    if fuse is not None and fuse not in EPILOGUE_ACTS:
+        raise ValueError(
+            f"fuse {fuse!r} not a fusable activation "
+            f"{sorted(EPILOGUE_ACTS)}; apply it outside sparse_linear"
+        )
+
+
 def sparse_linear(weight: SparseWeight, x: jax.Array, *,
-                  backend: str = "auto", dtype=None) -> jax.Array:
-    """y = x @ W_s^T (+ b); x (..., K) token-major -> (..., M)."""
+                  backend: str = "auto", dtype=None,
+                  fuse: Optional[str] = None,
+                  residual: Optional[jax.Array] = None) -> jax.Array:
+    """y = act(x @ W_s^T + b) + residual; x (..., K) token-major -> (..., M).
+
+    ``fuse`` (a key of ``repro.kernels.EPILOGUE_ACTS``) and ``residual``
+    are executed inside the kernel epilogue on backends declaring the
+    ``epilogue`` capability, and as ordinary XLA ops otherwise — the math
+    (and gradients) are identical either way.
+    """
+    _check_fuse(fuse)
     dtype = dtype or x.dtype
     be = resolve_backend(weight, backend)
-    y = be.linear(weight, x.astype(dtype))
+    xc = x.astype(dtype)
+    if be.capabilities.epilogue and (
+            fuse is not None or residual is not None or weight.b is not None):
+        return be.linear_fused(weight, xc, fuse=fuse, residual=residual)
+    y = be.linear(weight, xc)
     if weight.b is not None:
         y = y + weight.b.astype(dtype)
+    if fuse is not None:
+        y = EPILOGUE_ACTS[fuse](y)
+    if residual is not None:
+        y = y + residual.astype(dtype)
     return y
+
+
+def sparse_linear_batched(weight: SparseWeight, x: jax.Array, *,
+                          backend: str = "auto", dtype=None,
+                          fuse: Optional[str] = None) -> jax.Array:
+    """Stacked-expert linear: x (E, ..., K) -> (E, ..., M).
+
+    ``weight`` leaves carry a leading expert dim (e.g. ``w_data``
+    (E, M, nnz_row) with one shared layout — cloned-mask EP); bias, when
+    present, is (E, M).  Dispatches to the backend's ``linear_batched``
+    (pallas: one stacked-grid Pallas launch for all experts).
+    """
+    _check_fuse(fuse)
+    dtype = dtype or x.dtype
+    be = resolve_backend(weight, backend)
+    caps = be.capabilities
+    if not caps.batched:
+        raise NotImplementedError(
+            f"backend {be.name!r} does not declare the 'batched' "
+            f"capability; available: {available_backends(batched=True)}"
+        )
+    e = x.shape[0]
+    batch_shape = x.shape[1:-1]
+    x3 = x.astype(dtype).reshape(e, -1, x.shape[-1])
+    if caps.epilogue:
+        y = be.linear_batched(weight, x3, fuse=fuse)
+    else:
+        y = be.linear_batched(weight, x3)
+        if weight.b is not None:
+            y = y + weight.b.astype(dtype)[:, None, :]
+        if fuse is not None:
+            y = EPILOGUE_ACTS[fuse](y)
+    return y.reshape(e, *batch_shape, y.shape[-1])
 
 
 def sparse_matmul(weight: SparseWeight, x: jax.Array, *,
@@ -402,6 +501,10 @@ def dense_weight(weight: SparseWeight, dtype=None) -> jax.Array:
         w_data = weight.w_data
         if dtype is not None:
             w_data = w_data.astype(dtype)
+        if w_data.ndim == 3:  # stacked experts: (E, M, nnz_row)
+            return jax.vmap(
+                functools.partial(kref.unpack_dense, weight.layout)
+            )(w_data)
         return kref.unpack_dense(weight.layout, w_data)
     raise TypeError(f"not a SparseWeight: {type(weight).__name__}")
 
@@ -419,7 +522,7 @@ class RefBackend:
     """
 
     name = "ref"
-    capabilities = BackendCapabilities()
+    capabilities = BackendCapabilities(batched=True)
     accepts = (DenseWeight, MaskedWeight, CompactWeight)
 
     def linear(self, weight, x):
@@ -428,12 +531,15 @@ class RefBackend:
     def matmul(self, weight, x):
         return dense_weight(weight, x.dtype) @ x
 
+    def linear_batched(self, weight, x):
+        return jnp.einsum("enk,emk->enm", x, dense_weight(weight, x.dtype))
+
 
 class XlaMaskedBackend:
     """(W * mask) @ x — the paper-faithful predefined-sparsity training path."""
 
     name = "xla_masked"
-    capabilities = BackendCapabilities()
+    capabilities = BackendCapabilities(batched=True)
     accepts = (MaskedWeight,)
 
     def linear(self, weight, x):
@@ -441,6 +547,10 @@ class XlaMaskedBackend:
 
     def matmul(self, weight, x):
         return weight.materialize(x.dtype) @ x
+
+    def linear_batched(self, weight, x):
+        # w (E, M, K); the (M, K) mask broadcasts over the expert dim
+        return jnp.einsum("enk,emk->enm", x, weight.materialize(x.dtype))
 
 
 class XlaCompactBackend:
@@ -452,7 +562,9 @@ class XlaCompactBackend:
     """
 
     name = "xla_compact"
-    capabilities = BackendCapabilities(needs_layout=True, compact_storage=True)
+    capabilities = BackendCapabilities(
+        needs_layout=True, compact_storage=True, batched=True
+    )
     accepts = (CompactWeight,)
 
     def linear(self, weight, x):
@@ -467,34 +579,50 @@ class XlaCompactBackend:
             weight.layout, weight.w_data.astype(x.dtype), x
         )
 
+    def linear_batched(self, weight, x):
+        lay = weight.layout
+        return jax.vmap(
+            functools.partial(kref.compact_gather_mm_rhs, lay)
+        )(weight.w_data.astype(x.dtype), x)
+
 
 class PallasBackend:
     """RBGP4MM Pallas kernels (custom VJP); interpret-mode off-TPU.
 
-    ``RBGP4Op`` construction (transpose layout + slot permutation) is
-    cached per layout so repeated dispatches are free.
+    ``RBGP4Op`` construction (transpose layout + slot permutation) rides
+    the module-level :func:`repro.kernels.get_op` cache keyed on layout
+    identity, so repeated dispatches — and re-traces under jit/scan —
+    never rebuild static kernel metadata.  Declares ``epilogue``
+    (bias/act/residual fused into the kernel write-back) and ``batched``
+    (one stacked-grid launch for E experts); ``block_n="auto"`` resolves
+    through the autotuner cache per (dims, dtype, platform).
     """
 
     name = "pallas"
     capabilities = BackendCapabilities(
-        needs_layout=True, compact_storage=True, platforms=("cpu", "tpu")
+        needs_layout=True, compact_storage=True, platforms=("cpu", "tpu"),
+        epilogue=True, batched=True,
     )
     accepts = (CompactWeight,)
 
-    def __init__(self):
-        self._ops: dict[RBGP4Layout, RBGP4Op] = {}
-
-    def _op(self, layout: RBGP4Layout) -> RBGP4Op:
-        op = self._ops.get(layout)
-        if op is None:
-            op = self._ops[layout] = RBGP4Op(layout)
-        return op
-
     def linear(self, weight, x):
-        return self._op(weight.layout).linear(x, weight.w_data.astype(x.dtype))
+        return get_op(weight.layout).linear(x, weight.w_data.astype(x.dtype))
+
+    def linear_fused(self, weight, x, *, fuse=None, residual=None):
+        b = weight.b.astype(x.dtype) if weight.b is not None else None
+        return get_op(weight.layout).linear(
+            x, weight.w_data.astype(x.dtype),
+            bias=b, fuse=fuse, residual=residual,
+        )
+
+    def linear_batched(self, weight, x, *, fuse=None):
+        b = weight.b.astype(x.dtype) if weight.b is not None else None
+        return get_op(weight.layout).linear_stacked(
+            x, weight.w_data.astype(x.dtype), bias=b, fuse=fuse
+        )
 
     def matmul(self, weight, x):
-        return self._op(weight.layout).matmul(
+        return get_op(weight.layout).matmul(
             weight.w_data.astype(x.dtype), x
         )
 

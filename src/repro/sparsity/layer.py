@@ -138,11 +138,19 @@ class SparseLinear:
 
     # -- apply ------------------------------------------------------------------
     def apply(self, params: Union[SparseWeight, dict], x: jax.Array, *,
-              dtype=None) -> jax.Array:
-        """x: (..., in_features) -> (..., out_features)."""
+              dtype=None, fuse: Optional[str] = None,
+              residual: Optional[jax.Array] = None) -> jax.Array:
+        """x: (..., in_features) -> (..., out_features).
+
+        ``fuse``/``residual`` request the in-kernel epilogue
+        ``y = act(xW^T + b) + residual`` (see ``api.sparse_linear``);
+        backends without the epilogue capability get identical math as
+        separate ops.
+        """
         weight = self._coerce(params)
         return sparse_linear(
-            weight, x, backend=self.backend_name, dtype=dtype or x.dtype
+            weight, x, backend=self.backend_name, dtype=dtype or x.dtype,
+            fuse=fuse, residual=residual,
         )
 
     # -- dense view (tests / export) ---------------------------------------------

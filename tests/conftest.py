@@ -1,0 +1,28 @@
+"""Shared test fixtures."""
+import os
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _isolated_autotune_cache(tmp_path_factory):
+    """Keep the kernel autotuner's persistent cache out of ~/.cache.
+
+    ``block_n="auto"`` is the default, so any test tracing a Pallas-backed
+    sparse layer resolves through :mod:`repro.kernels.autotune` and would
+    otherwise create/mutate the developer's real on-disk cache.  The env
+    var is the lowest-priority path source, so tests that call
+    ``set_cache_path`` (test_autotune) still layer on top and restore to
+    this isolated file, never the real one.
+    """
+    path = tmp_path_factory.mktemp("autotune") / "autotune.json"
+    old = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = str(path)
+    from repro.kernels import autotune
+
+    autotune.clear_memory_cache()
+    yield
+    if old is None:
+        os.environ.pop("REPRO_AUTOTUNE_CACHE", None)
+    else:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = old

@@ -1,0 +1,146 @@
+"""Autotuner: search, persistent cache round-trip, block_n="auto" wiring."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RBGP4Layout, RBGP4Spec
+from repro.kernels import KernelDims, autotune, rbgp4mm_rhs, ref
+
+
+@pytest.fixture(autouse=True)
+def isolated_cache(tmp_path):
+    """Point the persistent cache at a per-test file; restore after."""
+    autotune.set_cache_path(str(tmp_path / "autotune.json"))
+    yield
+    autotune.set_cache_path(None)
+
+
+def make_dims(m=64, k=64, G=4, C=4, ui=4, vi=4, sp_o=0.5, sp_i=0.5, seed=0):
+    spec = RBGP4Spec(
+        g_o=(m // (ui * G), k // (vi * C)),
+        g_r=(G, C), g_i=(ui, vi), g_b=(1, 1),
+        sp_o=sp_o, sp_i=sp_i, seed=seed,
+    )
+    return RBGP4Layout(spec)
+
+
+def test_model_search_returns_feasible_block_n():
+    lay = make_dims()
+    dims = KernelDims.from_layout(lay)
+    res = autotune.autotune(dims, 4096, dtype="bfloat16", kind="rhs",
+                            platform="testplat")
+    assert res.block_n in autotune.BLOCK_N_CANDIDATES
+    assert res.grid_order in autotune.GRID_ORDERS
+    assert res.block_n in autotune.candidate_block_ns(dims, 4096, "bfloat16")
+
+
+def test_cache_roundtrip_and_no_research():
+    """Second resolve is a cache hit; a fresh process (simulated by clearing
+    the in-memory cache) reads the on-disk entry without re-searching."""
+    lay = make_dims(seed=1)
+    dims = KernelDims.from_layout(lay)
+    calls = []
+
+    def counting_search(d, n, dtype, kind):
+        calls.append((kind, n))
+        return autotune.TuneResult(256, "nm", 1.0, "model")
+
+    r1 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                           platform="testplat", search_fn=counting_search)
+    assert len(calls) == 1 and r1.block_n == 256
+    # same key: in-memory hit, search not consulted
+    r2 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                           platform="testplat", search_fn=counting_search)
+    assert len(calls) == 1 and r2 == r1
+    # the entry is on disk
+    with open(autotune.cache_path()) as f:
+        disk = json.load(f)
+    assert any(v["block_n"] == 256 for v in disk.values())
+    # "new process": memory dropped, disk consulted, still no re-search
+    autotune.clear_memory_cache()
+    r3 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                           platform="testplat", search_fn=counting_search)
+    assert len(calls) == 1 and r3 == r1
+
+
+def test_distinct_keys_search_separately():
+    lay = make_dims(seed=2)
+    dims = KernelDims.from_layout(lay)
+    calls = []
+
+    def counting_search(d, n, dtype, kind):
+        calls.append((kind, dtype, n))
+        return autotune.TuneResult(128, "nm", 1.0, "model")
+
+    for dtype in ("float32", "bfloat16"):
+        for kind in ("rhs", "sddmm"):
+            autotune.autotune(dims, 256, dtype=dtype, kind=kind,
+                              platform="testplat", search_fn=counting_search)
+    assert len(calls) == 4
+    # n buckets: 100 and 128 share a bucket -> one entry
+    autotune.autotune(dims, 100, dtype="float32", kind="lhs",
+                      platform="testplat", search_fn=counting_search)
+    autotune.autotune(dims, 128, dtype="float32", kind="lhs",
+                      platform="testplat", search_fn=counting_search)
+    assert len(calls) == 5
+
+
+def test_block_n_auto_resolves_through_kernel(monkeypatch):
+    """block_n="auto" (the RBGP4Op default) drives the kernel through the
+    autotuner cache and still matches the oracle."""
+    lay = make_dims(m=64, k=128, C=8, vi=2, seed=3)
+    dims = KernelDims.from_layout(lay)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(k1, lay.data_shape, jnp.float32)
+    x = jax.random.normal(k2, (24, 128), jnp.float32)
+    y = rbgp4mm_rhs(dims, jnp.asarray(lay.adj_o), x, w, interpret=True)
+    want = ref.ref_rbgp4mm(lay, w, x.T).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # the resolve landed in the interpret-platform cache
+    autotune_key_hits = [
+        k for k in json.load(open(autotune.cache_path()))
+        if "|interpret|" in k
+    ]
+    assert autotune_key_hits
+
+    # second call: resolve must be a pure cache hit (search forbidden)
+    def boom(*a, **kw):
+        raise AssertionError("re-search after cache hit")
+
+    monkeypatch.setattr(autotune, "_search_model", boom)
+    y2 = rbgp4mm_rhs(dims, jnp.asarray(lay.adj_o), x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y))
+
+
+def test_unwritable_cache_degrades_gracefully():
+    autotune.set_cache_path("/proc/definitely/not/writable/cache.json")
+    try:
+        lay = make_dims(seed=4)
+        dims = KernelDims.from_layout(lay)
+        res = autotune.autotune(dims, 256, dtype="float32", kind="rhs",
+                                platform="testplat")
+        assert res.block_n >= 128
+    finally:
+        autotune.set_cache_path(None)
+
+
+def test_vmem_bound_prunes_huge_tiles():
+    # tall tiles: tile_m = 64*16 = 1024 rows -> 2048-wide token tiles would
+    # blow the acc budget
+    lay = make_dims(m=4096, k=4096, G=16, C=128, ui=4, vi=4, sp_o=0.75,
+                    sp_i=0.0, seed=5)
+    dims = KernelDims.from_layout(lay)
+    cands = autotune.candidate_block_ns(dims, 1 << 16, "bfloat16")
+    assert cands
+    for bn in cands:
+        working = (bn * dims.tile_m * 4
+                   + 2 * bn * dims.tile_k * 2
+                   + 2 * dims.tile_m * dims.d_o * dims.d_i
+                   * dims.chunk_cols * 2
+                   + 2 * bn * dims.tile_m * 2)
+        assert working <= autotune.VMEM_BUDGET_BYTES
