@@ -19,7 +19,8 @@ import argparse
 import json
 
 
-SECTIONS = ("table1", "table2", "table3", "kernels", "stacked", "roofline")
+SECTIONS = ("table1", "table2", "table3", "kernels", "stacked", "serve",
+            "roofline")
 
 
 def main() -> None:
@@ -68,6 +69,11 @@ def main() -> None:
 
         print("\n# === Stacked experts (masked-dense vs batched-compact) ===")
         rows += stacked_experts.run(print)
+    if want("serve"):
+        from . import serve_engine
+
+        print("\n# === Serving (static vs continuous batching, paged KV) ===")
+        rows += serve_engine.run(print)
     if want("roofline"):
         from . import roofline
 

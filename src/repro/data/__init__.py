@@ -1,3 +1,10 @@
-from .synthetic import TokenStream, GaussianClassImages, Prefetcher, host_shard
+from .synthetic import (
+    GaussianClassImages,
+    Prefetcher,
+    RequestStream,
+    TokenStream,
+    host_shard,
+)
 
-__all__ = ["TokenStream", "GaussianClassImages", "Prefetcher", "host_shard"]
+__all__ = ["TokenStream", "GaussianClassImages", "Prefetcher", "host_shard",
+           "RequestStream"]

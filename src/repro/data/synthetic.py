@@ -22,7 +22,8 @@ from typing import Iterator, Optional
 import jax
 import numpy as np
 
-__all__ = ["TokenStream", "GaussianClassImages", "Prefetcher", "host_shard"]
+__all__ = ["TokenStream", "GaussianClassImages", "Prefetcher", "host_shard",
+           "RequestStream"]
 
 
 def host_shard(global_batch: int, process_index: Optional[int] = None,
@@ -74,6 +75,50 @@ class TokenStream:
         while True:
             yield {"tokens": self.batch_at(step)}
             step += 1
+
+
+class RequestStream:
+    """Deterministic serving workload: mixed-length requests with arrivals.
+
+    Emits the request dicts the serving engines consume
+    (``repro.serve``): prompts use the same affine-recurrence token
+    process as :class:`TokenStream` (so served models see in-distribution
+    inputs), prompt/generation lengths are drawn from small fixed menus
+    (bounding the set of prefill shapes the engines must compile), and
+    ``arrival_step`` spaces requests by a geometric inter-arrival gap —
+    ``arrival_rate == 0`` means everything arrives up front (offline /
+    batch mode).
+    """
+
+    def __init__(self, vocab: int, n_requests: int,
+                 prompt_lens: tuple[int, ...] = (8, 16, 24, 32),
+                 gen_lens: tuple[int, ...] = (4, 8, 16, 32),
+                 n_codebooks: int = 1, seed: int = 0,
+                 arrival_rate: float = 0.0):
+        self.vocab = vocab
+        self.n = n_requests
+        self.prompt_lens = tuple(prompt_lens)
+        self.gen_lens = tuple(gen_lens)
+        self.ncb = n_codebooks
+        self.seed = seed
+        self.arrival_rate = arrival_rate
+
+    def requests(self) -> list[dict]:
+        """[{'rid', 'prompt' (S[, n_cb]) int32, 'max_new_tokens',
+        'arrival_step'}], sorted by arrival."""
+        rng = np.random.default_rng((self.seed, 7))
+        ts = TokenStream(self.vocab, 1, max(self.prompt_lens),
+                         n_codebooks=self.ncb, seed=self.seed)
+        out, step = [], 0
+        for i in range(self.n):
+            S = int(rng.choice(self.prompt_lens))
+            gen = int(rng.choice(self.gen_lens))
+            prompt = ts.batch_at(i)[0, :S]
+            out.append({"rid": i, "prompt": prompt.astype(np.int32),
+                        "max_new_tokens": gen, "arrival_step": step})
+            if self.arrival_rate > 0:
+                step += int(rng.geometric(min(self.arrival_rate, 1.0)))
+        return out
 
 
 class GaussianClassImages:

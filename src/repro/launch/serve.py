@@ -1,13 +1,24 @@
-"""Batched serving driver: prefill + decode loop with KV caches.
+"""Serving driver: thin CLI over the repro.serve engines.
 
-Runs a small model end-to-end on local devices: builds a batch of prompts,
-prefills, then decodes N tokens per request with greedy/temperature
-sampling, reporting tokens/sec.  The same prefill/decode step functions are
-the ones the dry-run lowers at production shapes.
+Two engines (see src/repro/serve/README.md for the tradeoffs):
 
-Example:
+  * ``--engine continuous`` (default): continuous batching with a paged KV
+    cache — requests are admitted mid-flight, decode reads through
+    per-request block tables, cache memory scales with live tokens;
+  * ``--engine static``: the classic fixed-batch baseline — equal-prompt
+    groups prefill once and decode in lockstep to the longest generation.
+
+Workloads: by default ``--batch`` identical requests of ``--prompt-len`` /
+``--gen`` (the old fixed-batch behavior); ``--mixed`` switches to a
+mixed-length request stream (varied prompt and generation lengths, the
+scenario where continuous batching pays off — see
+benchmarks/serve_engine.py for the measured comparison).
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --batch 4 --prompt-len 32 --gen 32 --sparsity 0.75
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --mixed --requests 16 --engine continuous --page-size 8
 """
 from __future__ import annotations
 
@@ -15,26 +26,43 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import apply_sparsity, get_config, reduce_config
-from repro.data import TokenStream
-from repro.models import LMModel
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    from repro.sparsity import available_backends
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "static"],
+                    help="continuous batching w/ paged KV, or the "
+                         "fixed-batch baseline")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (continuous) / batch size (static)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    from repro.sparsity import available_backends
-
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-length request workload (RequestStream) "
+                         "instead of --batch identical requests")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean requests per engine step (geometric inter-"
+                         "arrival gaps); 0 = all requests arrive up front. "
+                         "Continuous engine only: requests are submitted "
+                         "mid-flight as their arrival step is reached")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests (0: --batch)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per paged-KV block (continuous engine)")
+    ap.add_argument("--max-live-tokens", type=int, default=0,
+                    help="admission budget: max sum(prompt+gen) over "
+                         "running requests (0: pool capacity)")
     ap.add_argument("--pattern", default="rbgp4")
     ap.add_argument("--sparsity", type=float, default=0.75)
-    ap.add_argument("--backend", default="xla_masked",
+    ap.add_argument("--backend", default="auto",
                     choices=["auto"] + available_backends(),
                     help="execution backend from the sparsity registry "
                          "('auto': compact storage, pallas-on-TPU)")
@@ -43,12 +71,20 @@ def main():
     ap.add_argument("--autotune-cache", default="",
                     help="persistent kernel-autotune cache path (resolves "
                          "block_n='auto' for the compact/pallas backends)")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     if args.autotune_cache:
         from repro.kernels import autotune
 
         autotune.set_cache_path(args.autotune_cache)
+
+    from repro.data import RequestStream
+    from repro.models import LMModel
+    from repro.serve import SamplingParams, make_engine
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -60,52 +96,67 @@ def main():
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     print(f"arch={cfg.name} params={model.n_params():,} "
-          f"pattern={cfg.sparsity.pattern}@{cfg.sparsity.sparsity}")
+          f"pattern={cfg.sparsity.pattern}@{cfg.sparsity.sparsity} "
+          f"engine={args.engine}")
 
-    cache_len = args.prompt_len + args.gen
-    ts = TokenStream(cfg.vocab_size, args.batch, args.prompt_len,
-                     n_codebooks=cfg.n_codebooks, seed=args.seed)
-    prompts = jnp.asarray(ts.batch_at(0))
+    n_req = args.requests or args.batch
+    if args.mixed:
+        pl = tuple(sorted({max(4, args.prompt_len // d) for d in (4, 2, 1)}))
+        gl = tuple(sorted({max(2, args.gen // d) for d in (8, 4, 2, 1)}))
+    else:
+        pl, gl = (args.prompt_len,), (args.gen,)
+    workload = RequestStream(
+        cfg.vocab_size, n_req, prompt_lens=pl, gen_lens=gl,
+        n_codebooks=cfg.n_codebooks, seed=args.seed,
+        arrival_rate=args.arrival_rate if args.engine == "continuous" else 0.0,
+    ).requests()
+    max_len = max(r["prompt"].shape[0] + r["max_new_tokens"]
+                  for r in workload)
 
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step, donate_argnums=(2,))
+    if args.engine == "continuous":
+        engine = make_engine(
+            "continuous", model, params, page_size=args.page_size,
+            max_slots=args.batch, max_live_tokens=args.max_live_tokens,
+            max_request_len=max_len,
+        )
+    else:
+        engine = make_engine("static", model, params, batch=args.batch)
+    sampling = SamplingParams(temperature=args.temperature,
+                              seed=args.seed + 1)
+    pending = sorted(workload, key=lambda r: r["arrival_step"])
 
-    cache = model.init_cache(args.batch, cache_len, jnp.float32)
     t0 = time.perf_counter()
-    logits, cache = prefill(params, {"tokens": prompts}, cache)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    step = 0
+    while pending or not engine.idle:
+        while pending and pending[0]["arrival_step"] <= step:
+            r = pending.pop(0)
+            engine.submit(r["prompt"], r["max_new_tokens"],
+                          sampling=sampling, arrival_step=r["arrival_step"])
+        engine.step()
+        step += 1
+    out = {rid: req.tokens for rid, req in sorted(engine.finished.items())}
+    wall = time.perf_counter() - t0
 
-    def sample(logits, key):
-        if args.temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(key, logits / args.temperature, axis=-1)
-
-    key = jax.random.PRNGKey(args.seed + 1)
-    generated = []
-    tok = sample(logits, key)
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        generated.append(np.asarray(tok))
-        if cfg.n_codebooks > 1:
-            nxt = tok.reshape(args.batch, 1, cfg.n_codebooks)
-        else:
-            nxt = tok.reshape(args.batch, 1)
-        key, sub = jax.random.split(key)
-        logits, cache = decode(params, nxt, cache, jnp.int32(args.prompt_len + i))
-        tok = sample(logits, sub)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    total_new = args.batch * args.gen
-    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
-          f"{t_prefill*1e3:.0f}ms "
-          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
-    print(f"decode : {total_new} tokens in {t_decode*1e3:.0f}ms "
-          f"({total_new/t_decode:.0f} tok/s, "
-          f"{t_decode/args.gen*1e3:.1f} ms/step)")
-    gen = np.stack(generated, axis=1)
-    print(f"sample continuation (req 0): {gen[0].reshape(args.gen, -1)[:8].ravel().tolist()}")
+    st = engine.stats
+    n_prompt = int(st["prompt_tokens"])
+    n_gen = int(st["generated_tokens"])
+    print(f"served {len(out)} requests ({n_prompt} prompt + {n_gen} new "
+          f"tokens) in {wall*1e3:.0f}ms end-to-end "
+          f"({(n_prompt + n_gen)/max(wall, 1e-9):.0f} tok/s incl. compile)")
+    print(f"prefill: {n_prompt} tokens, {int(st['prefill_calls'])} calls "
+          f"in {st['prefill_time_s']*1e3:.0f}ms")
+    print(f"decode : {n_gen} tokens, {int(st['decode_steps'])} steps in "
+          f"{st['decode_time_s']*1e3:.0f}ms "
+          f"({n_gen/max(st['decode_time_s'], 1e-9):.0f} tok/s, "
+          f"{int(st['wasted_row_steps'])} wasted row-steps)")
+    if args.engine == "continuous":
+        occ = st["allocated_block_steps"] / max(st["block_steps"], 1)
+        print(f"paged KV: page={args.page_size} "
+              f"peak {int(st['peak_allocated_blocks'])} blocks, "
+              f"mean pool occupancy {occ:.1%}")
+    rid0 = min(out)
+    print(f"sample continuation (req {rid0}): "
+          f"{np.asarray(out[rid0]).ravel()[:8].tolist()}")
 
 
 if __name__ == "__main__":

@@ -80,7 +80,7 @@ def build(args):
     return cfg, model, loss_fn, params, tcfg, data
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--reduced", action="store_true",
@@ -98,10 +98,11 @@ def main():
 
     ap.add_argument("--pattern", default="rbgp4")
     ap.add_argument("--sparsity", type=float, default=0.75)
-    ap.add_argument("--backend", default="xla_masked",
+    ap.add_argument("--backend", default="auto",
                     choices=["auto"] + available_backends(),
                     help="execution backend from the sparsity registry "
-                         "('auto': compact storage, pallas-on-TPU)")
+                         "('auto', the blessed entry point: compact "
+                         "storage, pallas-on-TPU / xla_compact elsewhere)")
     ap.add_argument("--min-dim", type=int, default=64)
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8"])
@@ -114,7 +115,11 @@ def main():
                     help="persistent kernel-autotune cache path (resolves "
                          "block_n='auto' for the compact/pallas backends; "
                          "default ~/.cache/repro-rbgp4/autotune.json)")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     if args.autotune_cache:
         from repro.kernels import autotune

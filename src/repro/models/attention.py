@@ -31,7 +31,10 @@ from repro.parallel.constrain import shard
 from repro.sparsity import SparseLinear, SparsityConfig
 from .common import apply_rope, rope_frequencies
 
-__all__ = ["GQAttention", "MLAttention", "init_cache_gqa", "init_cache_mla"]
+__all__ = [
+    "GQAttention", "MLAttention", "init_cache_gqa", "init_cache_mla",
+    "paged_cache_update",
+]
 
 NEG_INF = -1e30
 
@@ -114,6 +117,47 @@ def _write_cache(buf: jax.Array, new: jax.Array, index: jax.Array, rolling: bool
     )
 
 
+def paged_cache_update(pages, new_vals, positions, block_tables):
+    """Scatter one decode step into page pools; gather per-request views.
+
+    The paged layout replaces the contiguous per-request (B, L, ...) cache
+    with shared pools of fixed-size blocks: each pool leaf is
+    (n_blocks, page, ...), and ``block_tables`` (B, max_blocks) int32 maps a
+    request's logical block b to a physical block (-1 = unallocated).  The
+    token at absolute position p lives at (table[p // page], p % page).
+
+    pages: {"pos": (N, P), name: (N, P, ...) per entry in new_vals}
+    new_vals: {name: (B, 1, ...)} this step's per-request entries
+    positions: (B, 1) absolute positions (rows with no current block —
+      inactive batch slots — are redirected to physical block 0, which the
+      allocator reserves as a write-only trash block and never hands out)
+
+    Returns (new_pages, {name: (B, MB*P, ...) gathered}, k_pos (B, MB*P))
+    with k_pos = -1 on every slot not backed by an allocated block, so the
+    existing position-mask attention paths work unchanged.
+    """
+    P = pages["pos"].shape[1]
+    B, MB = block_tables.shape
+    slot = positions[:, 0]
+    bt_cur = jnp.take_along_axis(block_tables, (slot // P)[:, None], axis=1)[:, 0]
+    active = bt_cur >= 0
+    phys = jnp.where(active, bt_cur, 0)
+    off = jnp.where(active, slot % P, 0)
+    out = {}
+    for name, val in new_vals.items():
+        buf = pages[name]
+        out[name] = buf.at[phys, off].set(val[:, 0].astype(buf.dtype))
+    out["pos"] = pages["pos"].at[phys, off].set(jnp.where(active, slot, -1))
+    safe = jnp.maximum(block_tables, 0)
+    gathered = {
+        name: out[name][safe].reshape((B, MB * P) + out[name].shape[2:])
+        for name in new_vals
+    }
+    valid = jnp.repeat(block_tables >= 0, P, axis=1)
+    k_pos = jnp.where(valid, out["pos"][safe].reshape(B, MB * P), -1)
+    return out, gathered, k_pos
+
+
 def init_cache_gqa(batch, length, n_kv, head_dim, dtype=jnp.bfloat16):
     return {
         "k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
@@ -155,8 +199,13 @@ class GQAttention:
             "wo": self.wo.init(ks[3]),
         }
 
-    def apply(self, params, x, positions, *, cache=None):
-        """x: (B, S, D); positions: (B, S) absolute positions."""
+    def apply(self, params, x, positions, *, cache=None, block_tables=None):
+        """x: (B, S, D); positions: (B, S) absolute positions.
+
+        With ``block_tables`` (B, max_blocks) the cache is interpreted as
+        paged pools (see :func:`paged_cache_update`): decode-only (S == 1),
+        per-request positions, reads through the block tables.
+        """
         cfg = self.cfg
         B, S, _ = x.shape
         H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
@@ -166,7 +215,16 @@ class GQAttention:
         q = apply_rope(q, self.inv_freq, positions)
         k = apply_rope(k, self.inv_freq, positions)
 
-        if cache is not None:
+        if block_tables is not None:
+            if S != 1:
+                raise ValueError("paged attention is decode-only (S == 1); "
+                                 "prefill goes through the contiguous path")
+            new_cache, got, k_pos = paged_cache_update(
+                cache, {"k": k, "v": v}, positions, block_tables
+            )
+            k_all = got["k"].astype(q.dtype)
+            v_all = got["v"].astype(q.dtype)
+        elif cache is not None:
             index = positions[0, 0]  # decode/prefill in lockstep
             rolling = self.window > 0
             new_cache = {
@@ -389,7 +447,7 @@ class MLAttention:
         v = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
         return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) * scale).astype(x.dtype)
 
-    def apply(self, params, x, positions, *, cache=None):
+    def apply(self, params, x, positions, *, cache=None, block_tables=None):
         cfg, m = self.cfg, self.mla
         B, S, _ = x.shape
         H = cfg.n_heads
@@ -409,7 +467,16 @@ class MLAttention:
         k_rope = kv[..., m.kv_lora_rank:]  # (B, S, dr) shared across heads
         k_rope = apply_rope(k_rope[:, :, None, :], self.inv_freq, positions)[:, :, 0]
 
-        if cache is not None:
+        if block_tables is not None:
+            if S != 1:
+                raise ValueError("paged attention is decode-only (S == 1); "
+                                 "prefill goes through the contiguous path")
+            new_cache, got, k_pos = paged_cache_update(
+                cache, {"ckv": ckv, "krope": k_rope}, positions, block_tables
+            )
+            ckv_all = got["ckv"].astype(x.dtype)
+            krope_all = got["krope"].astype(x.dtype)
+        elif cache is not None:
             index = positions[0, 0]
             new_cache = {
                 "ckv": _write_cache(cache["ckv"], ckv, index, False),

@@ -159,8 +159,14 @@ class LMModel:
         return ce + aux.astype(jnp.float32), (ce, aux)
 
     # -- serving ------------------------------------------------------------------
-    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
-        return self.stack.init_cache(batch, cache_len, dtype)
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                   *, full_length: bool = False):
+        return self.stack.init_cache(batch, cache_len, dtype,
+                                     full_length=full_length)
+
+    def init_pages(self, n_blocks: int, page_size: int, dtype=jnp.bfloat16):
+        """Paged KV pools for the serving engine (see repro.serve.cache)."""
+        return self.stack.init_pages(n_blocks, page_size, dtype)
 
     def prefill(self, params, batch: dict, cache):
         """Run the prompt through the stack, filling the cache.
@@ -192,3 +198,24 @@ class LMModel:
         x, cache, _ = self.stack.apply(params["stack"], x, positions, caches=cache)
         x = self.norm_f.apply(params["norm_f"], x)
         return self._head(params, x)[:, 0], cache
+
+    def decode_step_paged(self, params, tokens_new, pages, block_tables,
+                          positions):
+        """One continuous-batching decode step through paged KV pools.
+
+        tokens_new: (B, 1[, n_cb]); positions: (B,) per-request absolute
+        positions (unlike :meth:`decode_step`, rows need not be in
+        lockstep); block_tables: (B, max_blocks) int32, -1 = unallocated
+        (rows whose current block is -1 are inactive slots and write to the
+        reserved trash block).  Returns (logits (B, V[...]), new_pages).
+        """
+        cfg = self.cfg
+        B = tokens_new.shape[0]
+        dtype = jnp.dtype(cfg.compute_dtype)
+        x = self._embed(params, tokens_new, None, dtype)
+        pos2 = positions.reshape(B, 1).astype(jnp.int32)
+        x, pages, _ = self.stack.apply(
+            params["stack"], x, pos2, caches=pages, block_tables=block_tables
+        )
+        x = self.norm_f.apply(params["norm_f"], x)
+        return self._head(params, x)[:, 0], pages

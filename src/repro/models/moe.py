@@ -80,7 +80,18 @@ class StackedExperts:
         applies = sparsity.applies_to(d_expert, d_model) and \
             sparsity.pattern != "dense"
         if applies and sparsity.pattern != "rbgp4":
-            raise NotImplementedError("stacked experts support rbgp4/dense")
+            from repro.sparsity import PATTERNS
+
+            raise NotImplementedError(
+                f"StackedExperts got sparsity pattern "
+                f"{sparsity.pattern!r}, but stacked expert weights support "
+                f"only 'rbgp4' (one base-graph mask shared across the "
+                f"expert dim) or 'dense' (sparsity 0 / below min_dim); "
+                f"other registered patterns "
+                f"({sorted(p for p in PATTERNS if p not in ('rbgp4', 'dense'))}) "
+                f"have no stacked storage — use a per-expert MoELayer "
+                f"backend or pattern='rbgp4' instead"
+            )
         # storage kind follows the configured backend's capabilities, as in
         # SparseLinear: masked = dense (E, M, K) values under the broadcast
         # mask; compact = stacked (E, M, nnz_row) CompactWeight run through

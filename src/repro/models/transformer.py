@@ -102,17 +102,22 @@ class DecoderLayer:
             "ffn": self.ffn.init(k4),
         }
 
-    def apply(self, params, x, positions, *, cache=None):
+    def apply(self, params, x, positions, *, cache=None, block_tables=None):
         """Returns (x, new_cache, aux_loss)."""
         aux = jnp.zeros((), jnp.float32)
         if self.kind == "rwkv":
+            if block_tables is not None:
+                raise NotImplementedError(self._no_paged())
             x, new_cache = self.block.apply(
                 params["rwkv"], x, positions, cache=cache
             )
             return x, new_cache, aux
+        if block_tables is not None and self.kind == "mamba":
+            raise NotImplementedError(self._no_paged())
+        mixer_kw = {} if block_tables is None else {"block_tables": block_tables}
         h, new_cache = self.mixer.apply(
             params["mixer"], self.norm1.apply(params["norm1"], x), positions,
-            cache=cache,
+            cache=cache, **mixer_kw,
         )
         x = x + h
         h2 = self.norm2.apply(params["norm2"], x)
@@ -124,10 +129,24 @@ class DecoderLayer:
             h2 = self.ffn.apply(params["ffn"], h2)
         return x + h2, new_cache, aux
 
-    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    def _no_paged(self) -> str:
+        return (
+            f"paged decode supports attention layer kinds ('attn', 'swa', "
+            f"'mla'); layer {self.idx} is {self.kind!r}, whose O(1) "
+            f"recurrent state has nothing to page — serve this architecture "
+            f"with the static engine (--engine static)"
+        )
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                   *, full_length: bool = False):
+        """``full_length`` skips the sliding-window cap on 'swa' caches —
+        used by the paged prefill, whose temp cache slots are absolute
+        positions (the window is then enforced by the attention mask)."""
         cfg = self.cfg
         if self.kind in ("attn", "mla") or (self.kind == "swa"):
-            L = min(cache_len, cfg.sliding_window) if self.kind == "swa" else cache_len
+            L = cache_len
+            if self.kind == "swa" and not full_length:
+                L = min(cache_len, cfg.sliding_window)
             if self.kind == "mla":
                 return init_cache_mla(batch, L, cfg.mla, dtype)
             return init_cache_gqa(batch, L, cfg.n_kv_heads, cfg.head_dim_, dtype)
@@ -143,6 +162,16 @@ class DecoderLayer:
                 dtype,
             )
         raise ValueError(self.kind)
+
+    def init_pages(self, n_blocks: int, page_size: int, dtype=jnp.bfloat16):
+        """Page pools for this layer: the per-request (B, L, ...) cache
+        becomes shared (n_blocks, page_size, ...) pools — physical block in
+        place of the batch dim, in-page slot in place of the position dim.
+        Sliding-window layers get full-size pools too (the window is a mask
+        in paged mode, not a storage bound)."""
+        if self.kind not in ("attn", "swa", "mla"):
+            raise NotImplementedError(self._no_paged())
+        return self.init_cache(n_blocks, page_size, dtype, full_length=True)
 
 
 class Stack:
@@ -205,16 +234,17 @@ class Stack:
         return params
 
     # -- caches ------------------------------------------------------------------
-    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                   *, full_length: bool = False):
+        mk = lambda l: l.init_cache(batch, cache_len, dtype,
+                                    full_length=full_length)
         cache = {
-            "head": [l.init_cache(batch, cache_len, dtype) for l in self.head_layers],
-            "tail": [l.init_cache(batch, cache_len, dtype) for l in self.tail_layers],
+            "head": [mk(l) for l in self.head_layers],
+            "tail": [mk(l) for l in self.tail_layers],
         }
         if self.n_full:
-            per = {
-                f"j{j}": self.period_layers[j].init_cache(batch, cache_len, dtype)
-                for j in range(self.period)
-            }
+            per = {f"j{j}": mk(self.period_layers[j])
+                   for j in range(self.period)}
             cache["scan"] = jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x, (self.n_full,) + x.shape).copy(), per
             )
@@ -222,14 +252,39 @@ class Stack:
             cache["scan"] = {}
         return cache
 
+    def init_pages(self, n_blocks: int, page_size: int, dtype=jnp.bfloat16):
+        """Paged pools, same pytree structure as :meth:`init_cache` so the
+        scan threading in :meth:`apply` is identical; scanned periods carry
+        stacked (n_full, n_blocks, page, ...) pools."""
+        mk = lambda l: l.init_pages(n_blocks, page_size, dtype)
+        pools = {
+            "head": [mk(l) for l in self.head_layers],
+            "tail": [mk(l) for l in self.tail_layers],
+        }
+        if self.n_full:
+            per = {f"j{j}": mk(self.period_layers[j])
+                   for j in range(self.period)}
+            pools["scan"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (self.n_full,) + x.shape).copy(), per
+            )
+        else:
+            pools["scan"] = {}
+        return pools
+
     # -- apply -------------------------------------------------------------------
-    def apply(self, params, x, positions, *, caches=None, train=False):
-        """Returns (x, new_caches, aux_total)."""
+    def apply(self, params, x, positions, *, caches=None, train=False,
+              block_tables=None):
+        """Returns (x, new_caches, aux_total).
+
+        With ``block_tables`` set, ``caches`` holds paged pools (from
+        :meth:`init_pages`) and every attention layer reads/writes through
+        the shared block tables (decode-only)."""
         aux = jnp.zeros((), jnp.float32)
         new_head, new_tail = [], []
         for i, l in enumerate(self.head_layers):
             c = caches["head"][i] if caches is not None else None
-            x, nc, a = l.apply(params["head"][i], x, positions, cache=c)
+            x, nc, a = l.apply(params["head"][i], x, positions, cache=c,
+                               block_tables=block_tables)
             new_head.append(nc)
             aux += a
 
@@ -240,7 +295,8 @@ class Stack:
                 nc_t = {}
                 for j, mod in enumerate(self.period_layers):
                     cj = c_t[f"j{j}"] if c_t is not None else None
-                    xc, ncj, a = mod.apply(p_t[f"j{j}"], xc, positions, cache=cj)
+                    xc, ncj, a = mod.apply(p_t[f"j{j}"], xc, positions,
+                                           cache=cj, block_tables=block_tables)
                     nc_t[f"j{j}"] = ncj
                     aux_c = aux_c + a
                 return (xc, aux_c), nc_t
@@ -262,7 +318,8 @@ class Stack:
 
         for i, l in enumerate(self.tail_layers):
             c = caches["tail"][i] if caches is not None else None
-            x, nc, a = l.apply(params["tail"][i], x, positions, cache=c)
+            x, nc, a = l.apply(params["tail"][i], x, positions, cache=c,
+                               block_tables=block_tables)
             new_tail.append(nc)
             aux += a
 

@@ -1,0 +1,19 @@
+"""Serving subsystem: continuous batching + paged KV cache (see README.md)."""
+from .cache import PageAllocator, PagedKVCache
+from .engine import (
+    ContinuousEngine,
+    Request,
+    ServingEngine,
+    StaticEngine,
+    make_engine,
+    run_sequential,
+)
+from .sampling import SamplingParams, greedy, sample_token
+from .scheduler import FCFSScheduler
+
+__all__ = [
+    "PageAllocator", "PagedKVCache", "FCFSScheduler",
+    "SamplingParams", "greedy", "sample_token",
+    "Request", "ServingEngine", "ContinuousEngine", "StaticEngine",
+    "make_engine", "run_sequential",
+]

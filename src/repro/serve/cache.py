@@ -1,0 +1,207 @@
+"""Paged KV cache: fixed-size blocks, per-request block tables, free list.
+
+The contiguous serving cache allocates ``batch x max_len`` slots up front —
+a request that prompts 8 tokens and generates 4 still pays for the longest
+request's worth of cache.  The paged cache instead carves the pools into
+fixed ``page_size``-token blocks shared by all requests; a request holds
+``ceil(live_tokens / page_size)`` blocks, so cache memory scales with the
+tokens actually alive.  This is exactly the memory-bound decode regime where
+the paper's compact RBGP4 storage matters: both shrink the bytes the decode
+step must touch.
+
+Two host-side pieces:
+
+  * :class:`PageAllocator` — pure bookkeeping: a free list over the block
+    ids, with physical block 0 permanently reserved as the *trash block*
+    (inactive decode rows scatter their dummy writes there; it is never
+    handed out, so live data can't be corrupted).
+  * :class:`PagedKVCache` — owns the device pools (one
+    ``(n_blocks, page, ...)`` leaf per contiguous-cache leaf, built by
+    ``LMModel.init_pages``) plus the allocator, and performs the host-side
+    data movement: scattering a contiguous prefill cache into freshly
+    allocated blocks, resetting the position marks of freed blocks (so a
+    recycled block can't leak stale positions into the attention mask), and
+    materializing the (B, max_blocks) block tables the jitted decode step
+    reads through.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PageAllocator", "PagedKVCache", "blocks_for_tokens"]
+
+
+def blocks_for_tokens(n_tokens: int, page_size: int) -> int:
+    """Blocks needed to hold ``n_tokens``.
+
+    The single shared ceil-division: scheduler reservations, engine block-
+    table sizing, and lazy allocation must all agree on this rounding for
+    the 'worst-case reservation ⇒ lazy allocation never fails' argument.
+    """
+    return -(-n_tokens // page_size)
+
+
+class PageAllocator:
+    """Free-list allocator over ``n_blocks`` fixed-size cache blocks.
+
+    Block 0 is reserved (the trash block) and never allocated, so
+    ``n_total == n_blocks - 1``.  Invariants (property-tested in
+    tests/test_paged_cache.py):
+
+      * no block is ever handed out twice without an intervening free;
+      * ``n_free + n_allocated == n_total`` at all times;
+      * freeing returns exactly the blocks that were allocated.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError(
+                f"need >= 2 blocks (one is the reserved trash block); "
+                f"got n_blocks={n_blocks}"
+            )
+        self.n_blocks = n_blocks
+        # pop() from the tail -> blocks are handed out in increasing order,
+        # which keeps block tables readable in tests/debug dumps
+        self._free = list(range(n_blocks - 1, 0, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def n_total(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return len(self._allocated)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.n_free
+
+    def alloc(self, n: int) -> list[int]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > self.n_free:
+            raise RuntimeError(
+                f"out of cache blocks: requested {n}, free {self.n_free} "
+                f"of {self.n_total} (the scheduler reserves worst-case "
+                f"blocks at admission, so this indicates a bookkeeping bug)"
+            )
+        blocks = [self._free.pop() for _ in range(n)]
+        self._allocated.update(blocks)
+        return blocks
+
+    def free(self, blocks: Iterable[int]) -> None:
+        blocks = list(blocks)
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"double free / foreign block {b}")
+        for b in blocks:
+            self._allocated.discard(b)
+            self._free.append(b)
+
+
+class PagedKVCache:
+    """Device page pools + allocator for one model's serving caches."""
+
+    def __init__(self, model, n_blocks: int, page_size: int,
+                 dtype=jnp.float32):
+        if page_size < 1:
+            raise ValueError(f"page_size={page_size}")
+        self.model = model
+        self.page = page_size
+        self.dtype = dtype
+        self.pools = model.init_pages(n_blocks, page_size, dtype)
+        self.allocator = PageAllocator(n_blocks)
+
+    # -- sizing ----------------------------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for_tokens(n_tokens, self.page)
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.allocator.n_total * self.page
+
+    # -- block tables ------------------------------------------------------------
+    def block_table(self, block_lists: list[Optional[list[int]]],
+                    max_blocks: int) -> np.ndarray:
+        """(B, max_blocks) int32, -1-padded; None rows are inactive slots."""
+        bt = np.full((len(block_lists), max_blocks), -1, np.int32)
+        for i, blocks in enumerate(block_lists):
+            if blocks:
+                bt[i, : len(blocks)] = blocks
+        return bt
+
+    # -- prefill scatter -----------------------------------------------------------
+    def write_prefill(self, cache, blocks: list[int]) -> None:
+        """Scatter a batch-1 contiguous prefill cache into ``blocks``.
+
+        ``cache`` is the tree returned by the reference ``model.prefill``
+        (leaves (1, L, ...), scanned leaves (T, 1, L, ...), L == the exact
+        prompt length).  Leaves are padded up to ``len(blocks) * page``
+        (position marks with -1, data with 0) and written block-row by
+        block-row into the pools.  Running the *reference* prefill and
+        scattering afterwards keeps the paged engine bit-identical to the
+        sequential path on the prompt portion by construction.
+        """
+        nb = len(blocks)
+        tgt = nb * self.page
+        idx = jnp.asarray(blocks, jnp.int32)
+
+        def scatter(pool, leaf, scan: bool):
+            # (T, 1, L, ...) -> (T, nb, P, ...)  |  (1, L, ...) -> (nb, P, ...)
+            leaf = leaf[:, 0] if scan else leaf[0]
+            ax = 1 if scan else 0
+            L = leaf.shape[ax]
+            if L > tgt:
+                raise ValueError(f"prefill cache length {L} > {nb} blocks")
+            if L < tgt:
+                fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
+                pad = [(0, 0)] * leaf.ndim
+                pad[ax] = (0, tgt - L)
+                leaf = jnp.pad(leaf, pad, constant_values=fill)
+            shape = leaf.shape[:ax] + (nb, self.page) + leaf.shape[ax + 1:]
+            leaf = leaf.reshape(shape).astype(pool.dtype)
+            return pool.at[:, idx].set(leaf) if scan else pool.at[idx].set(leaf)
+
+        tm = jax.tree_util.tree_map
+        self.pools = {
+            "head": [tm(lambda p, c: scatter(p, c, False), pl, cl)
+                     for pl, cl in zip(self.pools["head"], cache["head"])],
+            "scan": tm(lambda p, c: scatter(p, c, True),
+                       self.pools["scan"], cache["scan"]),
+            "tail": [tm(lambda p, c: scatter(p, c, False), pl, cl)
+                     for pl, cl in zip(self.pools["tail"], cache["tail"])],
+        }
+
+    # -- recycle -------------------------------------------------------------------
+    def reset_blocks(self, blocks: list[int]) -> None:
+        """Mark freed blocks empty (pos = -1) in every layer's pos pool.
+
+        Without this, a recycled block would carry the previous request's
+        position marks, and any stale position <= the new request's current
+        position would leak foreign KV into its attention window.
+        """
+        if not blocks:
+            return
+        idx = jnp.asarray(blocks, jnp.int32)
+
+        def reset(leaf, scan: bool):
+            if not jnp.issubdtype(leaf.dtype, jnp.integer):
+                return leaf
+            return leaf.at[:, idx].set(-1) if scan else leaf.at[idx].set(-1)
+
+        tm = jax.tree_util.tree_map
+        self.pools = {
+            "head": [tm(lambda l: reset(l, False), pl)
+                     for pl in self.pools["head"]],
+            "scan": tm(lambda l: reset(l, True), self.pools["scan"]),
+            "tail": [tm(lambda l: reset(l, False), pl)
+                     for pl in self.pools["tail"]],
+        }

@@ -1,0 +1,405 @@
+"""Serving engines: continuous batching over paged KV, plus baselines.
+
+Three ways to serve the same model, in decreasing order of fidelity to the
+production design and increasing order of simplicity:
+
+  * :class:`ContinuousEngine` — the tentpole.  ``submit()`` enqueues,
+    ``step()`` interleaves prefill of newly admitted requests with one
+    batched decode step over all live rows (reading KV through per-request
+    block tables into shared page pools), ``drain()`` runs to completion.
+    Requests are admitted mid-flight as slots/budget free up; finished
+    requests are evicted and their blocks recycled immediately.
+  * :class:`StaticEngine` — the classic fixed-batch baseline: FCFS requests
+    are grouped into equal-prompt-length batches, each batch prefills once
+    and decodes in lockstep until the *longest* generation in the batch
+    finishes (shorter rows keep burning decode steps — that waste is the
+    point of the comparison).
+  * :func:`run_sequential` — one request at a time through the reference
+    ``model.prefill`` / ``model.decode_step`` path.  This is the semantic
+    oracle: for greedy sampling both engines must reproduce its tokens
+    bit-for-bit (tests/test_serve_engine.py), which is what lets later perf
+    PRs rework the hot loop without fear.
+
+Parity is engineered, not hoped for: the continuous engine prefills each
+request at its exact prompt length through the *reference* prefill (then
+scatters the cache into pages), decode rows never interact (per-row
+attention, per-token norms), and the gathered paged view presents the same
+positions mask as a contiguous cache of ``max_blocks * page`` slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cache import PagedKVCache, blocks_for_tokens
+from .sampling import SamplingParams, sample_token
+from .scheduler import FCFSScheduler
+
+__all__ = ["Request", "ServingEngine", "ContinuousEngine", "StaticEngine",
+           "run_sequential", "make_engine"]
+
+
+@dataclasses.dataclass(eq=False)   # identity equality: ndarray fields
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) or (S, n_codebooks) int32
+    max_new_tokens: int
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    arrival_step: int = 0
+    # runtime state
+    generated: list = dataclasses.field(default_factory=list)
+    blocks: list = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    reserved_blocks: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return self.prompt.shape[0]
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def input_pos(self) -> int:
+        """Position of the next decode input (the last sampled token)."""
+        return self.prompt_len + len(self.generated) - 1
+
+    @property
+    def tokens(self) -> np.ndarray:
+        return np.stack(self.generated) if self.generated else \
+            np.zeros((0,), np.int32)
+
+
+class ServingEngine:
+    """submit()/step()/drain() surface shared by both engines."""
+
+    kind = "base"
+
+    def __init__(self, model, params, *, cache_dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.cache_dtype = cache_dtype
+        self.requests: dict[int, Request] = {}
+        self.finished: dict[int, Request] = {}
+        self._next_rid = 0
+        self.stats: dict[str, float] = {
+            "steps": 0, "prefill_calls": 0, "decode_steps": 0,
+            "prompt_tokens": 0, "generated_tokens": 0, "wasted_row_steps": 0,
+            "prefill_time_s": 0.0, "decode_time_s": 0.0,
+        }
+
+    # -- API -----------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               sampling: Optional[SamplingParams] = None,
+               arrival_step: int = 0) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim not in (1, 2) or prompt.shape[0] < 1:
+            raise ValueError(f"prompt shape {prompt.shape}")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens={max_new_tokens}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+                      sampling=sampling or SamplingParams(),
+                      arrival_step=arrival_step)
+        self.requests[rid] = req
+        self._enqueue(req)
+        return rid
+
+    def step(self) -> list[Request]:
+        raise NotImplementedError
+
+    @property
+    def idle(self) -> bool:
+        raise NotImplementedError
+
+    def drain(self, max_steps: int = 100_000) -> dict[int, np.ndarray]:
+        """Run steps until every submitted request completed."""
+        steps = 0
+        while not self.idle:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return {rid: r.tokens for rid, r in sorted(self.finished.items())}
+
+    # -- shared helpers --------------------------------------------------------------
+    def _enqueue(self, req: Request) -> None:
+        raise NotImplementedError
+
+    def _next_input(self, req: Request) -> np.ndarray:
+        """(1[, n_cb]) last sampled token, as the next decode input."""
+        return np.asarray(req.generated[-1], np.int32).reshape(
+            (1,) + req.prompt.shape[1:]
+        )
+
+    def _sample(self, req: Request, logits_row: np.ndarray) -> None:
+        tok = sample_token(logits_row, req.sampling, request_salt=req.rid,
+                           step=len(req.generated))
+        req.generated.append(tok)
+        self.stats["generated_tokens"] += 1
+
+    def _mark_finished(self, req: Request) -> None:
+        self.finished[req.rid] = req
+
+
+class ContinuousEngine(ServingEngine):
+    """Continuous batching with a paged KV cache.
+
+    page_size:        tokens per cache block.
+    max_slots:        decode-batch rows (concurrent requests).
+    n_blocks:         physical pool blocks incl. the reserved trash block;
+                      0 = enough for max_slots full-length requests.
+    max_live_tokens:  admission budget over sum(prompt + max_new) of the
+                      running set; 0 = bounded only by pool capacity.
+    max_request_len:  longest admissible prompt + max_new (sets the block-
+                      table width, a static shape of the decode step).
+    """
+
+    kind = "continuous"
+
+    def __init__(self, model, params, *, page_size: int = 8,
+                 max_slots: int = 8, n_blocks: int = 0,
+                 max_live_tokens: int = 0, max_request_len: int = 0,
+                 cache_dtype=jnp.float32):
+        super().__init__(model, params, cache_dtype=cache_dtype)
+        self.page = page_size
+        self.max_slots = max_slots
+        self.max_request_len = max_request_len or self.cfg.max_seq_len
+        self.max_blocks = blocks_for_tokens(self.max_request_len, page_size)
+        if n_blocks <= 0:
+            n_blocks = 1 + max_slots * self.max_blocks
+        self.kv = PagedKVCache(model, n_blocks, page_size, cache_dtype)
+        self.scheduler = FCFSScheduler(
+            page_size=page_size, max_slots=max_slots,
+            max_live_tokens=max_live_tokens,
+            n_blocks_capacity=self.kv.allocator.n_total,
+        )
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step_paged, donate_argnums=(2,))
+        self.stats.update(block_steps=0, allocated_block_steps=0,
+                          live_token_steps=0, peak_allocated_blocks=0)
+
+    @property
+    def gather_tokens(self) -> int:
+        """KV slots a decode row attends over (block-table width x page)."""
+        return self.max_blocks * self.page
+
+    @property
+    def idle(self) -> bool:
+        return self.scheduler.idle
+
+    def _enqueue(self, req: Request) -> None:
+        if req.prompt_len + req.max_new_tokens > self.max_request_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + max_new "
+                f"{req.max_new_tokens} exceeds max_request_len="
+                f"{self.max_request_len}"
+            )
+        self.scheduler.submit(req)
+
+    # -- steps -----------------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """Admit + prefill new requests, then one batched decode step."""
+        finished: list[Request] = []
+        for req in self.scheduler.admit():
+            self._prefill_request(req)
+            if req.done:
+                self._finish(req, finished)
+        self._decode_batch(finished)
+        self.stats["steps"] += 1
+        na = self.kv.allocator.n_allocated
+        self.stats["allocated_block_steps"] += na
+        self.stats["block_steps"] += self.kv.allocator.n_total
+        self.stats["live_token_steps"] += sum(
+            r.input_pos + 1 for r in self.scheduler.running.values()
+        )
+        self.stats["peak_allocated_blocks"] = max(
+            self.stats["peak_allocated_blocks"], na
+        )
+        return finished
+
+    def _prefill_request(self, req: Request) -> None:
+        """Reference prefill at the exact prompt length, then page it."""
+        S = req.prompt_len
+        req.blocks = self.kv.allocator.alloc(self.kv.blocks_for(S))
+        cache = self.model.init_cache(1, S, self.cache_dtype,
+                                      full_length=True)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt[None])}, cache
+        )
+        logits = np.asarray(logits)
+        self.stats["prefill_time_s"] += time.perf_counter() - t0
+        self.kv.write_prefill(cache, req.blocks)
+        self._sample(req, logits[0])
+        self.stats["prefill_calls"] += 1
+        self.stats["prompt_tokens"] += S
+
+    def _decode_batch(self, finished: list[Request]) -> None:
+        active = [r for r in self.scheduler.running.values() if not r.done]
+        if not active:
+            return
+        for r in active:
+            need = self.kv.blocks_for(r.input_pos + 1)
+            if need > len(r.blocks):
+                r.blocks += self.kv.allocator.alloc(need - len(r.blocks))
+        B = self.max_slots
+        tok_shape = (B, 1) + active[0].prompt.shape[1:]
+        tokens = np.zeros(tok_shape, np.int32)
+        positions = np.zeros((B,), np.int32)
+        bt_rows: list[Optional[list[int]]] = [None] * B
+        for r in active:
+            tokens[r.slot, 0] = r.generated[-1]
+            positions[r.slot] = r.input_pos
+            bt_rows[r.slot] = r.blocks
+        bt = self.kv.block_table(bt_rows, self.max_blocks)
+        t0 = time.perf_counter()
+        logits, self.kv.pools = self._decode(
+            self.params, jnp.asarray(tokens), self.kv.pools,
+            jnp.asarray(bt), jnp.asarray(positions),
+        )
+        logits = np.asarray(logits)
+        self.stats["decode_time_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        for r in active:
+            self._sample(r, logits[r.slot])
+            if r.done:
+                self._finish(r, finished)
+
+    def _finish(self, req: Request, finished: list[Request]) -> None:
+        """Evict: reset + free every block the request held."""
+        self.kv.reset_blocks(req.blocks)
+        self.kv.allocator.free(req.blocks)
+        req.blocks = []
+        self.scheduler.finish(req)
+        self._mark_finished(req)
+        finished.append(req)
+
+
+class StaticEngine(ServingEngine):
+    """Fixed-batch baseline: equal-prompt-length groups, lockstep decode."""
+
+    kind = "static"
+
+    def __init__(self, model, params, *, batch: int = 4,
+                 cache_dtype=jnp.float32):
+        super().__init__(model, params, cache_dtype=cache_dtype)
+        self.batch = batch
+        self._queue: list[Request] = []
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        self.stats.update(cache_slot_steps=0, live_token_steps=0)
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue
+
+    def _enqueue(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def step(self) -> list[Request]:
+        """Serve one batch to completion (the static-batching granularity).
+
+        The head of the FCFS queue picks the batch; the rest of the batch
+        is the next ``batch - 1`` requests with the *same prompt length*
+        (classic bucketed static batching — ragged prompts cannot share a
+        lockstep prefill without cache-corrupting padding).
+        """
+        if not self._queue:
+            return []
+        S = self._queue[0].prompt_len
+        group = [r for r in self._queue if r.prompt_len == S][: self.batch]
+        self._queue = [r for r in self._queue if r not in group]
+        B = len(group)
+        max_gen = max(r.max_new_tokens for r in group)
+        cache = self.model.init_cache(B, S + max_gen, self.cache_dtype)
+        prompts = np.stack([r.prompt for r in group])
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, cache
+        )
+        logits = np.asarray(logits)
+        self.stats["prefill_time_s"] += time.perf_counter() - t0
+        for i, r in enumerate(group):
+            self._sample(r, logits[i])
+        self.stats["prefill_calls"] += 1
+        self.stats["prompt_tokens"] += B * S
+        for step_i in range(1, max_gen):
+            nxt = np.stack([self._next_input(r) for r in group])
+            t0 = time.perf_counter()
+            logits, cache = self._decode(
+                self.params, jnp.asarray(nxt), cache,
+                jnp.int32(S + step_i - 1),
+            )
+            logits = np.asarray(logits)
+            self.stats["decode_time_s"] += time.perf_counter() - t0
+            self.stats["decode_steps"] += 1
+            self.stats["cache_slot_steps"] += B * (S + max_gen)
+            self.stats["live_token_steps"] += sum(
+                min(r.input_pos + 1, r.prompt_len + r.max_new_tokens)
+                for r in group
+            )
+            for i, r in enumerate(group):
+                if r.done:
+                    # lockstep: the row keeps burning the step anyway
+                    self.stats["wasted_row_steps"] += 1
+                else:
+                    self._sample(r, logits[i])
+        for r in group:
+            self._mark_finished(r)
+        self.stats["steps"] += 1
+        return group
+
+
+def run_sequential(model, params, requests, *, cache_len=None,
+                   cache_dtype=jnp.float32) -> dict[int, np.ndarray]:
+    """Reference path: one request at a time, contiguous cache, B = 1.
+
+    ``requests``: iterable of dicts {"prompt", "max_new_tokens",
+    optional "sampling", "rid"} (the format ``RequestStream.requests()``
+    emits).  ``cache_len``: cache slots per request (default
+    prompt + max_new); the parity tests pass the engine's
+    ``gather_tokens`` so both paths reduce attention over identical
+    masked lengths.
+    """
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step, donate_argnums=(2,))
+    out: dict[int, np.ndarray] = {}
+    for i, req in enumerate(requests):
+        prompt = np.asarray(req["prompt"], np.int32)
+        S = prompt.shape[0]
+        gen = req["max_new_tokens"]
+        sp = req.get("sampling") or SamplingParams()
+        rid = req.get("rid", i)
+        C = cache_len or (S + gen)
+        cache = model.init_cache(1, C, cache_dtype)
+        logits, cache = prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                                cache)
+        toks = [sample_token(np.asarray(logits)[0], sp, request_salt=rid,
+                             step=0)]
+        for step_i in range(1, gen):
+            nxt = np.asarray(toks[-1], np.int32).reshape(
+                (1, 1) + prompt.shape[1:]
+            )
+            logits, cache = decode(params, jnp.asarray(nxt), cache,
+                                   jnp.int32(S + step_i - 1))
+            toks.append(sample_token(np.asarray(logits)[0], sp,
+                                     request_salt=rid, step=step_i))
+        out[rid] = np.stack(toks)
+    return out
+
+
+def make_engine(kind: str, model, params, **kw) -> ServingEngine:
+    if kind == "continuous":
+        return ContinuousEngine(model, params, **kw)
+    if kind == "static":
+        return StaticEngine(model, params, **kw)
+    raise ValueError(f"unknown engine kind {kind!r}; have continuous|static")

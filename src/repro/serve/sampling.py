@@ -1,0 +1,52 @@
+"""Token sampling for the serving engines (pulled out of launch/serve.py).
+
+Greedy is the parity anchor: ``argmax`` with lowest-index tie-break, applied
+identically by the sequential reference path and both engines, so the parity
+tests can demand token-for-token equality.  Stochastic sampling is
+*per-request* reproducible: the key for request r's step i is
+``fold_in(fold_in(PRNGKey(seed), r_salt), i)``, independent of which batch
+row or engine step the request happens to occupy — continuous batching must
+not change a request's sample stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SamplingParams", "sample_token", "greedy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # <= 0: greedy
+    top_k: int = 0               # 0: no truncation
+    seed: int = 0
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def greedy(logits) -> np.ndarray:
+    """argmax over the vocab axis; works on (V,) and (..., V)."""
+    return np.asarray(jnp.argmax(jnp.asarray(logits), axis=-1))
+
+
+def sample_token(logits, params: SamplingParams, *, request_salt: int = 0,
+                 step: int = 0) -> np.ndarray:
+    """Sample one token id (or per-codebook ids) from (V,) / (..., V) logits."""
+    if params.is_greedy:
+        return greedy(logits)
+    logits = jnp.asarray(logits, jnp.float32)
+    if params.top_k > 0 and params.top_k < logits.shape[-1]:
+        kth = jnp.sort(logits, axis=-1)[..., -params.top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(params.seed), request_salt), step
+    )
+    return np.asarray(
+        jax.random.categorical(key, logits / params.temperature, axis=-1)
+    )

@@ -1,0 +1,123 @@
+"""FCFS continuous-batching scheduler: admission, slots, token budget.
+
+The scheduler decides *when* a waiting request may join the running batch;
+the engine does the model work.  Admission is strict FCFS (no reordering:
+the head of the queue blocks until it fits, which keeps completion order
+deterministic and the parity tests meaningful) and a request is admitted
+only if all three hold:
+
+  * a batch slot is free (the decode step runs a fixed ``max_slots``-row
+    batch; a slot is one row);
+  * the live-token budget allows it: the sum of ``prompt + max_new`` over
+    running requests never exceeds ``max_live_tokens`` (the admission-
+    control knob — lower it to trade latency for a smaller cache
+    footprint);
+  * worst-case block reservation fits: the sum of
+    ``ceil((prompt + max_new) / page)`` over running requests never exceeds
+    the pool.  Blocks are still *allocated* lazily as tokens are actually
+    produced (that is what the occupancy win measures), but reserving the
+    worst case up front means a mid-decode allocation can never fail — no
+    preemption/swap machinery needed.
+
+Invariants here and in the allocator are locked down by the hypothesis
+suite in tests/test_paged_cache.py.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from .cache import blocks_for_tokens as _blocks_for
+
+__all__ = ["FCFSScheduler"]
+
+
+class FCFSScheduler:
+    """Requests duck-type ``prompt_len``/``max_new_tokens``; on admission
+    the scheduler stamps ``slot`` and ``reserved_blocks`` onto them."""
+
+    def __init__(self, *, page_size: int, max_slots: int,
+                 max_live_tokens: int, n_blocks_capacity: int):
+        if max_slots < 1:
+            raise ValueError(f"max_slots={max_slots}")
+        self.page = page_size
+        self.max_slots = max_slots
+        self.capacity_blocks = n_blocks_capacity
+        cap_tokens = n_blocks_capacity * page_size
+        self.max_live_tokens = (
+            min(max_live_tokens, cap_tokens) if max_live_tokens else cap_tokens
+        )
+        self.waiting: deque = deque()
+        self.running: dict = {}
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+        self._live_tokens = 0
+        self._reserved_blocks = 0
+
+    # -- introspection -------------------------------------------------------------
+    @property
+    def live_tokens(self) -> int:
+        return self._live_tokens
+
+    @property
+    def reserved_blocks(self) -> int:
+        return self._reserved_blocks
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def n_running(self) -> int:
+        return len(self.running)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.running
+
+    # -- queue ---------------------------------------------------------------------
+    def submit(self, req) -> None:
+        total = req.prompt_len + req.max_new_tokens
+        if total > self.max_live_tokens:
+            raise ValueError(
+                f"request needs {total} tokens but max_live_tokens="
+                f"{self.max_live_tokens}; it can never be admitted"
+            )
+        if _blocks_for(total, self.page) > self.capacity_blocks:
+            raise ValueError(
+                f"request needs {_blocks_for(total, self.page)} blocks but "
+                f"the pool has {self.capacity_blocks}; it can never be "
+                f"admitted"
+            )
+        self.waiting.append(req)
+
+    def _fits(self, req) -> bool:
+        total = req.prompt_len + req.max_new_tokens
+        return (
+            bool(self._free_slots)
+            and self._live_tokens + total <= self.max_live_tokens
+            and self._reserved_blocks + _blocks_for(total, self.page)
+            <= self.capacity_blocks
+        )
+
+    def admit(self) -> list:
+        """Pop FCFS head-of-queue requests while they fit; stamp slots."""
+        admitted = []
+        while self.waiting and self._fits(self.waiting[0]):
+            req = self.waiting.popleft()
+            total = req.prompt_len + req.max_new_tokens
+            req.slot = self._free_slots.pop()
+            req.reserved_blocks = _blocks_for(total, self.page)
+            self._live_tokens += total
+            self._reserved_blocks += req.reserved_blocks
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def finish(self, req) -> None:
+        """Evict a finished request: release its slot and reservations."""
+        if self.running.get(req.slot) is not req:
+            raise ValueError(f"request in slot {req.slot} is not running")
+        del self.running[req.slot]
+        self._free_slots.append(req.slot)
+        self._live_tokens -= req.prompt_len + req.max_new_tokens
+        self._reserved_blocks -= req.reserved_blocks
+        req.slot = None

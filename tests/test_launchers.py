@@ -19,6 +19,26 @@ def run_cli(args, timeout=420):
                           capture_output=True, text=True, timeout=timeout)
 
 
+def test_driver_backend_defaults_are_auto():
+    """Both drivers must default --backend to the registry's blessed
+    'auto' entry point (regression: serve.py shipped with 'xla_masked'
+    while train.py and the sparsity registry treated 'auto' as canonical)."""
+    from repro.launch import serve as serve_cli
+    from repro.launch import train as train_cli
+
+    assert serve_cli.build_parser().get_default("backend") == "auto"
+    assert train_cli.build_parser().get_default("backend") == "auto"
+
+
+def test_serve_parser_has_engine_knobs():
+    from repro.launch import serve as serve_cli
+
+    ap = serve_cli.build_parser()
+    assert ap.get_default("engine") == "continuous"
+    assert ap.get_default("page_size") == 8
+    assert ap.get_default("max_live_tokens") == 0
+
+
 @pytest.mark.slow
 def test_dryrun_single_cell(tmp_path):
     out = tmp_path / "cell.jsonl"
@@ -60,3 +80,14 @@ def test_serve_driver():
                    "--gen", "4"])
     assert res.returncode == 0, res.stdout[-400:] + res.stderr[-400:]
     assert "decode" in res.stdout and "tok/s" in res.stdout
+    assert "paged KV" in res.stdout   # default engine is continuous
+
+
+@pytest.mark.slow
+def test_serve_driver_static_mixed():
+    res = run_cli(["-m", "repro.launch.serve", "--arch", "tinyllama-1.1b",
+                   "--reduced", "--engine", "static", "--mixed",
+                   "--requests", "4", "--batch", "2", "--prompt-len", "16",
+                   "--gen", "8"])
+    assert res.returncode == 0, res.stdout[-400:] + res.stderr[-400:]
+    assert "served 4 requests" in res.stdout and "tok/s" in res.stdout

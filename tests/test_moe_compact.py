@@ -145,3 +145,15 @@ def test_sparse_linear_batched_rejects_nonbatched_backend():
             sparse_linear_batched(w, x, backend="nobatch_test")
     finally:
         _REGISTRY.pop("nobatch_test", None)
+
+
+def test_stacked_experts_unsupported_pattern_names_offender():
+    """The NotImplementedError must name the offending pattern and the
+    supported set (regression: it used to say only 'rbgp4/dense')."""
+    sp = SparsityConfig(pattern="block", sparsity=0.75, backend="xla_masked",
+                        min_dim=64)
+    with pytest.raises(NotImplementedError) as ei:
+        StackedExperts(4, 64, 64, sp)
+    msg = str(ei.value)
+    assert "'block'" in msg            # the pattern that was passed
+    assert "rbgp4" in msg and "dense" in msg   # what is supported

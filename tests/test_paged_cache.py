@@ -1,0 +1,179 @@
+"""Hypothesis property tests: paged-cache allocator + FCFS scheduler.
+
+Model-free (no jax tracing): these pin the bookkeeping invariants the
+serving engine relies on so the hot loop can be refactored without
+re-deriving them —
+
+  * allocator: no double-allocated block, free-list conservation
+    (allocated + free == total) after arbitrary alloc/free sequences,
+    freeing returns exactly what was held;
+  * scheduler: admission never exceeds ``max_live_tokens`` or the block
+    capacity or the slot count, admission order is FCFS, eviction releases
+    the full reservation;
+  * engine-shaped lifecycle (admit -> lazy block growth -> finish): lazy
+    allocation never exhausts the pool (the worst-case reservation
+    argument), and finishing a request returns all of its blocks.
+"""
+import types
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve import FCFSScheduler, PageAllocator
+
+
+def fake_request(prompt_len, max_new):
+    return types.SimpleNamespace(prompt_len=prompt_len,
+                                 max_new_tokens=max_new, slot=None,
+                                 reserved_blocks=0)
+
+
+# -- allocator ---------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_blocks=st.integers(2, 40),
+    ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "free"]), st.integers(0, 12)),
+        max_size=60,
+    ),
+)
+def test_allocator_conservation_and_no_double_alloc(n_blocks, ops):
+    a = PageAllocator(n_blocks)
+    held: list[list[int]] = []
+    ever_handed: set[int] = set()
+    for kind, n in ops:
+        if kind == "alloc":
+            if not a.can_alloc(n):
+                with pytest.raises(RuntimeError):
+                    a.alloc(n)
+                continue
+            got = a.alloc(n)
+            flat = [b for blocks in held for b in blocks]
+            assert not set(got) & set(flat), "double-allocated block"
+            assert 0 not in got, "trash block handed out"
+            ever_handed.update(got)
+            held.append(got)
+        elif held:
+            a.free(held.pop(n % len(held)))
+        # conservation after every op
+        assert a.n_free + a.n_allocated == a.n_total
+        assert a.n_allocated == sum(len(b) for b in held)
+    for blocks in held:
+        a.free(blocks)
+    assert a.n_allocated == 0 and a.n_free == a.n_total
+    assert ever_handed <= set(range(1, n_blocks))
+
+
+# -- scheduler ---------------------------------------------------------------------
+
+
+req_sizes = st.tuples(st.integers(1, 30), st.integers(1, 30))
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    page=st.integers(1, 8),
+    max_slots=st.integers(1, 6),
+    capacity=st.integers(4, 64),
+    budget=st.integers(0, 200),
+    events=st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), req_sizes),
+            st.tuples(st.just("admit"), st.just(None)),
+            st.tuples(st.just("finish"), st.integers(0, 100)),
+        ),
+        max_size=80,
+    ),
+)
+def test_scheduler_invariants(page, max_slots, capacity, budget, events):
+    sched = FCFSScheduler(page_size=page, max_slots=max_slots,
+                          max_live_tokens=budget,
+                          n_blocks_capacity=capacity)
+    submitted, admitted = [], []
+    for kind, arg in events:
+        if kind == "submit":
+            req = fake_request(*arg)
+            total = req.prompt_len + req.max_new_tokens
+            blocks = -(-total // page)
+            if total > sched.max_live_tokens or blocks > capacity:
+                with pytest.raises(ValueError):
+                    sched.submit(req)
+                continue
+            sched.submit(req)
+            submitted.append(req)
+        elif kind == "admit":
+            admitted += sched.admit()
+        elif sched.running:
+            keys = sorted(sched.running)
+            sched.finish(sched.running[keys[arg % len(keys)]])
+        # the invariants, after every event
+        live = sum(r.prompt_len + r.max_new_tokens
+                   for r in sched.running.values())
+        assert live == sched.live_tokens <= sched.max_live_tokens
+        assert sched.reserved_blocks <= capacity
+        assert sched.n_running <= max_slots
+        slots = [r.slot for r in sched.running.values()]
+        assert len(set(slots)) == len(slots)  # no slot double-booked
+    # FCFS: requests were admitted in exactly submission order
+    assert admitted == submitted[: len(admitted)]
+
+
+# -- engine-shaped lifecycle: scheduler + allocator + lazy growth -------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    page=st.integers(1, 6),
+    n_blocks=st.integers(3, 48),
+    reqs=st.lists(req_sizes, min_size=1, max_size=20),
+    steps=st.integers(1, 200),
+)
+def test_lazy_allocation_never_exhausts_reserved_pool(page, n_blocks, reqs,
+                                                      steps):
+    """Reserving worst-case blocks at admission guarantees that growing a
+    request's block list token-by-token can never fail, and eviction
+    returns every block (the serve engine's memory-safety argument)."""
+    alloc = PageAllocator(n_blocks)
+    sched = FCFSScheduler(page_size=page, max_slots=4, max_live_tokens=0,
+                          n_blocks_capacity=alloc.n_total)
+    blocks_of: dict[int, list[int]] = {}
+    tokens_of: dict[int, int] = {}
+    for pl, gen in reqs:
+        req = fake_request(pl, gen)
+        try:
+            sched.submit(req)
+        except ValueError:
+            continue   # larger than the whole pool: rejected at submit
+    for _ in range(steps):
+        for req in sched.admit():
+            rid = id(req)
+            blocks_of[rid] = alloc.alloc(-(-req.prompt_len // page))
+            tokens_of[rid] = req.prompt_len
+        if not sched.running:
+            if not sched.waiting:
+                break
+            continue
+        for req in list(sched.running.values()):
+            rid = id(req)
+            tokens_of[rid] += 1   # one decoded token
+            need = -(-tokens_of[rid] // page)
+            if need > len(blocks_of[rid]):
+                # must never raise: reservation covers the worst case
+                blocks_of[rid] += alloc.alloc(need - len(blocks_of[rid]))
+            assert len(blocks_of[rid]) <= req.reserved_blocks
+            if tokens_of[rid] >= req.prompt_len + req.max_new_tokens:
+                alloc.free(blocks_of.pop(rid))
+                del tokens_of[rid]
+                sched.finish(req)
+        assert alloc.n_allocated <= sched.reserved_blocks
+        assert alloc.n_free + alloc.n_allocated == alloc.n_total
+    # drain whatever is still running, then the pool must be whole
+    for req in list(sched.running.values()):
+        alloc.free(blocks_of.pop(id(req)))
+        sched.finish(req)
+    assert alloc.n_allocated == 0
+    assert alloc.n_free == alloc.n_total
