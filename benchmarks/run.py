@@ -19,8 +19,8 @@ import argparse
 import json
 
 
-SECTIONS = ("table1", "table2", "table3", "kernels", "stacked", "serve",
-            "roofline")
+SECTIONS = ("table1", "table2", "plan", "table3", "kernels", "stacked",
+            "serve", "roofline")
 
 
 def main() -> None:
@@ -54,6 +54,11 @@ def main() -> None:
 
         print("\n# === Table 2 (paper: sparsity split between G_o and G_i) ===")
         rows += table2_sparsity_dist.run(print)
+    if want("plan"):
+        from . import table2_sparsity_dist
+
+        print("\n# === Plan solver (per-layer sparsity distribution) ===")
+        rows += table2_sparsity_dist.run_plan(print)
     if want("table3"):
         from . import table3_row_repetition
 

@@ -9,7 +9,11 @@
   4. dispatch one layer through every registered sparse backend via the
      pluggable API (repro.sparsity.api) and check they agree,
   5. train a tiny RBGP4-sparse MLP on a toy task — the mask is fixed,
-     learning happens through the sparse connections only.
+     learning happens through the sparse connections only,
+  6. the SparsityPlan API: lower a uniform SparsityConfig to a plan
+     (bit-identical masks), solve a global memory budget into per-layer
+     pow-2 sparsities, certify the factors spectrally, and round-trip the
+     plan through JSON.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -119,4 +123,43 @@ for i in range(500):
 print(f"  mse step 0: {losses[0]:.4f} -> step 500: {losses[-1]:.4f} "
       f"({losses[0]/losses[-1]:.0f}x down; mask stayed fixed)")
 assert losses[-1] < losses[0] / 5
+
+# 6. ------------------------------------------------------------------
+print("\nSparsityPlan: per-layer sparsity as declarative path rules")
+from repro.sparsity import (
+    SparsityPlan, certify, lower_config, plan_density, solve_budget,
+)
+
+# a SparsityConfig is just the one-rule uniform plan (the legacy shim):
+uni_cfg = SparsityConfig(pattern="rbgp4", sparsity=0.75, min_dim=1)
+uniform = lower_config(uni_cfg)
+lin_a = SparseLinear(512, 512, uni_cfg, name="layer")     # config by value
+lin_b = SparseLinear(512, 512, uniform, name="layer")     # plan by path
+assert (lin_a.pattern.mask() == lin_b.pattern.mask()).all()
+print(f"  uniform plan {uniform.fingerprint()}: masks bit-identical to the "
+      f"SparsityConfig path")
+
+# budget solving: give the solver the model's (path -> shape) table and a
+# global memory target; it allocates pow-2 steps largest-matmul-first
+shapes = {
+    "l0.attn.wq": (1024, 1024), "l0.mlp.gate": (4096, 1024),
+    "l0.mlp.down": (1024, 4096), "l0.attn.wk": (128, 1024),
+}
+plan = solve_budget(shapes, target_density=0.25, min_dim=256)
+print(f"  budget 0.25 -> achieved {plan_density(plan, shapes):.4f}:")
+for r in plan.rules:
+    print(f"    {r.spec.pattern}@{r.spec.sparsity:.4f}  <- {r.match[:60]}")
+
+# spectral certification + JSON round trip (bit-identical masks)
+rep = certify(plan, shapes)
+print(f"  certify: {rep['summary']['n_proper_ramanujan']} proper Ramanujan "
+      f"factors, all within bound: {rep['summary']['all_ok']}")
+restored = SparsityPlan.loads(plan.dumps())
+assert restored.fingerprint() == plan.fingerprint()
+for path, (m, k) in shapes.items():
+    assert (restored.pattern_for(path, m, k).mask()
+            == plan.pattern_for(path, m, k).mask()).all()
+print("  JSON round trip: fingerprint + masks bit-identical")
+assert rep["summary"]["all_ok"]
+
 print("\nquickstart OK")

@@ -2,7 +2,21 @@
 
 Wraps launch/train.py (checkpointing, auto-resume, failure drills, grad
 accumulation) with a self-contained "paper technique on an LM" setup:
-a TinyLlama-family decoder with every projection RBGP4-sparse at 75%.
+a TinyLlama-family decoder sparsified through the SparsityPlan API.
+
+Two profiles (--profile):
+  * ``uniform``: every projection RBGP4-sparse at 75% — the classic
+    single-knob setup, written as a one-rule plan;
+  * ``depth`` (default): a depth-profiled heterogeneous plan — early
+    layers (closest to the embedding, where the paper keeps the first
+    layer dense) at 50% with dense attention outputs, deep layers at 75%
+    with attention outputs one pow-2 step denser (50%).  Layers whose
+    resolved specs differ
+    can't stack under one lax.scan period, so the Stack automatically
+    falls back to explicit layers for this plan.
+
+The plan's fingerprint is stamped into every checkpoint; restoring under
+a different profile refuses loudly instead of scrambling masks.
 
 Defaults are sized for this single-core CPU container (~2M params,
 200 steps, loss drops from ~7 to <3 on the synthetic recurrence data).
@@ -18,10 +32,32 @@ import sys
 from repro.configs import TrainConfig, get_config, reduce_config, apply_sparsity
 from repro.data import Prefetcher, TokenStream
 from repro.models import LMModel
+from repro.sparsity import PatternSpec, PlanRule, SparsityPlan
 from repro.train import Trainer
 
 
-def config(size: str):
+def make_plan(profile: str, n_layers: int) -> SparsityPlan:
+    def spec(sp):
+        return PatternSpec(pattern="rbgp4", sparsity=sp,
+                           backend="xla_masked", min_dim=64)
+
+    if profile == "uniform":
+        return SparsityPlan.uniform(spec(0.75), note="uniform 75%")
+    # depth profile: shallow half at 50% with dense attention output
+    # projections, deep half at 75% with wo one pow-2 step denser (50%)
+    shallow = "|".join(f"l{i}" for i in range(n_layers // 2))
+    deep = "|".join(f"l{i}" for i in range(n_layers // 2, n_layers))
+    return SparsityPlan(rules=(
+        PlanRule(rf"({shallow})\.attn\.wo", PatternSpec(),
+                 note="shallow wo: kept dense"),
+        PlanRule(rf"({shallow})\..*", spec(0.5), note="shallow half @ 50%"),
+        PlanRule(rf"({deep})\.attn\.wo", spec(0.5),
+                 note="deep wo: one step denser"),
+        PlanRule(rf"({deep})\..*", spec(0.75), note="deep half @ 75%"),
+    ))
+
+
+def config(size: str, profile: str):
     base = get_config("tinyllama-1.1b")
     if size == "cpu":
         cfg = reduce_config(base).with_(n_layers=4, vocab_size=512)
@@ -32,8 +68,7 @@ def config(size: str):
         )
     else:
         raise ValueError(size)
-    return apply_sparsity(cfg, pattern="rbgp4", sparsity=0.75,
-                          backend="xla_masked", min_dim=64)
+    return apply_sparsity(cfg, plan=make_plan(profile, cfg.n_layers))
 
 
 def main():
@@ -44,13 +79,21 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=5e-2)
     ap.add_argument("--simulate-failure", type=int, default=None)
+    ap.add_argument("--profile", default="depth",
+                    choices=["uniform", "depth"],
+                    help="sparsity plan: one-rule uniform 75%%, or the "
+                         "depth-profiled heterogeneous plan")
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_example_lm")
     args = ap.parse_args()
 
-    cfg = config(args.size)
+    cfg = config(args.size, args.profile)
     model = LMModel(cfg)
+    plan = cfg.sparsity_rules
     print(f"model: {cfg.name} ({model.n_params():,} params, "
-          f"rbgp4 @ {cfg.sparsity.sparsity:.0%} on all projections)")
+          f"{args.profile} plan {plan.fingerprint()}, "
+          f"{len(plan.rules)} rules)")
+    for r in plan.rules:
+        print(f"  {r.spec.pattern}@{r.spec.sparsity:.2f}  {r.note}")
 
     def loss_fn(params, batch):
         loss, (ce, aux) = model.loss(params, batch, train=True)
@@ -61,7 +104,10 @@ def main():
                        checkpoint_every=50, checkpoint_dir=args.checkpoint_dir)
     data = Prefetcher(TokenStream(cfg.vocab_size, args.batch, args.seq, seed=0))
     params = model.init(__import__("jax").random.PRNGKey(0))
-    tr = Trainer(loss_fn, params, tcfg, data)
+    # the plan fingerprint rides with every checkpoint: resuming this
+    # directory under the other --profile refuses instead of mixing masks
+    tr = Trainer(loss_fn, params, tcfg, data,
+                 plan_fingerprint=plan.fingerprint())
     resumed = tr.try_resume()
     if resumed:
         print(f"auto-resumed from step {resumed}")

@@ -65,8 +65,13 @@ def list_archs(lm_only: bool = False) -> list[str]:
 
 def apply_sparsity(cfg: ModelConfig, pattern: str = "rbgp4",
                    sparsity: float = 0.75, backend: str = "xla_masked",
-                   min_dim: int = 1024) -> ModelConfig:
-    """Enable the paper's technique on any architecture config."""
+                   min_dim: int = 1024, plan=None) -> ModelConfig:
+    """Enable the paper's technique on any architecture config.
+
+    ``plan`` (a :class:`repro.sparsity.SparsityPlan`) takes precedence over
+    the uniform knobs and is matched per module path."""
+    if plan is not None:
+        return cfg.with_(plan=plan)
     return cfg.with_(sparsity=SparsityConfig(
         pattern=pattern, sparsity=sparsity, backend=backend, min_dim=min_dim,
     ))
@@ -192,6 +197,7 @@ def reduce_config(cfg: ModelConfig, *, sparsity_backend: str = "xla_masked"):
         n_patches=4 if cfg.frontend == "vision" else 0,
         moe=moe, mla=mla, mamba=mamba, rwkv=rwkv,
         sparsity=sp,
+        plan=None,  # plans are shape-specific; the reduced config re-lowers
         compute_dtype="float32",
     )
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.sparsity import SparsityConfig
+from repro.sparsity import SparsityConfig, SparsityPlan, lower_config
 
 __all__ = [
     "MoEConfig",
@@ -91,8 +91,13 @@ class ModelConfig:
     frontend: Optional[str] = None
     n_codebooks: int = 1
     n_patches: int = 0
-    # the paper's technique — first-class field
+    # the paper's technique — first-class field.  ``sparsity`` is the
+    # legacy uniform knob (a one-rule shim); ``plan`` is the declarative
+    # per-layer SparsityPlan and wins when set.  Model constructors only
+    # ever see the resolved plan (``sparsity_rules``) and match their
+    # module paths against it.
     sparsity: SparsityConfig = dataclasses.field(default_factory=SparsityConfig)
+    plan: Optional[SparsityPlan] = None
     # numerics
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
@@ -104,6 +109,12 @@ class ModelConfig:
     # carries alias in place and the stacked-ys writes grow with U, so the
     # default stays 1; the knob remains for real-TPU wall-clock tuning.
     ssm_unroll: int = 1
+
+    @property
+    def sparsity_rules(self) -> SparsityPlan:
+        """The plan every model constructor resolves against: ``plan`` if
+        set, else ``sparsity`` lowered to a uniform one-rule plan."""
+        return self.plan if self.plan is not None else lower_config(self.sparsity)
 
     @property
     def head_dim_(self) -> int:

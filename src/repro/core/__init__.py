@@ -15,7 +15,15 @@ from .product import (
     rcubs_levels,
     connectivity_storage_edges,
 )
-from .rbgp import RBGP4Spec, RBGP4Layout, design_rbgp4
+from .rbgp import (
+    RBGP4Spec,
+    RBGP4Layout,
+    design_rbgp4,
+    FactorSpec,
+    RBGPSpec,
+    design_rbgp,
+    canonicalize_factors,
+)
 from .spectral import (
     singular_values,
     spectral_gap,
@@ -40,6 +48,10 @@ __all__ = [
     "RBGP4Spec",
     "RBGP4Layout",
     "design_rbgp4",
+    "FactorSpec",
+    "RBGPSpec",
+    "design_rbgp",
+    "canonicalize_factors",
     "singular_values",
     "spectral_gap",
     "ideal_spectral_gap",

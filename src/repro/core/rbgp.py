@@ -39,7 +39,10 @@ from .graphs import (
 )
 from .product import ProductStructure
 
-__all__ = ["RBGP4Spec", "RBGP4Layout", "design_rbgp4", "pow2_sparsity_steps"]
+__all__ = [
+    "RBGP4Spec", "RBGP4Layout", "design_rbgp4", "pow2_sparsity_steps",
+    "FactorSpec", "RBGPSpec", "design_rbgp", "canonicalize_factors",
+]
 
 
 def _v2(x: int) -> int:
@@ -429,5 +432,319 @@ def design_rbgp4(
         seed=seed,
     )
     spec.validate()
+    assert spec.m == m and spec.k == k, (spec.m, spec.k, m, k)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Product algebra: arbitrary Ramanujan/complete factor chains (paper §3-4).
+#
+# RBGP4 is one point in the paper's product-of-k-graphs design space.  The
+# algebra below describes any chain G_1 (x) ... (x) G_K of 'ramanujan' and
+# 'complete' factors; RBGP2 (one sparse outer graph x one dense block),
+# RBGP4, and hierarchical-block patterns (Vooturi et al. 2018: complete
+# outer blocking around a sparse factor) are all instances.  Chains with at
+# most two sparse factors canonicalize onto RBGP4Spec (factor reordering is
+# a perfect-shuffle isomorphism), which is what unlocks the compact storage
+# and the Pallas kernels; deeper chains still materialize masks and certify
+# spectrally through ProductStructure.
+# ---------------------------------------------------------------------------
+
+#: sentinel sizes/sparsities meaning "let the designer allocate this"
+AUTO = 0
+AUTO_SP = -1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorSpec:
+    """One fully-allocated factor of a product chain.
+
+    ``kind`` is 'ramanujan' or 'complete'; a 'ramanujan' factor with
+    sparsity 0 degenerates to complete (generate_ramanujan returns
+    K_{n_l, n_r} directly).
+    """
+
+    kind: str
+    n_left: int
+    n_right: int
+    sparsity: float = 0.0
+
+    @property
+    def d_left(self) -> int:
+        return round((1.0 - self.sparsity) * self.n_right)
+
+    @property
+    def d_right(self) -> int:
+        return round((1.0 - self.sparsity) * self.n_left)
+
+    @property
+    def n_edges(self) -> int:
+        return self.n_left * self.d_left
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.kind == "ramanujan" and self.sparsity > 0.0
+
+
+def canonicalize_factors(factors) -> tuple[tuple[str, int, int, float], ...]:
+    """Normalize user-facing factor templates to a hashable tuple form.
+
+    Accepted per-factor spellings:
+      * ``"ramanujan"`` / ``"complete"``            (auto size, auto sparsity)
+      * ``(kind, (n_left, n_right))``               (fixed size)
+      * ``(kind, (n_left, n_right), sparsity)``     (fixed size + sparsity)
+      * ``{"kind": ..., "shape": ..., "sparsity": ...}``
+
+    Canonical entries are ``(kind, n_left, n_right, sparsity)`` with
+    ``AUTO`` (0) sizes / ``AUTO_SP`` (-1.0) sparsity for designer-allocated
+    slots — hashable (lru/config-friendly) and JSON round-trippable.
+    """
+    out = []
+    for f in factors:
+        if isinstance(f, str):
+            kind, shape, sp = f, None, None
+        elif isinstance(f, dict):
+            kind = f["kind"]
+            shape = f.get("shape")
+            sp = f.get("sparsity")
+        else:
+            seq = tuple(f)
+            if len(seq) == 4 and isinstance(seq[1], int):  # already canonical
+                kind, shape, sp = seq[0], (seq[1], seq[2]), seq[3]
+                if shape == (AUTO, AUTO):
+                    shape = None
+                if sp == AUTO_SP:
+                    sp = None
+            else:
+                kind = seq[0]
+                shape = seq[1] if len(seq) > 1 else None
+                sp = seq[2] if len(seq) > 2 else None
+        if kind not in ("ramanujan", "complete"):
+            raise ValueError(f"factor kind must be 'ramanujan' or 'complete',"
+                             f" got {kind!r}")
+        if kind == "complete" and sp not in (None, 0.0):
+            raise ValueError("complete factors cannot carry sparsity")
+        nl, nr = (AUTO, AUTO) if shape is None else (int(shape[0]), int(shape[1]))
+        out.append((kind, nl, nr,
+                    AUTO_SP if sp is None else float(sp)))
+    if not out:
+        raise ValueError("need at least one factor")
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class RBGPSpec:
+    """A fully-allocated product chain for an (M, K) weight matrix."""
+
+    factors: tuple[FactorSpec, ...]
+    seed: int = 0
+
+    @property
+    def m(self) -> int:
+        return math.prod(f.n_left for f in self.factors)
+
+    @property
+    def k(self) -> int:
+        return math.prod(f.n_right for f in self.factors)
+
+    @property
+    def sparsity(self) -> float:
+        dens = 1.0
+        for f in self.factors:
+            dens *= 1.0 - f.sparsity
+        return 1.0 - dens
+
+    @property
+    def nnz_per_row(self) -> int:
+        return math.prod(f.d_left for f in self.factors)
+
+    @property
+    def nnz(self) -> int:
+        return self.m * self.nnz_per_row
+
+    @property
+    def stored_index_edges(self) -> int:
+        """Succinct connectivity storage: Sigma |E_i| (paper §4)."""
+        return sum(f.n_edges for f in self.factors)
+
+    def sample(self) -> ProductStructure:
+        """Deterministically sample the factor graphs (chain order).
+
+        Seeds are derived per factor index from ``self.seed``, so every
+        process reconstructs the identical mask from the spec alone (the
+        same no-communication contract as RBGP4Layout).
+        """
+        graphs = []
+        for i, f in enumerate(self.factors):
+            if f.kind == "complete" or f.sparsity == 0.0:
+                graphs.append(complete_bipartite(f.n_left, f.n_right))
+            else:
+                graphs.append(generate_ramanujan(
+                    f.n_left, f.n_right, f.sparsity,
+                    seed=self.seed * 4096 + 2 * i + 1,
+                ))
+        return ProductStructure(tuple(graphs))
+
+    def to_rbgp4(self) -> Optional[RBGP4Spec]:
+        """Canonicalize onto RBGP4Spec when the chain has <= 2 sparse factors.
+
+        Factor reordering is a perfect-shuffle row/column permutation — a
+        graph isomorphism — so connectivity guarantees are preserved; the
+        complete factors collapse into G_r (their product is what matters
+        for the layout).  Returns None when the chain is not expressible
+        (then masks come from :meth:`sample`).
+        """
+        sparse = [f for f in self.factors if f.is_sparse]
+        if len(sparse) > 2:
+            return None
+        r_l = r_r = 1
+        for f in self.factors:
+            if not f.is_sparse:
+                r_l *= f.n_left
+                r_r *= f.n_right
+        g_o = (sparse[0].n_left, sparse[0].n_right) if sparse else (1, 1)
+        sp_o = sparse[0].sparsity if sparse else 0.0
+        g_i = (sparse[1].n_left, sparse[1].n_right) if len(sparse) > 1 else (1, 1)
+        sp_i = sparse[1].sparsity if len(sparse) > 1 else 0.0
+        spec = RBGP4Spec(
+            g_o=g_o, g_r=(r_l, r_r), g_i=g_i, g_b=(1, 1),
+            sp_o=sp_o, sp_i=sp_i, seed=self.seed,
+        )
+        try:
+            spec.validate()
+        except ValueError:
+            return None
+        return spec
+
+
+def rbgp_from_rbgp4(spec: RBGP4Spec) -> RBGPSpec:
+    """The paper-order (o, r, i, b) chain view of an RBGP4Spec."""
+    return RBGPSpec(
+        factors=(
+            FactorSpec("ramanujan", *spec.g_o, sparsity=spec.sp_o),
+            FactorSpec("complete", *spec.g_r),
+            FactorSpec("ramanujan", *spec.g_i, sparsity=spec.sp_i),
+            FactorSpec("complete", *spec.g_b),
+        ),
+        seed=spec.seed,
+    )
+
+
+def _split_pow2(total: int, shares: int, first_extra: bool) -> list[int]:
+    """Split a 2-adic valuation budget into ``shares`` integer parts."""
+    base = total // shares
+    rem = total - base * shares
+    out = [base] * shares
+    for j in range(rem):
+        out[j if first_extra else shares - 1 - j] += 1
+    return out
+
+
+def design_rbgp(
+    m: int,
+    k: int,
+    sparsity: float,
+    *,
+    factors=None,
+    seed: int = 0,
+) -> RBGPSpec:
+    """Allocate an arbitrary Ramanujan/complete factor chain for (m, k).
+
+    ``factors=None`` delegates to the TPU-tuned :func:`design_rbgp4` search
+    and returns its paper-order chain — the existing RBGP4 behavior is the
+    default instance of the algebra.  Otherwise ``factors`` names the chain
+    (see :func:`canonicalize_factors`): fixed sizes are divided out of
+    (m, k) first, remaining power-of-two mass is spread over the auto-sized
+    factors (odd parts and leftover valuation to the first sparse factor —
+    the outer graph carries the irregularity, as in design_rbgp4), and the
+    total sparsity budget ``1 - 2^-k_total`` lands on the sparse factors
+    earliest-first under each factor's 2-adic feasibility cap.
+    """
+    if factors is None:
+        return rbgp_from_rbgp4(design_rbgp4(m, k, sparsity, seed=seed))
+    return _design_rbgp_chain(m, k, sparsity, canonicalize_factors(factors),
+                              seed)
+
+
+@functools.lru_cache(maxsize=4096)
+def _design_rbgp_chain(
+    m: int, k: int, sparsity: float, tmpl: tuple, seed: int
+) -> RBGPSpec:
+    k_total = pow2_sparsity_steps(sparsity)
+
+    # 1. fixed shapes divide out of (m, k)
+    rem_m, rem_k = m, k
+    for kind, nl, nr, _sp in tmpl:
+        if nl != AUTO:
+            if rem_m % nl or rem_k % nr:
+                raise ValueError(
+                    f"fixed factor {kind}({nl}x{nr}) does not divide the "
+                    f"remaining {rem_m}x{rem_k} of {m}x{k}")
+            rem_m //= nl
+            rem_k //= nr
+
+    # 2. auto sizes: spread the power-of-two mass; odd parts + leftover
+    #    valuation go to the first sparse auto factor (else the first auto)
+    auto_idx = [i for i, t in enumerate(tmpl) if t[1] == AUTO]
+    sizes: dict[int, tuple[int, int]] = {}
+    if auto_idx:
+        sparse_auto = [i for i in auto_idx if tmpl[i][0] == "ramanujan"]
+        anchor = sparse_auto[0] if sparse_auto else auto_idx[0]
+        om, vm = rem_m >> _v2(rem_m), _v2(rem_m)
+        ok_, vk = rem_k >> _v2(rem_k), _v2(rem_k)
+        vms = _split_pow2(vm, len(auto_idx), first_extra=True)
+        vks = _split_pow2(vk, len(auto_idx), first_extra=True)
+        # rotate so the anchor gets the first (largest) share + odd part
+        order = sorted(auto_idx, key=lambda i: (i != anchor, i))
+        for slot, i in enumerate(order):
+            nl = 2 ** vms[slot]
+            nr = 2 ** vks[slot]
+            if i == anchor:
+                nl *= om
+                nr *= ok_
+            sizes[i] = (nl, nr)
+    elif rem_m != 1 or rem_k != 1:
+        raise ValueError(
+            f"fixed factor sizes leave {rem_m}x{rem_k} of {m}x{k} unassigned")
+
+    shapes = [(t[1], t[2]) if t[1] != AUTO else sizes[i]
+              for i, t in enumerate(tmpl)]
+
+    # 3. sparsity: explicit steps first, remaining budget earliest-first
+    steps = [0] * len(tmpl)
+    budget = k_total
+    for i, (kind, _nl, _nr, sp) in enumerate(tmpl):
+        if kind == "ramanujan" and sp not in (AUTO_SP, 0.0):
+            steps[i] = pow2_sparsity_steps(sp)
+            budget -= steps[i]
+    if budget < 0:
+        raise ValueError(
+            f"explicit factor sparsities exceed the total budget "
+            f"1-2^-{k_total}")
+    for min_deg in (2, 1):
+        for i, (kind, _nl, _nr, sp) in enumerate(tmpl):
+            if budget == 0:
+                break
+            if kind != "ramanujan" or sp != AUTO_SP:
+                continue
+            nl, nr = shapes[i]
+            cap = _cap_steps(nl, nr, min_deg)
+            take = min(budget, cap - steps[i])
+            if take > 0:
+                steps[i] += take
+                budget -= take
+    if budget > 0:
+        raise ValueError(
+            f"chain {tmpl} cannot carry sparsity {sparsity} at {m}x{k} "
+            f"(insufficient 2-adic capacity on the sparse factors)")
+
+    spec = RBGPSpec(
+        factors=tuple(
+            FactorSpec(kind, *shapes[i],
+                       sparsity=1.0 - 2.0 ** (-steps[i]) if steps[i] else 0.0)
+            for i, (kind, _nl, _nr, _sp) in enumerate(tmpl)
+        ),
+        seed=seed,
+    )
     assert spec.m == m and spec.k == k, (spec.m, spec.k, m, k)
     return spec

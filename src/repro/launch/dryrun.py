@@ -243,8 +243,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, pattern: str,
     # raw XLA cost analysis (counts while bodies ONCE — recorded for
     # reference only; the roofline uses the trip-count-aware analyzer)
     ca = compiled.cost_analysis() or {}
-    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+    while isinstance(ca, (list, tuple)):  # older jax returns [dict]/[[dict]]
         ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        ca = {}
     rec["xla_cost_analysis"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -60,6 +60,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-live-tokens", type=int, default=0,
                     help="admission budget: max sum(prompt+gen) over "
                          "running requests (0: pool capacity)")
+    ap.add_argument("--plan", default="",
+                    help="SparsityPlan JSON (per-layer path rules); "
+                         "overrides --pattern/--sparsity/--backend")
     ap.add_argument("--pattern", default="rbgp4")
     ap.add_argument("--sparsity", type=float, default=0.75)
     ap.add_argument("--backend", default="auto",
@@ -89,15 +92,22 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
-    if args.sparsity > 0:
+    if args.plan:
+        from repro.sparsity import SparsityPlan
+
+        cfg = apply_sparsity(cfg, plan=SparsityPlan.load(args.plan))
+    elif args.sparsity > 0:
         cfg = apply_sparsity(cfg, pattern=args.pattern,
                              sparsity=args.sparsity, backend=args.backend,
                              min_dim=64)
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    sp_desc = (f"plan={cfg.sparsity_rules.fingerprint()} "
+               f"({len(cfg.sparsity_rules.rules)} rules)"
+               if cfg.plan is not None else
+               f"pattern={cfg.sparsity.pattern}@{cfg.sparsity.sparsity}")
     print(f"arch={cfg.name} params={model.n_params():,} "
-          f"pattern={cfg.sparsity.pattern}@{cfg.sparsity.sparsity} "
-          f"engine={args.engine}")
+          f"{sp_desc} engine={args.engine}")
 
     n_req = args.requests or args.batch
     if args.mixed:

@@ -46,7 +46,11 @@ def build(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
-    if args.sparsity > 0:
+    if getattr(args, "plan", ""):
+        from repro.sparsity import SparsityPlan
+
+        cfg = apply_sparsity(cfg, plan=SparsityPlan.load(args.plan))
+    elif args.sparsity > 0:
         cfg = apply_sparsity(cfg, pattern=args.pattern, sparsity=args.sparsity,
                              backend=args.backend, min_dim=args.min_dim)
     model = LMModel(cfg)
@@ -96,6 +100,12 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["cosine", "step", "constant"])
     from repro.sparsity import available_backends
 
+    ap.add_argument("--plan", default="",
+                    help="SparsityPlan JSON (see repro.launch.plan / "
+                         "SparsityPlan.save); overrides --pattern/--sparsity/"
+                         "--backend/--min-dim with per-layer path rules. "
+                         "The plan fingerprint is stamped into checkpoints "
+                         "and verified on resume.")
     ap.add_argument("--pattern", default="rbgp4")
     ap.add_argument("--sparsity", type=float, default=0.75)
     ap.add_argument("--backend", default="auto",
@@ -127,12 +137,17 @@ def main():
         autotune.set_cache_path(args.autotune_cache)
 
     cfg, model, loss_fn, params, tcfg, data = build(args)
+    plan = cfg.sparsity_rules
+    sp_desc = (f"plan={plan.fingerprint()} ({len(plan.rules)} rules)"
+               if cfg.plan is not None else
+               f"pattern={cfg.sparsity.pattern}@{cfg.sparsity.sparsity}")
     print(f"arch={cfg.name} params={model.n_params():,} "
           f"devices={jax.local_device_count()} micro={tcfg.microbatches} "
-          f"pattern={cfg.sparsity.pattern}@{cfg.sparsity.sparsity}",
+          f"{sp_desc}",
           flush=True)
 
-    trainer = Trainer(loss_fn, params, tcfg, data)
+    trainer = Trainer(loss_fn, params, tcfg, data,
+                      plan_fingerprint=plan.fingerprint())
     resumed = trainer.try_resume()
     if resumed is not None:
         print(f"auto-resumed from checkpoint at step {resumed}", flush=True)

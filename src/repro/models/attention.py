@@ -183,7 +183,7 @@ class GQAttention:
         self.name = name
         d = cfg.d_model
         hd = cfg.head_dim_
-        sp = cfg.sparsity
+        sp = cfg.sparsity_rules
         self.wq = SparseLinear(d, cfg.n_heads * hd, sp, name=f"{name}.wq")
         self.wk = SparseLinear(d, cfg.n_kv_heads * hd, sp, name=f"{name}.wk")
         self.wv = SparseLinear(d, cfg.n_kv_heads * hd, sp, name=f"{name}.wv")
@@ -404,7 +404,7 @@ class MLAttention:
         m = self.mla
         d = cfg.d_model
         H = cfg.n_heads
-        sp = cfg.sparsity
+        sp = cfg.sparsity_rules
         self.q_head = m.nope_head_dim + m.rope_head_dim
         if m.q_lora_rank:
             self.wq_a = SparseLinear(d, m.q_lora_rank, sp, name=f"{name}.wq_a")

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import EPILOGUE_ACTS
 from repro.parallel.constrain import shard
-from repro.sparsity import SparseLinear, SparsityConfig
+from repro.sparsity import SparseLinear
 
 __all__ = ["GatedMLP"]
 
@@ -33,7 +33,7 @@ class GatedMLP:
         self,
         d_model: int,
         d_ff: int,
-        sparsity: SparsityConfig,
+        sparsity,  # SparsityConfig (by value) or SparsityPlan (by path)
         act: str = "silu",
         name: str = "mlp",
     ):

@@ -66,15 +66,50 @@ def _shard_map(f, mesh, in_specs, out_specs, check_vma=False):
 
 
 class StackedExperts:
-    """(E, ...) stacked gated-MLP expert weights, RBGP4-maskable."""
+    """(E, ...) stacked gated-MLP expert weights, RBGP4-maskable.
+
+    ``sparsity`` is a legacy :class:`SparsityConfig` (applied by value) or
+    a :class:`SparsityPlan`: the in-projection (gate+up, cloned masks) and
+    the out-projection resolve at ``{name}.experts.in`` /
+    ``{name}.experts.out`` — the same paths the shape recorder reports, so
+    budget-solved plans land here without model edits.  The two paths must
+    resolve to one spec (per-side heterogeneous expert sparsity has no
+    stacked storage).
+    """
 
     def __init__(self, n_experts: int, d_model: int, d_expert: int,
-                 sparsity: SparsityConfig, act: str = "silu"):
+                 sparsity, act: str = "silu", name: str = "moe"):
         self.e = n_experts
         self.d = d_model
         self.h = d_expert
         self.act = ACTS[act]
         self.act_name = act
+        self.name = name
+        from repro.sparsity import (SparsityPlan, record_shape,
+                                    recording_active)
+
+        path_in = f"{name}.experts.in"
+        path_out = f"{name}.experts.out"
+        # gate + up share the in-projection shape; counts feed the planner
+        record_shape(path_in, d_expert, d_model, count=2 * n_experts)
+        record_shape(path_out, d_model, d_expert, count=n_experts)
+        if recording_active():
+            self.sparsity = SparsityConfig()
+            self.backend = "auto"
+            self.storage = "dense"
+            self.masked = self.compact = False
+            return
+        if isinstance(sparsity, SparsityPlan):
+            spec_in = sparsity.resolve(path_in, d_expert, d_model)
+            spec_out = sparsity.resolve(path_out, d_model, d_expert)
+            if spec_in != spec_out and (spec_in.is_sparse
+                                        or spec_out.is_sparse):
+                raise ValueError(
+                    f"StackedExperts needs one spec for both expert "
+                    f"projections, but the plan resolves {path_in!r} -> "
+                    f"{spec_in} and {path_out!r} -> {spec_out}; write rules "
+                    f"matching both paths identically")
+            sparsity = spec_in.to_config()
         self.sparsity = sparsity
         self.backend = sparsity.backend
         applies = sparsity.applies_to(d_expert, d_model) and \
@@ -224,12 +259,12 @@ class StackedExperts:
 class MoELayer:
     """Routed experts (+ optional shared experts) replacing the MLP."""
 
-    def __init__(self, d_model: int, moe: MoEConfig, sparsity: SparsityConfig,
+    def __init__(self, d_model: int, moe: MoEConfig, sparsity,
                  act: str = "silu", name: str = "moe"):
         self.d = d_model
         self.moe = moe
         self.experts = StackedExperts(
-            moe.n_experts, d_model, moe.d_expert, sparsity, act
+            moe.n_experts, d_model, moe.d_expert, sparsity, act, name=name
         )
         self.shared: Optional[GatedMLP] = None
         if moe.n_shared:

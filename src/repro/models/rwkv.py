@@ -50,7 +50,7 @@ class RWKVBlock:
         d = cfg.d_model
         self.h = d // self.rc.head_size
         self.hs = self.rc.head_size
-        sp = cfg.sparsity
+        sp = cfg.sparsity_rules
         self.w_r = SparseLinear(d, d, sp, name=f"{name}.r")
         self.w_k = SparseLinear(d, d, sp, name=f"{name}.k")
         self.w_v = SparseLinear(d, d, sp, name=f"{name}.v")

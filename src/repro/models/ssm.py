@@ -39,7 +39,7 @@ class MambaMixer:
         d = cfg.d_model
         self.d_inner = self.mc.expand * d
         self.dt_rank = self.mc.dt_rank or max(1, math.ceil(d / 16))
-        sp = cfg.sparsity
+        sp = cfg.sparsity_rules
         self.in_proj = SparseLinear(d, 2 * self.d_inner, sp, name=f"{name}.in")
         self.x_proj = SparseLinear(
             self.d_inner, self.dt_rank + 2 * self.mc.d_state,

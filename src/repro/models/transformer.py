@@ -19,7 +19,6 @@ one graph sample across periods for those backends (DESIGN.md §3).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Optional
 
@@ -37,16 +36,30 @@ from .ssm import MambaMixer, init_cache_mamba
 __all__ = ["DecoderLayer", "Stack"]
 
 
-def _layer_sparsity(cfg: ModelConfig, idx: int):
-    sp = cfg.sparsity
-    if sp.pattern != "dense" and sp.sparsity > 0.0:
-        from repro.sparsity import storage_kind
+def _layer_rules(cfg: ModelConfig, idx: int):
+    """Per-layer plan: masked-storage rules get a per-layer seed so every
+    layer samples its own graphs; compact-storage rules keep their seed
+    (compact layouts are trace-time static aux, so scanned periods must
+    share one graph sample).  For a lowered uniform SparsityConfig this is
+    bit-identical to the legacy per-layer seed rule."""
+    return cfg.sparsity_rules.offset_masked_seeds(1000 * (idx + 1))
 
-        if storage_kind(sp.backend, has_layout=sp.pattern == "rbgp4") == "compact":
-            # compact storage bakes the adjacency into the program at trace
-            # time, so scanned periods must share one graph sample
-            return sp
-    return dataclasses.replace(sp, seed=sp.seed + 1000 * (idx + 1))
+
+def _layer_plan_signature(cfg: ModelConfig, idx: int):
+    """Seed-normalized resolved specs of every projection in layer
+    ``idx`` — layers must agree on it to stack under one scan (parameter
+    pytrees, including mask-factor shapes and compact layouts, are then
+    structurally identical across periods)."""
+    from repro.sparsity import recording_shapes
+
+    with recording_shapes() as shapes:
+        DecoderLayer(cfg, idx)
+    plan = _layer_rules(cfg, idx)
+    # every path in layer idx shares the "l{idx}." prefix, so sorting by
+    # full path orders period-equivalent projections positionally
+    return plan.signature(
+        (path, m, k) for path, (m, k, _c) in sorted(shapes.items())
+    )
 
 
 class DecoderLayer:
@@ -56,7 +69,7 @@ class DecoderLayer:
         self.cfg = cfg
         self.idx = idx
         self.kind = cfg.layer_kind(idx)
-        lcfg = cfg.with_(sparsity=_layer_sparsity(cfg, idx))
+        lcfg = cfg.with_(plan=_layer_rules(cfg, idx))
         self.is_moe = cfg.is_moe_layer(idx)
 
         if self.kind == "rwkv":
@@ -78,12 +91,12 @@ class DecoderLayer:
             raise ValueError(f"unknown layer kind {self.kind!r}")
         if self.is_moe:
             self.ffn = MoELayer(
-                cfg.d_model, cfg.moe, lcfg.sparsity, cfg.hidden_act,
+                cfg.d_model, cfg.moe, lcfg.sparsity_rules, cfg.hidden_act,
                 name=f"l{idx}.moe",
             )
         else:
             self.ffn = GatedMLP(
-                cfg.d_model, cfg.d_ff, lcfg.sparsity, cfg.hidden_act,
+                cfg.d_model, cfg.d_ff, lcfg.sparsity_rules, cfg.hidden_act,
                 name=f"l{idx}.mlp",
             )
 
@@ -183,11 +196,23 @@ class Stack:
         period = len(cfg.layer_pattern)
         if cfg.moe is not None:
             period = math.lcm(period, cfg.moe.every_n_layers)
+        # with a heterogeneous plan, a layer's resolved specs are part of
+        # its scan signature: periods only stack when every projection in
+        # corresponding positions resolves to the same (seed-normalized)
+        # spec — depth-profiled plans fall back to explicit layers.
+        from repro.sparsity import recording_active
+
+        plan_sig = {}
+        if cfg.plan is not None and not recording_active():
+            plan_sig = {i: _layer_plan_signature(cfg, i) for i in range(n)}
+
         def periodic_from(h):
             for i in range(h, n):
-                sig = (cfg.layer_kind(i), cfg.is_moe_layer(i))
-                ref = (cfg.layer_kind(h + (i - h) % period),
-                       cfg.is_moe_layer(h + (i - h) % period))
+                j = h + (i - h) % period
+                sig = (cfg.layer_kind(i), cfg.is_moe_layer(i),
+                       plan_sig.get(i))
+                ref = (cfg.layer_kind(j), cfg.is_moe_layer(j),
+                       plan_sig.get(j))
                 if sig != ref:
                     return False
             return True

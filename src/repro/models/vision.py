@@ -3,9 +3,13 @@ WideResNet-40-4, with every conv lowered to im2col + SDMM so the RBGP4
 pattern applies to conv weights exactly as in the paper (W_s of shape
 (C_out, C_in*kh*kw) multiplying the unfolded input).
 
-First conv (from the 3-channel input) and the final classifier stay dense,
-matching the paper's protocol ("equal sparsity in all layers except the
-first layer connected to input and the final classifier layer").
+The paper's protocol — "equal sparsity in all layers except the first
+layer connected to input and the final classifier layer" — is expressed
+as *plan rules*, not hard-coded constructor exceptions: the default plan
+lowered from ``VisionConfig.sparsity`` prepends a keep-dense rule matching
+the stem/first-conv/classifier (and WRN shortcut-projection) paths, and
+every conv/fc resolves its pattern by module path.  Pass
+``VisionConfig(plan=...)`` for full per-layer control.
 """
 from __future__ import annotations
 
@@ -16,9 +20,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sparsity import SparseLinear, SparsityConfig
+from repro.sparsity import (
+    PatternSpec,
+    PlanRule,
+    SparseLinear,
+    SparsityConfig,
+    SparsityPlan,
+)
 
-__all__ = ["SparseConv2D", "BatchNorm", "VGG19", "WideResNet", "VisionConfig"]
+__all__ = ["SparseConv2D", "BatchNorm", "VGG19", "WideResNet", "VisionConfig",
+           "vision_plan", "KEEP_DENSE_PATHS"]
+
+#: the paper-protocol dense exceptions, as one path rule: the input conv
+#: ("conv0" in VGG, "stem" in WRN), the classifier head ("fc"), and WRN
+#: shortcut 1x1 projections ("g{g}b{b}.proj").
+KEEP_DENSE_PATHS = r"stem|conv0|fc|.*\.proj"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,20 +42,31 @@ class VisionConfig:
     name: str
     n_classes: int = 10
     sparsity: SparsityConfig = dataclasses.field(default_factory=SparsityConfig)
+    plan: Optional[SparsityPlan] = None
     width: int = 4          # WRN width multiplier
     depth: int = 40         # WRN depth (6n + 4)
+
+
+def vision_plan(cfg: VisionConfig) -> SparsityPlan:
+    """The plan a vision model resolves against: ``cfg.plan`` if set, else
+    ``cfg.sparsity`` lowered with the paper's keep-dense rule prepended."""
+    if cfg.plan is not None:
+        return cfg.plan
+    return SparsityPlan(rules=(
+        PlanRule(KEEP_DENSE_PATHS, PatternSpec(),
+                 note="paper protocol: input conv + classifier (and WRN "
+                      "shortcut projections) stay dense"),
+        PlanRule(".*", PatternSpec.from_config(cfg.sparsity),
+                 note="uniform (lowered VisionConfig.sparsity)"),
+    ))
 
 
 class SparseConv2D:
     """kxk conv as im2col + SparseLinear — the paper's SDMM formulation."""
 
-    def __init__(self, c_in, c_out, k=3, stride=1, sparsity=None, name="conv",
-                 force_dense=False):
+    def __init__(self, c_in, c_out, k=3, stride=1, sparsity=None, name="conv"):
         self.c_in, self.c_out, self.k, self.stride = c_in, c_out, k, stride
-        cfg = sparsity or SparsityConfig()
-        if force_dense:
-            cfg = SparsityConfig()
-        self.lin = SparseLinear(c_in * k * k, c_out, cfg, name=name)
+        self.lin = SparseLinear(c_in * k * k, c_out, sparsity, name=name)
 
     def init(self, key):
         return self.lin.init(key)
@@ -100,6 +127,7 @@ VGG19_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
 class VGG19:
     def __init__(self, cfg: VisionConfig):
         self.cfg = cfg
+        plan = vision_plan(cfg)
         self.convs = []
         self.bns = []
         c_prev = 3
@@ -108,13 +136,12 @@ class VGG19:
             if v == "M":
                 continue
             self.convs.append(
-                SparseConv2D(c_prev, v, 3, 1, cfg.sparsity,
-                             name=f"conv{i}", force_dense=(i == 0))
+                SparseConv2D(c_prev, v, 3, 1, plan, name=f"conv{i}")
             )
             self.bns.append(BatchNorm(v))
             c_prev = v
             i += 1
-        self.fc = SparseLinear(512, cfg.n_classes, SparsityConfig(), name="fc",
+        self.fc = SparseLinear(512, cfg.n_classes, plan, name="fc",
                                use_bias=True)
 
     def init(self, key):
@@ -147,15 +174,15 @@ class VGG19:
 # ---------------------------------------------------------------------------
 
 class WRNBlock:
-    def __init__(self, c_in, c_out, stride, sparsity, name):
+    def __init__(self, c_in, c_out, stride, plan, name):
         self.bn1 = BatchNorm(c_in)
-        self.conv1 = SparseConv2D(c_in, c_out, 3, stride, sparsity, f"{name}.c1")
+        self.conv1 = SparseConv2D(c_in, c_out, 3, stride, plan, f"{name}.c1")
         self.bn2 = BatchNorm(c_out)
-        self.conv2 = SparseConv2D(c_out, c_out, 3, 1, sparsity, f"{name}.c2")
+        self.conv2 = SparseConv2D(c_out, c_out, 3, 1, plan, f"{name}.c2")
         self.proj = None
         if stride != 1 or c_in != c_out:
-            self.proj = SparseConv2D(c_in, c_out, 1, stride, None, f"{name}.proj",
-                                     force_dense=True)
+            self.proj = SparseConv2D(c_in, c_out, 1, stride, plan,
+                                     f"{name}.proj")
 
     def init(self, key):
         ks = jax.random.split(key, 5)
@@ -183,20 +210,21 @@ class WideResNet:
 
     def __init__(self, cfg: VisionConfig):
         self.cfg = cfg
+        plan = vision_plan(cfg)
         n = (cfg.depth - 4) // 6
         widths = [16, 16 * cfg.width, 32 * cfg.width, 64 * cfg.width]
-        self.stem = SparseConv2D(3, widths[0], 3, 1, None, "stem", force_dense=True)
+        self.stem = SparseConv2D(3, widths[0], 3, 1, plan, "stem")
         self.blocks = []
         c_prev = widths[0]
         for g, w in enumerate(widths[1:]):
             for b in range(n):
                 stride = 2 if (g > 0 and b == 0) else 1
                 self.blocks.append(
-                    WRNBlock(c_prev, w, stride, cfg.sparsity, f"g{g}b{b}")
+                    WRNBlock(c_prev, w, stride, plan, f"g{g}b{b}")
                 )
                 c_prev = w
         self.bn_f = BatchNorm(c_prev)
-        self.fc = SparseLinear(c_prev, cfg.n_classes, SparsityConfig(),
+        self.fc = SparseLinear(c_prev, cfg.n_classes, plan,
                                name="fc", use_bias=True)
         self.c_final = c_prev
 

@@ -18,10 +18,26 @@ from .api import (
     dense_weight,
     expand_rbgp4_mask,
 )
+from .plan import (
+    PatternSpec,
+    PlanRule,
+    SparsityPlan,
+    lower_config,
+    solve_budget,
+    plan_density,
+    certify,
+    model_matmul_shapes,
+    recording_shapes,
+    record_shape,
+    recording_active,
+)
 from .layer import SparseLinear
 
 __all__ = [
     "SparsityConfig", "PatternInstance", "make_pattern", "PATTERNS",
+    "PatternSpec", "PlanRule", "SparsityPlan", "lower_config",
+    "solve_budget", "plan_density", "certify", "model_matmul_shapes",
+    "recording_shapes", "record_shape", "recording_active",
     "BackendCapabilities", "SparseBackend", "register_backend", "get_backend",
     "available_backends", "resolve_backend", "storage_kind",
     "SparseWeight", "DenseWeight", "MaskedWeight", "CompactWeight",

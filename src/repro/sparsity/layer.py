@@ -46,6 +46,7 @@ from .api import (
     storage_kind,
 )
 from .patterns import PatternInstance, SparsityConfig, make_pattern
+from .plan import SparsityPlan, record_shape, recording_active
 
 __all__ = ["SparseLinear", "expand_rbgp4_mask"]
 
@@ -54,13 +55,20 @@ class SparseLinear:
     """y = x @ W_s^T (+ b) with a configurable sparsity pattern.
 
     Functional module: ``init(key) -> SparseWeight``, ``apply(weight, x)``.
+
+    ``cfg`` is either a legacy :class:`SparsityConfig` (applied by value,
+    the pre-plan behavior) or a :class:`SparsityPlan`, in which case the
+    layer resolves its pattern *by module path*: ``name`` is matched
+    against the plan's ordered rules (``plan.resolve(name)``).  Model
+    constructors pass the plan plus their hierarchical name — no model
+    file decides its own dense exceptions or ``min_dim`` special cases.
     """
 
     def __init__(
         self,
         in_features: int,
         out_features: int,
-        cfg: Optional[SparsityConfig] = None,
+        cfg: Optional[Union[SparsityConfig, SparsityPlan]] = None,
         *,
         use_bias: bool = False,
         param_dtype=jnp.float32,
@@ -68,12 +76,23 @@ class SparseLinear:
     ):
         self.in_features = in_features
         self.out_features = out_features
-        self.cfg = cfg or SparsityConfig()
         self.use_bias = use_bias
         self.param_dtype = param_dtype
         self.name = name
 
         m, k = out_features, in_features
+        record_shape(name, m, k)
+        if recording_active():
+            # shape-collection pass: no patterns, no storage decisions
+            self.cfg = SparsityConfig()
+            self.mode = "dense"
+            self.pattern = None
+            self.backend_name = "auto"
+            return
+        if isinstance(cfg, SparsityPlan):
+            cfg = cfg.resolve(name, m, k).to_config()
+        self.cfg = cfg or SparsityConfig()
+
         if not self.cfg.applies_to(m, k):
             self.mode = "dense"
             self.pattern: Optional[PatternInstance] = None

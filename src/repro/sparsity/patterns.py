@@ -1,6 +1,9 @@
-"""Sparsity pattern registry: dense | unstructured | block | rbgp4.
+"""Sparsity pattern registry: dense | unstructured | block | rbgp4 | rbgp.
 
-These are the four patterns benchmarked in the paper's Table 1.  Each maker
+The first four are the patterns benchmarked in the paper's Table 1; 'rbgp'
+is the generalized product chain (``SparsityConfig.factors`` names any
+Ramanujan/complete factor sequence — see ``repro.core.design_rbgp``), of
+which rbgp4 is the default instance.  Each maker
 returns a ``PatternInstance`` holding the (lazy) mask and analytic memory
 accounting.  Masks are deterministic in (shape, sparsity, seed) so that every
 data-parallel rank reconstructs identical masks with no communication.
@@ -14,7 +17,13 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import RBGP4Layout, RBGP4Spec, design_rbgp4
+from repro.core import (
+    RBGP4Layout,
+    RBGP4Spec,
+    canonicalize_factors,
+    design_rbgp,
+    design_rbgp4,
+)
 
 __all__ = ["SparsityConfig", "PatternInstance", "make_pattern", "PATTERNS"]
 
@@ -44,6 +53,9 @@ class SparsityConfig:
     block: tuple[int, int] = (4, 4)
     seed: int = 0
     min_dim: int = 256
+    # 'rbgp' pattern only: canonical factor-chain template (see
+    # repro.core.canonicalize_factors); None = the default RBGP4 chain.
+    factors: Optional[tuple] = None
 
     def applies_to(self, m: int, k: int) -> bool:
         if self.pattern == "dense" or self.sparsity <= 0.0:
@@ -60,10 +72,11 @@ class PatternInstance:
     k: int
     sparsity: float
     mask_fn: Callable[[], np.ndarray]  # lazy: masks can be big
-    layout: Optional[RBGP4Layout] = None  # rbgp4 only
+    layout: Optional[RBGP4Layout] = None  # rbgp4 / rbgp4-expressible chains
     nnz: int = 0
     index_bytes_succinct: int = 0
     index_bytes_full: int = 0
+    chain: Optional[object] = None  # RBGPSpec for non-RBGP4 'rbgp' chains
 
     def mask(self) -> np.ndarray:
         return self.mask_fn()
@@ -78,6 +91,7 @@ class PatternInstance:
             "unstructured": self.index_bytes_full,
             "block": self.index_bytes_full,
             "rbgp4": self.index_bytes_succinct,
+            "rbgp": self.index_bytes_succinct,
         }[self.name]
         return {"values": values, "index": idx * index_bytes // 4,
                 "total": values + idx * index_bytes // 4}
@@ -161,11 +175,48 @@ def _rbgp4(m, k, sparsity, cfg):
     )
 
 
+def _rbgp(m, k, sparsity, cfg):
+    """Generalized product chain (paper §3-4 algebra; 'rbgp4' is the
+    default instance).  Templates with <= 2 Ramanujan factors canonicalize
+    onto an RBGP4 layout (compact storage + kernels available); deeper
+    chains materialize their mask from the sampled ProductStructure and
+    run on the masked backends.  The decision is template-level (not
+    realized-sparsity-level) so it is knowable without shapes — plan
+    machinery (seed offsetting, scan-stacking signatures) must predict the
+    storage kind before any pattern is built.
+    """
+    spec = design_rbgp(m, k, sparsity, factors=cfg.factors, seed=cfg.seed)
+    if cfg.factors is None:
+        n_ram = 2
+    else:
+        n_ram = sum(1 for t in canonicalize_factors(cfg.factors)
+                    if t[0] == "ramanujan")
+    r4 = spec.to_rbgp4() if n_ram <= 2 else None
+    if r4 is not None:
+        layout = _layout_for(r4)
+        mem = layout.memory_bytes()
+        return PatternInstance(
+            name="rbgp", m=m, k=k, sparsity=spec.sparsity,
+            mask_fn=layout.mask, layout=layout, nnz=spec.nnz,
+            index_bytes_succinct=mem["index_succinct"],
+            index_bytes_full=mem["index_full"],
+            chain=spec,
+        )
+    return PatternInstance(
+        name="rbgp", m=m, k=k, sparsity=spec.sparsity,
+        mask_fn=lambda: spec.sample().mask(), nnz=spec.nnz,
+        index_bytes_succinct=spec.stored_index_edges * 4,
+        index_bytes_full=spec.nnz * 4,
+        chain=spec,
+    )
+
+
 PATTERNS = {
     "dense": _dense,
     "unstructured": _unstructured,
     "block": _block,
     "rbgp4": _rbgp4,
+    "rbgp": _rbgp,
 }
 
 

@@ -1,0 +1,709 @@
+"""SparsityPlan: declarative per-layer sparsity for a whole model.
+
+The paper's RBGP construction is a *general* product-of-k-graphs family,
+and the right sparsity level is per-layer and hardware-budget-driven
+(Vooturi et al. 2018; Shinn et al. 2023).  This module is the API that
+plans, certifies, and serializes heterogeneous sparsity across a model:
+
+  * :class:`PatternSpec` — one declarative pattern description (what
+    ``SparsityConfig`` says about a single matrix, minus the implicit
+    "applies to every layer" semantics, plus generalized ``rbgp`` factor
+    chains);
+  * :class:`SparsityPlan` — an ordered list of ``(path-regex,
+    PatternSpec)`` rules.  Every ``SparseLinear`` (and ``StackedExperts``)
+    resolves its pattern by *module path* against the first matching rule;
+    no rule matches -> dense.  Plans are frozen, hashable (they ride on
+    frozen config dataclasses), JSON round-trippable, and content-
+    fingerprinted (checkpoints refuse restores under a different plan);
+  * :func:`solve_budget` — allocates per-layer power-of-two sparsity steps
+    to hit a global memory/FLOP budget, largest-matmul-first;
+  * :func:`certify` — spectral report: every sampled Ramanujan factor's
+    second singular value against the sqrt(d_l-1)+sqrt(d_r-1) bound;
+  * :func:`model_matmul_shapes` — records every projection's
+    ``path -> (m, k, count)`` for a config by constructing the model under
+    a recording context (no patterns or parameters are materialized).
+
+``SparsityConfig`` survives as a one-rule shim: :meth:`SparsityPlan.
+from_config` lowers it to a uniform plan (with a ``DeprecationWarning``;
+the internal bridge :func:`lower_config` is the quiet equivalent), and a
+lowered uniform plan produces bit-identical masks to the pre-plan path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import re
+import warnings
+from typing import Callable, Optional, Union
+
+from repro.core import design_rbgp, design_rbgp4
+from repro.core.graphs import (
+    ramanujan_bound,
+    second_singular_value,
+)
+from .patterns import PatternInstance, SparsityConfig, make_pattern
+
+__all__ = [
+    "PatternSpec",
+    "PlanRule",
+    "SparsityPlan",
+    "lower_config",
+    "solve_budget",
+    "plan_density",
+    "certify",
+    "model_matmul_shapes",
+    "recording_shapes",
+    "record_shape",
+    "recording_active",
+]
+
+
+# ---------------------------------------------------------------------------
+# PatternSpec
+# ---------------------------------------------------------------------------
+
+def _config_kwargs(cfg: SparsityConfig) -> dict:
+    return {f.name: getattr(cfg, f.name)
+            for f in dataclasses.fields(SparsityConfig)}
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSpec(SparsityConfig):
+    """Declarative pattern for the layers one plan rule matches.
+
+    A thin subclass of :class:`SparsityConfig` (same fields, no extras —
+    any field added to the config is automatically part of specs):
+    ``to_config`` reconstructs the exact config so mask construction flows
+    through the one ``make_pattern`` path — this is what makes lowered
+    plans bit-identical to the legacy single-config behavior — and the
+    subclass carries the plan-side helpers (storage/json/layout
+    predicates).
+    """
+
+    @classmethod
+    def from_config(cls, cfg: SparsityConfig) -> "PatternSpec":
+        return cls(**_config_kwargs(cfg))
+
+    def to_config(self) -> SparsityConfig:
+        return SparsityConfig(**_config_kwargs(self))
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.pattern != "dense" and self.sparsity > 0.0
+
+    def may_have_layout(self) -> bool:
+        """Whether this spec resolves to an RBGP4 layout (and hence can use
+        compact storage).  For ``rbgp`` chains this is the same
+        template-level rule ``patterns._rbgp`` applies — templates with
+        <= 2 Ramanujan factors get a layout — so the storage kind is
+        knowable without shapes (per-shape ``to_rbgp4`` infeasibility can
+        still fall back to masked storage; that direction only shares a
+        graph sample, it never breaks scan stacking)."""
+        if self.pattern == "rbgp4":
+            return True
+        if self.pattern != "rbgp":
+            return False
+        if self.factors is None:
+            return True
+        from repro.core import canonicalize_factors
+
+        n_ram = sum(1 for t in canonicalize_factors(self.factors)
+                    if t[0] == "ramanujan")
+        return n_ram <= 2
+
+    def storage(self) -> str:
+        """'dense' | 'masked' | 'compact' — what storage this spec selects
+        (assuming it applies; used for scan/seed decisions, not dispatch)."""
+        if not self.is_sparse:
+            return "dense"
+        from .api import storage_kind
+
+        try:
+            return storage_kind(self.backend, has_layout=self.may_have_layout())
+        except ValueError:
+            return "masked"
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["block"] = list(self.block)
+        if self.factors is not None:
+            d["factors"] = [list(f) if not isinstance(f, str) else f
+                            for f in self.factors]
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PatternSpec":
+        factors = d.get("factors")
+        if factors is not None:
+            factors = tuple(
+                f if isinstance(f, str) else tuple(
+                    tuple(x) if isinstance(x, list) else x for x in f)
+                for f in factors
+            )
+        return cls(
+            pattern=d.get("pattern", "dense"),
+            sparsity=float(d.get("sparsity", 0.0)),
+            backend=d.get("backend", "xla_masked"),
+            block=tuple(d.get("block", (4, 4))),
+            seed=int(d.get("seed", 0)),
+            min_dim=int(d.get("min_dim", 256)),
+            factors=factors,
+        )
+
+
+DENSE = PatternSpec()
+
+
+# ---------------------------------------------------------------------------
+# SparsityPlan
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def _compile(pattern: str) -> re.Pattern:
+    return re.compile(pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRule:
+    """One ordered rule: full-match ``match`` regex over the module path."""
+
+    match: str
+    spec: PatternSpec
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityPlan:
+    """Ordered (path-regex, PatternSpec) rules; first full match wins.
+
+    A path that matches no rule resolves dense — "keep dense" is the
+    default, and sparsification is always an explicit rule.
+    """
+
+    rules: tuple[PlanRule, ...] = ()
+    version: int = 1
+
+    # -- resolution ---------------------------------------------------------
+    def resolve(self, path: str, m: Optional[int] = None,
+                k: Optional[int] = None) -> PatternSpec:
+        """First rule whose regex full-matches ``path`` (shape-agnostic;
+        per-shape applicability — ``min_dim``, dense patterns — is the
+        consumer's ``applies_to`` check, exactly as with SparsityConfig)."""
+        for r in self.rules:
+            if _compile(r.match).fullmatch(path):
+                return r.spec
+        return DENSE
+
+    def pattern_for(self, path: str, m: int, k: int) -> PatternInstance:
+        """Realized PatternInstance for one (path, m, k) site — what a
+        ``SparseLinear`` constructed at that path builds."""
+        spec = self.resolve(path, m, k)
+        if not spec.applies_to(m, k):
+            return make_pattern(SparsityConfig(), m, k)
+        return make_pattern(spec.to_config(), m, k)
+
+    def materialize(self, shapes: dict) -> dict:
+        """``{path: PatternInstance}`` over a ``{path: (m, k[, count])}``
+        shape table (see :func:`model_matmul_shapes`)."""
+        return {path: self.pattern_for(path, *shp[:2])
+                for path, shp in shapes.items()}
+
+    # -- scan/seed plumbing -------------------------------------------------
+    def offset_masked_seeds(self, offset: int) -> "SparsityPlan":
+        """Per-layer seed decorrelation (transformer scan contract).
+
+        Masked-storage rules get ``seed + offset`` so every layer samples
+        its own graphs (factors are parameters and stack across scanned
+        periods); compact-storage rules keep their seed — compact layouts
+        are trace-time static aux data, so scanned periods must share one
+        graph sample.  Mirrors the legacy per-layer ``SparsityConfig``
+        seed rule bit-for-bit for lowered uniform plans.
+        """
+        if offset == 0:
+            return self
+        new = []
+        for r in self.rules:
+            if r.spec.is_sparse and r.spec.storage() == "compact":
+                new.append(r)
+            else:
+                new.append(dataclasses.replace(
+                    r, spec=dataclasses.replace(
+                        r.spec, seed=r.spec.seed + offset)))
+        return dataclasses.replace(self, rules=tuple(new))
+
+    def signature(self, paths_shapes) -> tuple:
+        """Resolution signature over (path, m, k) triples for the Stack
+        periodicity check: two layers with equal signatures build
+        stacking-compatible parameters.
+
+        Masked-storage specs are seed-normalized — their factors are
+        stacked *parameters*, so per-layer seeds (the
+        ``offset_masked_seeds`` decorrelation) only change values, never
+        structure.  Compact-storage specs keep their seed: it determines
+        the trace-time static ``RBGP4Layout`` aux, and stacking different
+        layouts is structurally invalid — heterogeneous compact seeds must
+        fall out of the scan instead.
+        """
+        out = []
+        for path, m, k in paths_shapes:
+            spec = self.resolve(path, m, k)
+            if not spec.applies_to(m, k):
+                spec = DENSE
+            if not (spec.is_sparse and spec.storage() == "compact"):
+                spec = dataclasses.replace(spec, seed=0)
+            out.append(spec)
+        return tuple(out)
+
+    # -- serialization ------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "kind": "sparsity-plan",
+            "version": self.version,
+            "rules": [
+                {"match": r.match, "note": r.note, "spec": r.spec.to_json()}
+                for r in self.rules
+            ],
+        }
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), sort_keys=True, indent=1)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SparsityPlan":
+        if d.get("kind") != "sparsity-plan":
+            raise ValueError(
+                f"not a sparsity plan (kind={d.get('kind')!r}); expected a "
+                f"JSON object written by SparsityPlan.dumps/save")
+        return cls(
+            rules=tuple(
+                PlanRule(match=r["match"], note=r.get("note", ""),
+                         spec=PatternSpec.from_json(r["spec"]))
+                for r in d.get("rules", ())
+            ),
+            version=int(d.get("version", 1)),
+        )
+
+    @classmethod
+    def loads(cls, s: str) -> "SparsityPlan":
+        return cls.from_json(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.dumps())
+
+    @classmethod
+    def load(cls, path: str) -> "SparsityPlan":
+        with open(path) as f:
+            return cls.loads(f.read())
+
+    def fingerprint(self) -> str:
+        """Content hash of the plan's *mask-determining* content: rule
+        order, match regexes, the pattern/sparsity/block/seed/min_dim/
+        factors of each spec — and each spec's *storage kind* rather than
+        its backend name.  The backend matters to masks only through
+        storage: masked-storage rules get per-layer seed offsets while
+        compact rules share one graph sample (``offset_masked_seeds``), so
+        a masked<->compact switch re-seeds every scanned layer's mask and
+        must be refused on restore, while switching among compact backends
+        (``xla_compact``/``pallas``/``auto``) or editing ``note`` strings
+        realizes identical masks and fingerprints identically.  Saved
+        beside checkpoints; restores under a different fingerprint are
+        refused."""
+        canon = json.dumps(
+            {
+                "version": self.version,
+                "rules": [
+                    {"match": r.match,
+                     "spec": dict(
+                         {k: v for k, v in r.spec.to_json().items()
+                          if k not in ("backend",)},
+                         storage=r.spec.storage())}
+                    for r in self.rules
+                ],
+            },
+            sort_keys=True, separators=(",", ":"),
+        )
+        return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+    # -- construction shims -------------------------------------------------
+    @classmethod
+    def uniform(cls, spec: Union[PatternSpec, SparsityConfig],
+                note: str = "uniform") -> "SparsityPlan":
+        if isinstance(spec, SparsityConfig):
+            spec = PatternSpec.from_config(spec)
+        return cls(rules=(PlanRule(".*", spec, note=note),))
+
+    @classmethod
+    def from_config(cls, cfg: SparsityConfig) -> "SparsityPlan":
+        """The SparsityConfig shim: one ``.*`` rule.  Deprecated — write
+        plans (or pass them to configs/launchers) directly."""
+        warnings.warn(
+            "SparsityConfig is a legacy one-rule shim; it lowers to a "
+            "uniform SparsityPlan. Construct a SparsityPlan (or pass "
+            "--plan plan.json) for per-layer control.",
+            DeprecationWarning, stacklevel=2,
+        )
+        return lower_config(cfg)
+
+
+@functools.lru_cache(maxsize=512)
+def lower_config(cfg: SparsityConfig) -> SparsityPlan:
+    """Quiet internal bridge: the uniform plan a SparsityConfig means."""
+    return SparsityPlan.uniform(
+        PatternSpec.from_config(cfg), note="uniform (lowered SparsityConfig)")
+
+
+# ---------------------------------------------------------------------------
+# Shape recording: path -> (m, k, count) without materializing anything
+# ---------------------------------------------------------------------------
+
+_RECORDING: Optional[dict] = None
+
+
+class _Recording:
+    def __init__(self):
+        self.shapes: dict[str, tuple[int, int, int]] = {}
+
+    def __enter__(self):
+        global _RECORDING
+        if _RECORDING is not None:
+            raise RuntimeError("shape recording is not reentrant")
+        _RECORDING = self.shapes
+        return self.shapes
+
+    def __exit__(self, *exc):
+        global _RECORDING
+        _RECORDING = None
+        return False
+
+
+def recording_shapes() -> _Recording:
+    """Context manager: while active, ``SparseLinear``/``StackedExperts``
+    constructors record ``path -> (m, k, count)`` and skip pattern and
+    storage setup entirely (the constructed model is shape-cast only)."""
+    return _Recording()
+
+
+def recording_active() -> bool:
+    return _RECORDING is not None
+
+
+def record_shape(path: str, m: int, k: int, count: int = 1) -> None:
+    if _RECORDING is None:
+        return
+    if path in _RECORDING:
+        pm, pk, pc = _RECORDING[path]
+        if (pm, pk) != (m, k):
+            raise ValueError(
+                f"path {path!r} recorded with two shapes: "
+                f"{(pm, pk)} vs {(m, k)} — module paths must be unique")
+        _RECORDING[path] = (m, k, pc + count)
+    else:
+        _RECORDING[path] = (m, k, count)
+
+
+def model_matmul_shapes(cfg) -> dict[str, tuple[int, int, int]]:
+    """Every projection's ``path -> (m, k, count)`` for a model config.
+
+    Constructs the model under :func:`recording_shapes` — decoder stacks
+    are expanded layer by layer (the scan only ever builds representative
+    period modules, which would under-count), vision configs build their
+    actual model.  Embeddings/heads are not SparseLinear sites and are
+    excluded, matching the paper's protocol of keeping them dense.
+    """
+    from repro.models.vision import VGG19, VisionConfig, WideResNet
+
+    with recording_shapes() as shapes:
+        if isinstance(cfg, VisionConfig):
+            if "vgg" in cfg.name:
+                VGG19(cfg)
+            else:
+                WideResNet(cfg)
+        else:
+            from repro.models.transformer import DecoderLayer
+
+            for i in range(cfg.n_layers):
+                DecoderLayer(cfg, i)
+    return dict(shapes)
+
+
+# ---------------------------------------------------------------------------
+# Budget solver
+# ---------------------------------------------------------------------------
+
+def _norm_shapes(shapes: dict) -> dict[str, tuple[int, int, int]]:
+    out = {}
+    for path, shp in shapes.items():
+        m, k = int(shp[0]), int(shp[1])
+        c = int(shp[2]) if len(shp) > 2 else 1
+        out[path] = (m, k, c)
+    return out
+
+
+def _max_feasible_steps(m: int, k: int, spec: PatternSpec,
+                        max_steps: int) -> int:
+    """Largest s such that the pattern realizes sparsity 1 - 2^-s at
+    (m, k).  Feasibility is monotone in s for every registered pattern."""
+    cap = 0
+    for s in range(1, max_steps + 1):
+        sp = 1.0 - 2.0 ** (-s)
+        try:
+            if spec.pattern == "rbgp4":
+                design_rbgp4(m, k, sp, seed=0)
+            elif spec.pattern == "rbgp":
+                design_rbgp(m, k, sp, factors=spec.factors, seed=0)
+            elif spec.pattern == "block":
+                bh, bw = spec.block
+                if m % bh or k % bw or round((1 - sp) * (k // bw)) < 1:
+                    break
+            elif spec.pattern == "unstructured":
+                if round((1 - sp) * k) < 1:
+                    break
+            else:
+                break
+        except ValueError:
+            break
+        cap = s
+    return cap
+
+
+def solve_budget(
+    shapes: dict,
+    *,
+    target_density: Optional[float] = None,
+    target_flops: Optional[float] = None,
+    pattern: str = "rbgp4",
+    backend: str = "auto",
+    factors: Optional[tuple] = None,
+    block: tuple[int, int] = (4, 4),
+    min_dim: int = 256,
+    max_steps: int = 8,
+    seed: int = 0,
+    group: Optional[Callable[[str], str]] = None,
+) -> SparsityPlan:
+    """Allocate per-layer pow-2 sparsity steps to hit a global budget.
+
+    ``shapes`` maps module path -> ``(m, k)`` or ``(m, k, count)`` (see
+    :func:`model_matmul_shapes`).  ``target_density`` is the requested
+    ratio of remaining weight *memory* to dense; ``target_flops`` is the
+    same ratio under the matmul-FLOP model — for SDMM layers both are
+    proportional to ``count * m * k * density``, so the two targets share
+    one greedy: repeatedly halve the density of the layer currently
+    contributing the most bytes/FLOPs (largest-matmul-first, the
+    Sparsity-Roofline allocation) until the global ratio reaches the
+    target.  Layers below ``min_dim`` or beyond their pattern's
+    feasibility cap stay put; the achieved ratio therefore lands within
+    one pow-2 step of the target (it never overshoots below ``target``
+    minus half the largest layer's share).
+
+    Deterministic: ties break on lexicographic path (group) order and the
+    result depends only on the arguments — the same inputs produce the
+    same plan JSON and fingerprint.  ``group`` optionally coalesces paths
+    (e.g. scan-period roles) so grouped layers move in lockstep.
+
+    A ``StackedExperts``' two sides (``….experts.in`` / ``….experts.out``)
+    are always coupled into one group (before ``group`` applies): stacked
+    expert storage needs one spec for both projections, so the solver
+    never splits them.
+    """
+    if (target_density is None) == (target_flops is None):
+        raise ValueError("pass exactly one of target_density / target_flops")
+    target = target_density if target_density is not None else target_flops
+    if not (0.0 < target <= 1.0):
+        raise ValueError(f"target must be in (0, 1], got {target}")
+    shapes = _norm_shapes(shapes)
+    base = PatternSpec(pattern=pattern, sparsity=0.5, backend=backend,
+                       block=tuple(block), seed=seed, min_dim=min_dim,
+                       factors=factors)
+    # stacked expert weights only support the rbgp4 pattern (one
+    # base-graph mask cloned over the expert dim); other patterns would
+    # solve fine here and then be refused by StackedExperts at model
+    # construction — keep those paths dense instead, loudly.
+    experts_re = re.compile(r"\.experts\.(in|out)$")
+    expert_stackable = pattern == "rbgp4"
+    skipped_experts = []
+
+    # group entries; each group moves as one unit
+    groups: dict[str, dict] = {}
+    total_w = 0.0
+    for path in sorted(shapes):
+        m, k, c = shapes[path]
+        w = float(m) * k * c
+        total_w += w
+        # expert in/out sides move together (one spec per StackedExperts)
+        coupled = experts_re.sub(".experts", path)
+        gkey = group(coupled) if group is not None else coupled
+        g = groups.setdefault(gkey, {"paths": [], "w": 0.0, "cap": None,
+                                     "steps": 0})
+        g["paths"].append(path)
+        g["w"] += w
+        cap = 0
+        if experts_re.search(path) and not expert_stackable:
+            skipped_experts.append(path)
+        elif min(m, k) >= min_dim:
+            cap = _max_feasible_steps(m, k, base, max_steps)
+        g["cap"] = cap if g["cap"] is None else min(g["cap"], cap)
+    if skipped_experts:
+        warnings.warn(
+            f"solve_budget: pattern {pattern!r} has no stacked expert "
+            f"storage (StackedExperts supports 'rbgp4' only); keeping "
+            f"{len(skipped_experts)} expert path(s) dense: "
+            f"{skipped_experts[:4]}...")
+    if total_w <= 0:
+        raise ValueError("empty shape table")
+
+    def achieved() -> float:
+        return sum(g["w"] * 2.0 ** (-g["steps"]) for g in groups.values()) \
+            / total_w
+
+    order = sorted(groups)
+    while achieved() > target:
+        best_key, best_bytes = None, -1.0
+        for gkey in order:
+            g = groups[gkey]
+            if g["steps"] >= g["cap"]:
+                continue
+            cur = g["w"] * 2.0 ** (-g["steps"])
+            if cur > best_bytes:
+                best_key, best_bytes = gkey, cur
+        if best_key is None:
+            raise ValueError(
+                f"budget unreachable: achieved density {achieved():.4f} > "
+                f"target {target} with every layer at its feasibility cap "
+                f"(min_dim={min_dim}, max_steps={max_steps})")
+        groups[best_key]["steps"] += 1
+
+    # emit one rule per sparsity level (densest-matched paths first is
+    # irrelevant — path regexes are disjoint full matches)
+    by_steps: dict[int, list[str]] = {}
+    for gkey in order:
+        g = groups[gkey]
+        if g["steps"] > 0:
+            by_steps.setdefault(g["steps"], []).extend(g["paths"])
+    rules = []
+    for s in sorted(by_steps, reverse=True):
+        paths = sorted(by_steps[s])
+        spec = dataclasses.replace(base, sparsity=1.0 - 2.0 ** (-s))
+        rules.append(PlanRule(
+            match="|".join(re.escape(p) for p in paths), spec=spec,
+            note=f"budget: {s} pow-2 steps (density 2^-{s})",
+        ))
+    rules.append(PlanRule(".*", DENSE, note="budget: keep dense"))
+    return SparsityPlan(rules=tuple(rules))
+
+
+def plan_density(plan: SparsityPlan, shapes: dict) -> float:
+    """Achieved global weight-memory ratio (nnz / dense) of a plan over a
+    shape table — the quantity :func:`solve_budget` drives to target."""
+    shapes = _norm_shapes(shapes)
+    num = den = 0.0
+    for path, (m, k, c) in shapes.items():
+        inst = plan.pattern_for(path, m, k)
+        num += float(inst.nnz) * c
+        den += float(m) * k * c
+    return num / den
+
+
+# ---------------------------------------------------------------------------
+# Spectral certification
+# ---------------------------------------------------------------------------
+
+def _factor_graphs(inst: PatternInstance):
+    """Named factor graphs of a pattern instance (empty for non-product
+    patterns)."""
+    if inst.layout is not None:
+        lay = inst.layout
+        return [("G_o", lay.graph_o), ("G_r", lay.graph_r),
+                ("G_i", lay.graph_i), ("G_b", lay.graph_b)]
+    if inst.chain is not None:
+        ps = inst.chain.sample()
+        return [(f"G_{i}", g) for i, g in enumerate(ps.factors)]
+    return []
+
+
+_LAYER_PREFIX_RE = re.compile(r"^l(\d+)\.")
+
+
+def certify(plan: SparsityPlan, shapes: dict) -> dict:
+    """Spectral report: per layer, each sampled factor's second singular
+    value against the Ramanujan bound ``sqrt(d_l-1) + sqrt(d_r-1)``.
+
+    A factor is *proper* when it is sparse with both degrees >= 2 — only
+    proper factors are Ramanujan candidates (degree-1 factors are unions
+    of matchings with zero bound; complete factors have lambda_2 = 0 and
+    pass trivially).  ``summary.all_ok`` is True iff every proper factor
+    meets its bound.  The report is JSON-serializable (the CI artifact).
+
+    Certified samples are the ones the model *realizes*: paths with a
+    transformer layer prefix (``l{idx}.``) get the stack's per-layer
+    masked-seed offset (``offset_masked_seeds(1000 * (idx + 1))``, see
+    ``models/transformer.py``) before materializing, so masked-backend
+    plans are certified on the per-layer graphs they train with, not the
+    base-seed samples (compact-storage rules share one sample either way;
+    vision paths carry no layer offset).
+    """
+    shapes = _norm_shapes(shapes)
+    # memo keyed on id(g) MUST pin the graph object: freshly-sampled chain
+    # graphs are otherwise garbage-collected between paths and a recycled
+    # address would return a stale sigma for a different graph
+    sigma_cache: dict[int, tuple] = {}
+
+    def sigma2(g) -> float:
+        key = id(g)
+        if key not in sigma_cache:
+            sigma_cache[key] = (g, second_singular_value(g))
+        return sigma_cache[key][1]
+
+    layers = {}
+    n_factors = n_proper = n_ok = 0
+    all_ok = True
+    for path in sorted(shapes):
+        m, k, c = shapes[path]
+        lm = _LAYER_PREFIX_RE.match(path)
+        realized = plan
+        if lm is not None:
+            realized = plan.offset_masked_seeds(1000 * (int(lm.group(1)) + 1))
+        spec = realized.resolve(path, m, k)
+        inst = realized.pattern_for(path, m, k)
+        entry = {
+            "pattern": inst.name, "m": m, "k": k, "count": c,
+            "sparsity": round(float(inst.sparsity), 6),
+            "nnz": int(inst.nnz),
+            "seed": spec.seed if spec.applies_to(m, k) else 0,
+            "factors": [],
+        }
+        for name, g in _factor_graphs(inst):
+            proper = (not g.is_complete) and g.is_biregular \
+                and min(g.d_left, g.d_right) >= 2
+            s2 = sigma2(g)
+            bound = ramanujan_bound(g) if g.is_biregular else float("nan")
+            ok = (not proper) or s2 <= bound + 1e-9
+            entry["factors"].append({
+                "factor": name,
+                "shape": [g.n_left, g.n_right],
+                "degrees": [int(g.d_left), int(g.d_right)]
+                if g.is_biregular else None,
+                "sigma2": round(s2, 6),
+                "bound": round(bound, 6),
+                "proper_ramanujan": proper,
+                "within_bound": bool(ok),
+            })
+            n_factors += 1
+            n_proper += int(proper)
+            n_ok += int(ok)
+            all_ok = all_ok and ok
+        layers[path] = entry
+    return {
+        "summary": {
+            "plan_fingerprint": plan.fingerprint(),
+            "n_layers": len(layers),
+            "n_factors": n_factors,
+            "n_proper_ramanujan": n_proper,
+            "n_within_bound": n_ok,
+            "all_ok": bool(all_ok),
+            "density": plan_density(plan, shapes),
+        },
+        "layers": layers,
+    }

@@ -106,9 +106,18 @@ def load_pytree(path: str, like) -> Any:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    """``plan_fingerprint`` (see ``SparsityPlan.fingerprint``) is stamped
+    into every snapshot's metadata; ``restore`` refuses a checkpoint whose
+    stamp disagrees — masks are reconstructed from the plan, so restoring
+    weights under a different plan silently scrambles which values are
+    live.  Snapshots or managers without a stamp skip the check (legacy
+    checkpoints keep restoring)."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 plan_fingerprint: Optional[str] = None):
         self.dir = directory
         self.keep = keep
+        self.plan_fingerprint = plan_fingerprint
         os.makedirs(directory, exist_ok=True)
         self._q: queue.Queue = queue.Queue()
         self._worker: Optional[threading.Thread] = None
@@ -153,6 +162,8 @@ class CheckpointManager:
             tree, is_leaf=lambda x: x is None,
         )
         extra = dict(extra or {}, step=step)
+        if self.plan_fingerprint is not None:
+            extra.setdefault("plan_fingerprint", self.plan_fingerprint)
         if blocking:
             self._write(step, host_tree, extra)
             return
@@ -187,10 +198,21 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             return None, None
-        tree = load_pytree(self.path(step), like)
         meta_path = self.path(step) + ".meta"
         meta = None
         if os.path.exists(meta_path):
             with open(meta_path) as f:
                 meta = json.load(f)
+        saved_fp = (meta or {}).get("plan_fingerprint")
+        if (self.plan_fingerprint is not None and saved_fp is not None
+                and saved_fp != self.plan_fingerprint):
+            raise RuntimeError(
+                f"checkpoint {self.path(step)} was written under sparsity "
+                f"plan {saved_fp} but the current plan is "
+                f"{self.plan_fingerprint}: masks are reconstructed from the "
+                f"plan, so these weights do not mean the same network. "
+                f"Restore with the original plan (--plan), or point "
+                f"--checkpoint-dir at a fresh directory."
+            )
+        tree = load_pytree(self.path(step), like)
         return tree, (meta or {"step": step})

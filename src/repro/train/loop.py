@@ -142,13 +142,17 @@ class Trainer:
         jit: bool = True,
         checkpoint: bool = True,
         hooks: Optional[list] = None,
+        plan_fingerprint: Optional[str] = None,
     ):
         self.tcfg = tcfg
         self.data = iter(data_iter)
         self.state = init_train_state(init_params, tcfg)
         step_fn = make_train_step(loss_fn, tcfg)
         self.step_fn = jax.jit(step_fn, donate_argnums=(0,)) if jit else step_fn
-        self.ckpt = CheckpointManager(tcfg.checkpoint_dir) if checkpoint else None
+        # the sparsity-plan stamp: saved beside weights, checked on restore
+        self.ckpt = CheckpointManager(
+            tcfg.checkpoint_dir, plan_fingerprint=plan_fingerprint
+        ) if checkpoint else None
         self.hooks = hooks or []
         self.history: list[dict] = []
         # straggler watchdog: EMA of step time; steps > 3x EMA are flagged

@@ -74,6 +74,38 @@ def test_train_failure_drill_and_resume(tmp_path):
 
 
 @pytest.mark.slow
+def test_train_and_serve_accept_plan_file(tmp_path):
+    """--plan wires a SparsityPlan JSON through both drivers: the plan is
+    actually applied (fingerprint echoed, stamped into checkpoints) and a
+    rerun under a storage-incompatible plan is refused."""
+    from repro.sparsity import PatternSpec, SparsityPlan
+
+    plan = SparsityPlan.uniform(
+        PatternSpec(pattern="rbgp4", sparsity=0.5, backend="xla_masked",
+                    min_dim=64))
+    plan_file = tmp_path / "plan.json"
+    plan.save(str(plan_file))
+    ckpt = str(tmp_path / "ckpt")
+    base = ["-m", "repro.launch.train", "--arch", "tinyllama-1.1b",
+            "--reduced", "--steps", "4", "--batch", "2", "--seq", "16",
+            "--checkpoint-every", "2", "--checkpoint-dir", ckpt]
+    res = run_cli(base + ["--plan", str(plan_file)])
+    assert res.returncode == 0, res.stdout[-400:] + res.stderr[-400:]
+    assert f"plan={plan.fingerprint()}" in res.stdout  # plan really applied
+    # resuming the same dir WITHOUT the plan (uniform 0.75 flags) must hit
+    # the fingerprint guard, not silently scramble masks
+    res2 = run_cli(base)
+    assert res2.returncode != 0
+    assert "was written under sparsity plan" in res2.stderr
+    # serve accepts the same plan file
+    res3 = run_cli(["-m", "repro.launch.serve", "--arch", "tinyllama-1.1b",
+                    "--reduced", "--batch", "2", "--prompt-len", "8",
+                    "--gen", "4", "--plan", str(plan_file)])
+    assert res3.returncode == 0, res3.stdout[-400:] + res3.stderr[-400:]
+    assert f"plan={plan.fingerprint()}" in res3.stdout
+
+
+@pytest.mark.slow
 def test_serve_driver():
     res = run_cli(["-m", "repro.launch.serve", "--arch", "tinyllama-1.1b",
                    "--reduced", "--batch", "2", "--prompt-len", "8",

@@ -1,0 +1,604 @@
+"""SparsityPlan compiler tests: rule resolution, SparsityConfig-lowering
+parity (bit-identical masks on the paper configs), the budget solver's
+contracts (within one pow-2 step, monotone, deterministic), JSON
+round-trips, checkpoint fingerprint enforcement, the generalized rbgp
+factor-chain pattern, scan compatibility, and cross-process mask
+determinism (subprocess-pinned).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparsity import (
+    PatternSpec,
+    PlanRule,
+    SparseLinear,
+    SparsityConfig,
+    SparsityPlan,
+    certify,
+    lower_config,
+    make_pattern,
+    model_matmul_shapes,
+    plan_density,
+    solve_budget,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# rule resolution
+# ---------------------------------------------------------------------------
+
+def test_first_full_match_wins_and_default_is_dense():
+    plan = SparsityPlan(rules=(
+        PlanRule(r"l0\.attn\.wq", PatternSpec("rbgp4", 0.875, min_dim=1)),
+        PlanRule(r"l0\..*", PatternSpec("rbgp4", 0.75, min_dim=1)),
+        PlanRule(r"l\d+\..*", PatternSpec("rbgp4", 0.5, min_dim=1)),
+    ))
+    assert plan.resolve("l0.attn.wq").sparsity == 0.875
+    assert plan.resolve("l0.mlp.gate").sparsity == 0.75
+    assert plan.resolve("l7.attn.wq").sparsity == 0.5
+    # full match, not search: an embedded hit is not a match
+    assert plan.resolve("xl0.attn.wq").pattern == "dense"
+    # no rule -> dense
+    assert plan.resolve("embed").pattern == "dense"
+
+
+def test_min_dim_is_one_default_rule_not_model_special_cases():
+    plan = lower_config(SparsityConfig(pattern="rbgp4", sparsity=0.5,
+                                       min_dim=256))
+    # below min_dim resolves to the spec but does not apply -> dense inst
+    inst = plan.pattern_for("tiny", 128, 512)
+    assert inst.name == "dense"
+    assert plan.pattern_for("big", 512, 512).name == "rbgp4"
+
+
+# ---------------------------------------------------------------------------
+# SparsityConfig lowering parity (acceptance: bit-identical masks)
+# ---------------------------------------------------------------------------
+
+def test_lowered_uniform_plan_masks_bit_identical_small():
+    cfg = SparsityConfig(pattern="rbgp4", sparsity=0.75, min_dim=1, seed=3)
+    plan = lower_config(cfg)
+    a = SparseLinear(256, 512, cfg, name="l0.x")
+    b = SparseLinear(256, 512, plan, name="l0.x")
+    assert a.mode == b.mode
+    np.testing.assert_array_equal(a.pattern.mask(), b.pattern.mask())
+    # and the containers initialize bit-identically
+    pa = a.init(jax.random.PRNGKey(0))
+    pb = b.init(jax.random.PRNGKey(0))
+    for la, lb in zip(jax.tree_util.tree_leaves(pa),
+                      jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_parity_wrn40_4_cifar():
+    """The paper protocol as plan rules == the old hard-coded exceptions."""
+    from repro.configs import get_config
+    from repro.models.vision import WideResNet
+
+    cfg = dataclasses.replace(
+        get_config("wrn40-4-cifar"),
+        sparsity=SparsityConfig(pattern="rbgp4", sparsity=0.75, min_dim=256),
+    )
+    model = WideResNet(cfg)
+    # pre-redesign semantics: stem/fc/proj dense; every other conv applies
+    # cfg.sparsity by value (single shared seed)
+    assert model.stem.lin.mode == "dense"
+    assert model.fc.mode == "dense"
+    n_sparse = 0
+    for blk in model.blocks:
+        if blk.proj is not None:
+            assert blk.proj.lin.mode == "dense"
+        for conv in (blk.conv1, blk.conv2):
+            lin = conv.lin
+            m, k = lin.out_features, lin.in_features
+            if cfg.sparsity.applies_to(m, k):
+                legacy = make_pattern(cfg.sparsity, m, k)
+                assert lin.pattern is not None
+                assert lin.pattern.layout.spec == legacy.layout.spec
+                np.testing.assert_array_equal(
+                    lin.pattern.layout.adj_o, legacy.layout.adj_o)
+                np.testing.assert_array_equal(
+                    lin.pattern.layout.adj_i, legacy.layout.adj_i)
+                n_sparse += 1
+            else:
+                assert lin.mode == "dense"
+    assert n_sparse > 0
+    # one full bitwise mask check on the largest conv
+    lin = model.blocks[-1].conv2.lin
+    legacy = make_pattern(cfg.sparsity, lin.out_features, lin.in_features)
+    np.testing.assert_array_equal(lin.pattern.mask(), legacy.mask())
+
+
+def test_parity_tinyllama_per_layer_seeds():
+    """Lowered plans reproduce the legacy per-layer masked seed rule."""
+    from repro.configs import apply_sparsity, get_config
+    from repro.models.transformer import DecoderLayer
+
+    cfg = apply_sparsity(get_config("tinyllama-1.1b"), pattern="rbgp4",
+                         sparsity=0.75, backend="xla_masked", min_dim=1024)
+    sp = cfg.sparsity
+    for i in (0, 1, 21):
+        layer = DecoderLayer(cfg, i)
+        legacy_cfg = dataclasses.replace(sp, seed=sp.seed + 1000 * (i + 1))
+        for lin in (layer.mixer.wq, layer.mixer.wo, layer.ffn.gate,
+                    layer.ffn.up, layer.ffn.down):
+            m, k = lin.out_features, lin.in_features
+            if not legacy_cfg.applies_to(m, k):
+                assert lin.mode == "dense"
+                continue
+            legacy = make_pattern(legacy_cfg, m, k)
+            assert lin.pattern.layout.spec == legacy.layout.spec
+            np.testing.assert_array_equal(
+                lin.pattern.layout.adj_o, legacy.layout.adj_o)
+            np.testing.assert_array_equal(
+                lin.pattern.layout.adj_i, legacy.layout.adj_i)
+        # below-min_dim projections stay dense (the one default rule)
+        assert layer.mixer.wk.mode == "dense"  # (256, 2048) < 1024
+
+
+def test_explicit_uniform_plan_init_matches_lowered_path():
+    """cfg.plan = lowered(cfg.sparsity) yields a bit-identical checkpoint
+    tree to the implicit lowering (the scan signature path included)."""
+    from repro.configs import get_config, reduce_config
+    from repro.models import LMModel
+
+    base = reduce_config(get_config("tinyllama-1.1b")).with_(n_layers=4)
+    explicit = base.with_(plan=lower_config(base.sparsity))
+    pa = LMModel(base).init(jax.random.PRNGKey(0))
+    pb = LMModel(explicit).init(jax.random.PRNGKey(0))
+    la = jax.tree_util.tree_leaves(pa)
+    lb = jax.tree_util.tree_leaves(pb)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# budget solver (acceptance: deepseek 75% reduction + certification)
+# ---------------------------------------------------------------------------
+
+def test_budget_solver_deepseek_v2_236b():
+    from repro.configs import get_config
+
+    shapes = model_matmul_shapes(get_config("deepseek-v2-236b"))
+    assert len(shapes) > 400  # 60 layers x per-layer projections
+    plan = solve_budget(shapes, target_density=0.25)
+    achieved = plan_density(plan, shapes)
+    # global 75% reduction, within one pow-2 step per layer
+    assert 0.125 < achieved <= 0.25
+    # every sparse rule uses pow-2 sparsity
+    for r in plan.rules:
+        if r.spec.is_sparse:
+            steps = np.log2(1.0 / (1.0 - r.spec.sparsity))
+            assert abs(steps - round(steps)) < 1e-9
+    report = certify(plan, shapes)
+    assert report["summary"]["all_ok"]
+    assert report["summary"]["n_proper_ramanujan"] > 0
+    assert report["summary"]["plan_fingerprint"] == plan.fingerprint()
+    # the solver never splits a StackedExperts' in/out sides: every MoE
+    # layer resolves one spec for both paths (else model construction
+    # would refuse the plan)
+    expert_layers = {p.rsplit(".", 1)[0] for p in shapes
+                     if p.endswith(".experts.in")}
+    assert expert_layers
+    for base in expert_layers:
+        m_i, k_i, _ = shapes[f"{base}.in"]
+        m_o, k_o, _ = shapes[f"{base}.out"]
+        assert plan.resolve(f"{base}.in", m_i, k_i) == \
+            plan.resolve(f"{base}.out", m_o, k_o)
+    # and a budget-solved MoE layer actually constructs
+    from repro.models.moe import StackedExperts
+
+    cfg = get_config("deepseek-v2-236b")
+    se = StackedExperts(cfg.moe.n_experts, cfg.d_model, cfg.moe.d_expert,
+                        plan, name="l1.moe")
+    assert se.storage in ("masked", "compact")
+
+
+def test_certify_covers_realized_per_layer_seeds():
+    """certify must evaluate the samples the transformer stack trains
+    with: masked-storage rules get the per-layer seed offset; compact
+    rules keep the shared base seed."""
+    shapes = {"l0.a": (256, 256), "l5.a": (256, 256), "fc": (256, 256)}
+    masked = SparsityPlan.uniform(
+        PatternSpec("rbgp4", 0.5, backend="xla_masked", min_dim=1))
+    rep = certify(masked, shapes)
+    assert rep["layers"]["l0.a"]["seed"] == 1000      # offset_masked_seeds
+    assert rep["layers"]["l5.a"]["seed"] == 6000
+    assert rep["layers"]["fc"]["seed"] == 0           # no layer prefix
+    assert rep["summary"]["all_ok"]
+    compact = SparsityPlan.uniform(
+        PatternSpec("rbgp4", 0.5, backend="auto", min_dim=1))
+    rep_c = certify(compact, shapes)
+    assert rep_c["layers"]["l0.a"]["seed"] == 0       # shared graph sample
+    assert rep_c["layers"]["l5.a"]["seed"] == 0
+
+
+def test_budget_solver_keeps_experts_dense_for_unstackable_patterns():
+    """A non-rbgp4 plan must not sparsify StackedExperts paths (the model
+    would refuse it at construction) — they stay dense, with a warning."""
+    from repro.models.moe import StackedExperts
+
+    shapes = {"l1.moe.experts.in": (512, 1024, 8),
+              "l1.moe.experts.out": (1024, 512, 4),
+              "l1.attn.wq": (1024, 1024, 1)}
+    with pytest.warns(UserWarning, match="no stacked expert storage"):
+        # experts dominate the weight and stay dense, so the reachable
+        # floor is high — ask for a target the non-expert paths can carry
+        plan = solve_budget(shapes, target_density=0.9,
+                            pattern="unstructured", min_dim=64)
+    assert plan.resolve("l1.moe.experts.in").pattern == "dense"
+    assert plan.resolve("l1.moe.experts.out").pattern == "dense"
+    assert plan.resolve("l1.attn.wq").is_sparse
+    # and the resulting plan constructs a StackedExperts without error
+    se = StackedExperts(8, 1024, 512, plan, name="l1.moe")
+    assert se.storage == "dense"
+
+
+def test_budget_solver_errors():
+    with pytest.raises(ValueError, match="exactly one"):
+        solve_budget({"a": (512, 512)})
+    with pytest.raises(ValueError, match="exactly one"):
+        solve_budget({"a": (512, 512)}, target_density=0.5, target_flops=0.5)
+    # everything below min_dim -> unreachable
+    with pytest.raises(ValueError, match="unreachable"):
+        solve_budget({"a": (64, 64)}, target_density=0.5, min_dim=256)
+
+
+def _rand_shapes(rng, n):
+    out = {}
+    for i in range(n):
+        m = 2 ** rng.integers(5, 11)
+        k = 2 ** rng.integers(5, 11)
+        out[f"p{i:02d}"] = (int(m), int(k), int(rng.integers(1, 4)))
+    return out
+
+
+def test_budget_solver_properties():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           target=st.sampled_from([0.5, 0.25, 0.125]))
+    def check(seed, target):
+        rng = np.random.default_rng(seed)
+        shapes = _rand_shapes(rng, int(rng.integers(3, 9)))
+        if all(min(m, k) < 256 for m, k, _ in shapes.values()):
+            return
+        try:
+            plan = solve_budget(shapes, target_density=target, min_dim=64)
+        except ValueError:
+            return  # unreachable under the caps — allowed to refuse
+        achieved = plan_density(plan, shapes)
+        # within one pow-2 step of the target
+        assert target / 2 < achieved <= target + 1e-12
+        # determinism: same inputs (any dict order) -> same plan JSON
+        shuffled = dict(sorted(shapes.items(), reverse=True))
+        assert solve_budget(shuffled, target_density=target,
+                            min_dim=64).dumps() == plan.dumps()
+        # monotonicity: tightening the budget never increases density,
+        # and allocations nest (per-path sparsity only grows)
+        try:
+            tighter = solve_budget(shapes, target_density=target / 2,
+                                   min_dim=64)
+        except ValueError:
+            return
+        t_ach = plan_density(tighter, shapes)
+        assert t_ach <= achieved + 1e-12
+        for path, (m, k, _c) in shapes.items():
+            assert (tighter.resolve(path).sparsity
+                    >= plan.resolve(path).sparsity - 1e-12)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# JSON round trip + fingerprint
+# ---------------------------------------------------------------------------
+
+def test_json_roundtrip_bit_identical_masks(tmp_path):
+    plan = SparsityPlan(rules=(
+        PlanRule(r".*\.wq", PatternSpec("rbgp4", 0.875, seed=7, min_dim=1)),
+        PlanRule(r".*\.blocky", PatternSpec("block", 0.5, block=(4, 4),
+                                            min_dim=1)),
+        PlanRule(r".*\.chain", PatternSpec(
+            "rbgp", 0.75, min_dim=1,
+            factors=(("ramanujan", 0, 0, -1.0), ("complete", 8, 8, 0.0)))),
+        PlanRule(r".*", PatternSpec("rbgp4", 0.5, min_dim=1)),
+    ))
+    shapes = {"l0.wq": (256, 256), "l0.blocky": (128, 256),
+              "l0.chain": (256, 512), "l0.up": (512, 128)}
+    p = tmp_path / "plan.json"
+    plan.save(str(p))
+    restored = SparsityPlan.load(str(p))
+    assert restored == plan
+    assert restored.fingerprint() == plan.fingerprint()
+    insts = plan.materialize(shapes)
+    rinsts = restored.materialize(shapes)
+    for path in shapes:
+        np.testing.assert_array_equal(insts[path].mask(),
+                                      rinsts[path].mask())
+    # fingerprint is content-sensitive...
+    other = SparsityPlan(rules=plan.rules[1:])
+    assert other.fingerprint() != plan.fingerprint()
+    # ...but only to mask-determining content: notes are cosmetic, and a
+    # backend switch within one storage kind (auto <-> xla_compact, both
+    # compact for rbgp4) realizes identical masks -> same fingerprint
+    import dataclasses as dc
+
+    compact = SparsityPlan.uniform(PatternSpec("rbgp4", 0.5, backend="auto",
+                                               min_dim=1))
+    compact2 = SparsityPlan(rules=tuple(
+        dc.replace(r, note="rewritten",
+                   spec=dc.replace(r.spec, backend="xla_compact"))
+        for r in compact.rules))
+    assert compact2.fingerprint() == compact.fingerprint()
+    # a masked <-> compact storage switch re-seeds per-layer masks
+    # (offset_masked_seeds), so it MUST change the fingerprint
+    masked = SparsityPlan(rules=tuple(
+        dc.replace(r, spec=dc.replace(r.spec, backend="xla_masked"))
+        for r in compact.rules))
+    assert masked.fingerprint() != compact.fingerprint()
+    sparser = SparsityPlan(rules=(dc.replace(
+        plan.rules[0], spec=dc.replace(plan.rules[0].spec, sparsity=0.75)),
+        ) + plan.rules[1:])
+    assert sparser.fingerprint() != plan.fingerprint()
+
+
+def test_loads_rejects_foreign_json():
+    with pytest.raises(ValueError, match="not a sparsity plan"):
+        SparsityPlan.loads(json.dumps({"rules": []}))
+
+
+def test_from_config_shim_warns():
+    with pytest.warns(DeprecationWarning, match="one-rule shim"):
+        plan = SparsityPlan.from_config(
+            SparsityConfig(pattern="rbgp4", sparsity=0.5))
+    assert plan == lower_config(SparsityConfig(pattern="rbgp4", sparsity=0.5))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint fingerprint enforcement
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_refuses_mismatched_plan(tmp_path):
+    from repro.train.checkpoint import CheckpointManager
+
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    m1 = CheckpointManager(str(tmp_path), plan_fingerprint="aaaa1111")
+    m1.save(10, tree)
+    # same plan restores
+    got, meta = m1.restore(tree)
+    assert meta["plan_fingerprint"] == "aaaa1111"
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    # different plan refuses, loudly
+    m2 = CheckpointManager(str(tmp_path), plan_fingerprint="bbbb2222")
+    with pytest.raises(RuntimeError, match="plan aaaa1111.*bbbb2222"):
+        m2.restore(tree)
+    # legacy snapshots (no stamp) keep restoring
+    m3 = CheckpointManager(str(tmp_path / "legacy"))
+    m3.save(5, tree)
+    m4 = CheckpointManager(str(tmp_path / "legacy"),
+                           plan_fingerprint="cccc3333")
+    got, _ = m4.restore(tree)
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# generalized rbgp factor chains
+# ---------------------------------------------------------------------------
+
+def test_rbgp_chain_rbgp2_has_layout_and_kernels():
+    cfg = SparsityConfig(pattern="rbgp", sparsity=0.75, min_dim=1,
+                         backend="auto",
+                         factors=(("ramanujan", 0, 0, -1.0),
+                                  ("complete", 16, 16, 0.0)))
+    inst = make_pattern(cfg, 512, 512)
+    assert inst.name == "rbgp"
+    assert inst.layout is not None  # <= 2 sparse factors -> RBGP4-expressible
+    mask = inst.mask()
+    assert mask.shape == (512, 512)
+    assert abs(1 - mask.mean() - 0.75) < 1e-9
+    # compact storage + backend dispatch work through the layout
+    lin = SparseLinear(512, 512, cfg, name="chain")
+    assert lin.mode == "compact"
+    w = lin.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512))
+    y = lin.apply(w, x)
+    ref = x @ lin.dense_weight(w).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rbgp_chain_deep_masked_only():
+    # three explicitly-sparse factors: not RBGP4-expressible, masked-only
+    cfg = SparsityConfig(pattern="rbgp", sparsity=0.875, min_dim=1,
+                         factors=(("ramanujan", 0, 0, 0.5),
+                                  ("ramanujan", 0, 0, 0.5),
+                                  ("ramanujan", 0, 0, 0.5)))
+    inst = make_pattern(cfg, 512, 512)
+    assert inst.layout is None
+    mask = inst.mask()
+    assert abs((1 - mask.mean()) - inst.sparsity) < 1e-9
+    assert inst.nnz == int(mask.sum())
+    # deterministic reconstruction
+    np.testing.assert_array_equal(mask, make_pattern(cfg, 512, 512).mask())
+    # certify covers chain factors
+    plan = SparsityPlan.uniform(PatternSpec.from_config(cfg))
+    rep = certify(plan, {"x": (512, 512)})
+    assert rep["layers"]["x"]["pattern"] == "rbgp"
+    assert len(rep["layers"]["x"]["factors"]) == 3
+
+
+def test_rbgp_chain_hierarchical_block():
+    # Vooturi-style hierarchical block sparsity: dense (4,4) blocks around
+    # a sparse factor — expressible, gets a layout
+    cfg = SparsityConfig(pattern="rbgp", sparsity=0.5, min_dim=1,
+                         factors=(("complete", 4, 4, 0.0), "ramanujan",
+                                  ("complete", 4, 4, 0.0)))
+    inst = make_pattern(cfg, 256, 256)
+    assert inst.layout is not None
+    assert abs(1 - inst.mask().mean() - 0.5) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# scan compatibility
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.configs import get_config, reduce_config
+
+    return reduce_config(get_config("tinyllama-1.1b")).with_(
+        n_layers=4, vocab_size=128)
+
+
+def test_uniform_plan_keeps_scan_heterogeneous_falls_back():
+    from repro.models import LMModel
+
+    base = _tiny_cfg()
+    uni = base.with_(plan=SparsityPlan.uniform(
+        PatternSpec("rbgp4", 0.5, backend="xla_masked", min_dim=64)))
+    het = base.with_(plan=SparsityPlan(rules=(
+        PlanRule(r"l[01]\..*", PatternSpec("rbgp4", 0.5,
+                                           backend="xla_masked", min_dim=64)),
+        PlanRule(r"l[23]\..*", PatternSpec("rbgp4", 0.75,
+                                           backend="xla_masked", min_dim=64)),
+    )))
+    m_uni = LMModel(uni)
+    m_het = LMModel(het)
+    assert m_uni.stack.n_full == 4          # scans like the legacy path
+    # depth-heterogeneous specs can't stack: the shallow half becomes
+    # explicit head layers, only the homogeneous suffix scans
+    assert m_het.stack.n_head == 2
+    assert m_het.stack.n_full == 2
+    # the heterogeneous model trains/infers on CPU
+    p = m_het.init(jax.random.PRNGKey(0))
+    logits, _ = m_het.forward(p, {"tokens": np.zeros((2, 8), np.int32)})
+    assert logits.shape == (2, 8, 128)
+    # and actually carries different per-depth sparsity
+    g0 = m_het.stack.head_layers[0].ffn.gate.pattern
+    g2 = m_het.stack.period_layers[0].ffn.gate.pattern
+    assert g0.sparsity == 0.5 and g2.sparsity == 0.75
+
+
+def test_heterogeneous_compact_seeds_break_scan_signature():
+    """Compact-storage seeds are trace-time static layout aux: layers
+    whose compact rules differ only in seed must NOT stack under one scan
+    (masked seeds, by contrast, are stacked parameters and do)."""
+    from repro.models import LMModel
+
+    base = _tiny_cfg()
+
+    def plan_for(backend):
+        return SparsityPlan(rules=(
+            PlanRule(r"l[01]\..*", PatternSpec("rbgp4", 0.5, backend=backend,
+                                               min_dim=64, seed=0)),
+            PlanRule(r"l[23]\..*", PatternSpec("rbgp4", 0.5, backend=backend,
+                                               min_dim=64, seed=7)),
+        ))
+
+    m_compact = LMModel(base.with_(plan=plan_for("auto")))
+    assert m_compact.stack.n_full == 2 and m_compact.stack.n_head == 2
+    p = m_compact.init(jax.random.PRNGKey(0))
+    logits, _ = m_compact.forward(p, {"tokens": np.zeros((2, 8), np.int32)})
+    assert logits.shape == (2, 8, 128)
+    # the two seed bands genuinely use different adjacency
+    l0 = m_compact.stack.head_layers[0].mixer.wq.pattern.layout
+    l2 = m_compact.stack.period_layers[0].mixer.wq.pattern.layout
+    assert l0.spec.seed != l2.spec.seed
+    # masked storage: seeds are parameters, the whole stack scans
+    m_masked = LMModel(base.with_(plan=plan_for("xla_masked")))
+    assert m_masked.stack.n_full == 4
+
+
+def test_stacked_experts_rejects_asymmetric_plan():
+    from repro.models.moe import StackedExperts
+
+    plan = SparsityPlan(rules=(
+        PlanRule(r"moe\.experts\.in", PatternSpec("rbgp4", 0.5, min_dim=1)),
+        PlanRule(r"moe\.experts\.out", PatternSpec("rbgp4", 0.75, min_dim=1)),
+    ))
+    with pytest.raises(ValueError, match="one spec for both"):
+        StackedExperts(4, 128, 256, plan, name="moe")
+    # symmetric rules are fine
+    ok = SparsityPlan.uniform(PatternSpec("rbgp4", 0.5, min_dim=1,
+                                          backend="xla_masked"))
+    se = StackedExperts(4, 128, 256, ok, name="moe")
+    assert se.storage == "masked"
+
+
+# ---------------------------------------------------------------------------
+# cross-process mask determinism (patterns.py docstring, now pinned)
+# ---------------------------------------------------------------------------
+
+_SUBPROC_SNIPPET = textwrap.dedent("""
+    import hashlib, json, sys
+    import numpy as np
+    from repro.sparsity import SparsityConfig, make_pattern
+
+    out = {}
+    for name, cfg, m, k in [
+        ("rbgp4", SparsityConfig("rbgp4", 0.75, min_dim=1, seed=11), 256, 512),
+        ("unstructured", SparsityConfig("unstructured", 0.5, min_dim=1,
+                                        seed=5), 128, 128),
+        ("block", SparsityConfig("block", 0.5, block=(4, 4), min_dim=1,
+                                 seed=9), 128, 256),
+        ("rbgp", SparsityConfig("rbgp", 0.875, min_dim=1, seed=2,
+                                factors=("ramanujan", "ramanujan",
+                                         "ramanujan")), 256, 256),
+    ]:
+        mask = make_pattern(cfg, m, k).mask()
+        out[name] = hashlib.sha256(np.ascontiguousarray(mask).tobytes()
+                                   ).hexdigest()
+    print(json.dumps(out))
+""")
+
+
+def test_make_pattern_deterministic_across_processes():
+    """Data-parallel ranks must reconstruct identical masks with no
+    communication: pin it by hashing masks in fresh interpreters under
+    different PYTHONHASHSEEDs."""
+
+    def run(hashseed):
+        env = dict(os.environ,
+                   PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                                ""),
+                   PYTHONHASHSEED=str(hashseed))
+        res = subprocess.run([sys.executable, "-c", _SUBPROC_SNIPPET],
+                             capture_output=True, text=True, env=env,
+                             timeout=600)
+        assert res.returncode == 0, res.stderr
+        return json.loads(res.stdout.strip().splitlines()[-1])
+
+    a = run(0)
+    b = run(12345)
+    assert a == b
+    # and they match this process's masks
+    local = {}
+    import hashlib
+    for name, cfg, m, k in [
+        ("rbgp4", SparsityConfig("rbgp4", 0.75, min_dim=1, seed=11), 256, 512),
+        ("unstructured", SparsityConfig("unstructured", 0.5, min_dim=1,
+                                        seed=5), 128, 128),
+        ("block", SparsityConfig("block", 0.5, block=(4, 4), min_dim=1,
+                                 seed=9), 128, 256),
+        ("rbgp", SparsityConfig("rbgp", 0.875, min_dim=1, seed=2,
+                                factors=("ramanujan", "ramanujan",
+                                         "ramanujan")), 256, 256),
+    ]:
+        mask = make_pattern(cfg, m, k).mask()
+        local[name] = hashlib.sha256(
+            np.ascontiguousarray(mask).tobytes()).hexdigest()
+    assert local == a
