@@ -1,0 +1,185 @@
+"""Deep-chain executor: masked emulation vs blocked-CSR chain storage.
+
+The scenario the chain subsystem exists for: a *hierarchical block* plan
+(Vooturi et al. 2018 — dense outer blocking around multiple sparse
+Ramanujan factors) on the tinyllama-1.1b projection shapes.  Such chains
+have more than two sparse factors, so they are not RBGP4-expressible;
+before the chain executor they ran as masked emulation — a dense (M, K)
+trainable array *plus* a materialized (M, K) uint8 mask, at dense-matmul
+speed.
+
+Two comparisons per the paper's storage/runtime split:
+
+  * **bytes** (the acceptance gate): chain index+value storage (values at
+    non-zero blocks + per-factor adjacency lists) vs the masked container's
+    mask+value bytes, aggregated over every sparsified layer of the plan.
+    Gate: chain < 25% of masked.
+  * **tok/s** (analytic v5e roofline, per the harness convention): the
+    chainmm kernel touches only stored blocks (head tiles skipped at the
+    grid level, dense leaf blocks on the MXU) while masked emulation pays
+    full dense FLOPs and full dense weight traffic.
+
+Correctness gates (CPU, every run):
+
+  * the ``chain`` backend is **bit-identical** to the masked reference
+    (forward + VJP) at a reduced shape — the parity anchor;
+  * the interpret-mode Pallas ``chainmm_rhs`` / ``chain_sddmm_rhs``
+    kernels match the dense oracle to 1e-4.
+
+CSV rows: name,us_per_call,derived (derived = speedup for time rows,
+byte ratio for the storage row).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+ARCH = "tinyllama-1.1b"
+SPARSITY = 0.875  # 3 pow-2 steps: one per Ramanujan factor at d_model
+N_TOKENS = 2048
+# hierarchical block chain: dense 4x4 outer blocking around three
+# Ramanujan factors, with a dense 8x8 leaf sized for MXU packing (a tiny
+# leaf is honest-roofline slower than dense — small output lanes)
+HIER = (("complete", 4, 4, 0.0), ("ramanujan", 0, 0, -1.0),
+        ("ramanujan", 0, 0, -1.0), ("ramanujan", 0, 0, -1.0),
+        ("complete", 8, 8, 0.0))
+MIN_DIM = 256
+
+
+def run(print_fn=print) -> list[tuple]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import ChainLayout, design_rbgp
+    from repro.kernels import autotune, chainmm as C
+    from repro.kernels.perf_model import estimate_chainmm, estimate_dense
+    from repro.sparsity import (
+        PatternSpec,
+        SparsityPlan,
+        chain_storage_bytes,
+        chain_weight,
+        dense_weight,
+        model_matmul_shapes,
+        sparse_linear,
+    )
+    from repro.sparsity.api import MaskedWeight
+
+    # -- the tinyllama hierarchical-block plan ------------------------------
+    spec = PatternSpec(pattern="rbgp", sparsity=SPARSITY, backend="auto",
+                       factors=HIER, min_dim=MIN_DIM)
+    assert spec.is_chain() and spec.storage() == "chain"
+    plan = SparsityPlan.uniform(spec, note="hierarchical-block chain")
+    shapes = model_matmul_shapes(get_config(ARCH))
+
+    # -- storage: chain index+value vs masked mask+value --------------------
+    chain_bytes = masked_bytes = 0
+    n_sparse = 0
+    layouts: dict[tuple, ChainLayout] = {}
+    for path in sorted(shapes):
+        m, k, c = shapes[path]
+        if not spec.applies_to(m, k):
+            continue
+        key = (m, k)
+        if key not in layouts:
+            layouts[key] = ChainLayout(
+                design_rbgp(m, k, SPARSITY, factors=HIER, seed=0))
+        rep = chain_storage_bytes(layouts[key])
+        chain_bytes += rep["chain_total"] * c
+        masked_bytes += rep["masked_total"] * c
+        n_sparse += c
+    ratio = chain_bytes / masked_bytes
+    print_fn(f"# {ARCH} hierarchical-block plan: {n_sparse} sparsified "
+             f"projections @ {SPARSITY:.4%} sparsity "
+             f"({len(layouts)} distinct shapes)")
+    print_fn(f"  masked storage: {masked_bytes/2**20:9.1f} MiB "
+             f"(dense f32 values + full uint8 mask)")
+    print_fn(f"  chain  storage: {chain_bytes/2**20:9.1f} MiB "
+             f"(non-zero values + per-factor indices) "
+             f"-> {ratio:.1%} of masked")
+    assert ratio < 0.25, f"chain storage {ratio:.1%} >= 25% of masked"
+
+    # -- runtime: analytic roofline at N_TOKENS tokens ----------------------
+    t_masked = t_chain = 0.0
+    for (m, k), lay in sorted(layouts.items()):
+        count = sum(c for p, (mm, kk, c) in shapes.items()
+                    if (mm, kk) == (m, k) and spec.applies_to(mm, kk))
+        dims = C.chain_dims(lay)
+        tuned = autotune.autotune(dims, N_TOKENS, dtype="bfloat16",
+                                  kind="chain_rhs", platform="v5e-model")
+        t_chain += estimate_chainmm(
+            dims, N_TOKENS, block_n=tuned.block_n).t_total_s * count
+        # masked emulation: the mask zeroes values, not work
+        t_masked += estimate_dense(m, k, N_TOKENS).t_total_s * count
+    speed = t_masked / t_chain
+    tok_masked = N_TOKENS / t_masked
+    tok_chain = N_TOKENS / t_chain
+    print_fn(f"  masked emulation: {t_masked*1e6:9.1f} us/layer-pass "
+             f"({tok_masked:,.0f} tok/s through the sparse projections)")
+    print_fn(f"  chain executor  : {t_chain*1e6:9.1f} us/layer-pass "
+             f"({tok_chain:,.0f} tok/s, {speed:.1f}x)")
+
+    # -- parity gates (reduced shape, CPU) ----------------------------------
+    lay_s = ChainLayout(design_rbgp(256, 512, 0.875, factors=HIER, seed=1))
+    dims_s = C.chain_dims(lay_s)
+    kw, kx, kg = jax.random.split(jax.random.PRNGKey(0), 3)
+    w = chain_weight(kw, lay_s)
+    x = jax.random.normal(kx, (24, 512), jnp.float32)
+    g = jax.random.normal(kg, (24, 256), jnp.float32)
+
+    # bit parity: chain backend == masked reference, forward and VJP
+    wm = MaskedWeight(w=dense_weight(w), mask=jnp.asarray(lay_s.mask()))
+    y_c, pull_c = jax.vjp(
+        lambda wd, x: sparse_linear(
+            type(w)(w_data=wd, layout=lay_s), x, backend="chain"),
+        w.w_data, x)
+    y_m, pull_m = jax.vjp(
+        lambda wd, x: sparse_linear(
+            MaskedWeight(w=wd, mask=wm.mask), x, backend="xla_masked"),
+        wm.w, x)
+    assert (np.asarray(y_c) == np.asarray(y_m)).all()
+    (gw_c, gx_c), (gw_m, gx_m) = pull_c(g), pull_m(g)
+    assert (np.asarray(gx_c) == np.asarray(gx_m)).all()
+    assert (np.asarray(gw_c)
+            == np.asarray(C.chain_pack_compact(lay_s, gw_m))).all()
+    print_fn("  parity: chain backend bit-identical to masked reference "
+             "(fwd + VJP)")
+
+    # kernel parity: interpret-mode Pallas vs dense oracle
+    adj = jnp.asarray(lay_s.adjs[0])
+    y_pl = C.chainmm_rhs(dims_s, adj, x, w.w_data, interpret=True)
+    err_f = float(jnp.abs(y_pl - x @ C.chain_unpack_dense(
+        lay_s, w.w_data).T).max())
+    dw_pl = C.chain_sddmm_rhs(dims_s, adj, g, x, interpret=True)
+    err_b = float(jnp.abs(dw_pl - C.chain_pack_compact(
+        lay_s, g.T @ x)).max())
+    print_fn(f"  kernels (interpret): chainmm_rhs max err {err_f:.2e}, "
+             f"chain_sddmm_rhs max err {err_b:.2e}")
+    assert err_f < 1e-4 and err_b < 1e-4
+
+    return [
+        ("chain_executor,masked_emulation", t_masked * 1e6, 1.0),
+        ("chain_executor,chain", t_chain * 1e6, speed),
+        ("chain_executor,storage_ratio", 0.0, ratio),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write rows as {name: us} + derived map")
+    args = ap.parse_args()
+    rows = run()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived:.4f}")
+    if args.json:
+        payload = {
+            "us_per_call": {name: us for name, us, _ in rows},
+            "derived": {name: d for name, _, d in rows},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {args.json}")

@@ -20,7 +20,7 @@ import json
 
 
 SECTIONS = ("table1", "table2", "plan", "table3", "kernels", "stacked",
-            "serve", "roofline")
+            "chain", "serve", "roofline")
 
 
 def main() -> None:
@@ -74,6 +74,11 @@ def main() -> None:
 
         print("\n# === Stacked experts (masked-dense vs batched-compact) ===")
         rows += stacked_experts.run(print)
+    if want("chain"):
+        from . import chain_executor
+
+        print("\n# === Chain executor (masked emulation vs blocked-CSR) ===")
+        rows += chain_executor.run(print)
     if want("serve"):
         from . import serve_engine
 

@@ -18,6 +18,7 @@ from .product import (
 from .rbgp import (
     RBGP4Spec,
     RBGP4Layout,
+    ChainLayout,
     design_rbgp4,
     FactorSpec,
     RBGPSpec,
@@ -47,6 +48,7 @@ __all__ = [
     "connectivity_storage_edges",
     "RBGP4Spec",
     "RBGP4Layout",
+    "ChainLayout",
     "design_rbgp4",
     "FactorSpec",
     "RBGPSpec",

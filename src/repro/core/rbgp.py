@@ -42,6 +42,7 @@ from .product import ProductStructure
 __all__ = [
     "RBGP4Spec", "RBGP4Layout", "design_rbgp4", "pow2_sparsity_steps",
     "FactorSpec", "RBGPSpec", "design_rbgp", "canonicalize_factors",
+    "ChainLayout",
 ]
 
 
@@ -271,20 +272,10 @@ class RBGP4Layout:
         the transposed layout's slot order to the forward layout's.  Static
         per layer; used by the Pallas backward pass (dI kernel).
         """
-        lt = self.transpose_layout()
-        # flat dense ids (r * K + c) in fwd slot order
-        ci = self._col_index()  # (M, nnz_row)
-        fwd_ids = (np.arange(self.m, dtype=np.int64)[:, None] * self.k + ci).ravel()
-        # flat dense ids in transposed slot order: rows of W^T are cols of W
-    # WdataT[c, slot] == W[ colindex_T[c, slot], c ] in dense W coords
-        ci_t = lt._col_index()  # (K, nnz_col) — values are *rows* of W
-        t_ids = (ci_t.astype(np.int64) * self.k
-                 + np.arange(self.k, dtype=np.int64)[:, None]).ravel()
-        order = np.argsort(fwd_ids, kind="stable")
-        pos = np.searchsorted(fwd_ids[order], t_ids)
-        perm = order[pos]
-        assert (fwd_ids[perm] == t_ids).all()
-        return perm.astype(np.int64)
+        return _slot_transpose_perm(
+            self._col_index(), self.transpose_layout()._col_index(),
+            self.m, self.k,
+        )
 
     # -- memory accounting (paper §4 + Table 1 'Mem' model) ------------------
     def memory_bytes(self, value_bytes: int = 4, index_bytes: int = 4) -> dict:
@@ -312,6 +303,179 @@ class RBGP4Layout:
             f"o={sp.g_o}@{sp.sp_o} i={sp.g_i}@{sp.sp_i} "
             f"G={sp.group_rows} C={sp.chunk_cols} TM={sp.tile_m} TK={sp.tile_k})"
         )
+
+
+def _slot_transpose_perm(ci: np.ndarray, ci_t: np.ndarray,
+                         m: int, k: int) -> np.ndarray:
+    """perm such that WdataT.flat = Wdata.flat[perm] for compact layouts.
+
+    ``ci`` is the forward layout's (M, nnz_row) dense-column index; ``ci_t``
+    the transposed layout's (K, nnz_col) index (its values are *rows* of W).
+    Both enumerate the same nnz set, so matching flat dense ids
+    ``r * K + c`` yields the slot permutation.  Shared by RBGP4Layout and
+    ChainLayout (the Pallas dI kernels run the forward kernel on the
+    transposed layout, permuting the values statically).
+    """
+    fwd_ids = (np.arange(m, dtype=np.int64)[:, None] * k
+               + ci.astype(np.int64)).ravel()
+    t_ids = (ci_t.astype(np.int64) * k
+             + np.arange(k, dtype=np.int64)[:, None]).ravel()
+    order = np.argsort(fwd_ids, kind="stable")
+    pos = np.searchsorted(fwd_ids[order], t_ids)
+    perm = order[pos]
+    assert (fwd_ids[perm] == t_ids).all()
+    return perm.astype(np.int64)
+
+
+class ChainLayout:
+    """Concrete deep product chain: sampled factors + blocked-CSR layout.
+
+    The compact executor's view of an :class:`RBGPSpec` with more than two
+    sparse factors (shallower chains canonicalize onto :class:`RBGP4Layout`
+    instead).  Storage is a generalized blocked CSR:
+
+      * **row pointers are implicit** — every product row has exactly
+        ``nnz_per_row = prod d_j`` stored blocks (d-regularity of every
+        factor), so the usual CSR indptr array is a closed form;
+      * **column indices are per factor** — only the base-graph adjacency
+        lists (``sum d_j * n_left_j`` int32s) are stored, never the product
+        adjacency (the paper's succinctness claim, extended to arbitrary
+        depth); the product column of slot ``(k_1, .., k_F)`` of row
+        ``(r_1, .., r_F)`` is ``sum_j adj_j[r_j][k_j] * stride_j``;
+      * **dense leaf blocks** — a trailing run of complete factors makes
+        every stored block a contiguous dense ``(G, C)`` tile (what the
+        kernels feed the MXU).
+
+    Values: ``Wdata`` of shape ``(M, nnz_per_row)``; slot order is
+    lexicographic in ``(k_1, .., k_F)`` which (factor adjacencies being
+    sorted) is ascending column order per row — exactly CSR.
+
+    Deterministic in the spec (graphs come from ``spec.sample()``, the same
+    sampling the masked fallback materializes), so the chain mask is
+    bit-identical to the masked path's and every rank reconstructs the
+    layout without communication.  Equality/hash by spec — the contract
+    that lets the layout ride as pytree aux data.
+    """
+
+    def __init__(self, spec: RBGPSpec):
+        self.spec = spec
+        structure = spec.sample()
+        self.structure = structure
+        self.graphs = structure.factors
+        # per-factor column indices: (n_left_j, d_j) int32 each
+        self.adjs = tuple(g.left_adjacency() for g in self.graphs)
+        self._ci: Optional[np.ndarray] = None
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, ChainLayout) and self.spec == other.spec
+
+    def __hash__(self) -> int:
+        return hash(self.spec)
+
+    # -- sizes ------------------------------------------------------------
+    @property
+    def m(self) -> int:
+        return self.spec.m
+
+    @property
+    def k(self) -> int:
+        return self.spec.k
+
+    @property
+    def nnz_per_row(self) -> int:
+        return self.spec.nnz_per_row
+
+    @property
+    def data_shape(self) -> tuple[int, int]:
+        """Compact value storage shape (M, prod d_j)."""
+        return (self.spec.m, self.spec.nnz_per_row)
+
+    # -- masks ------------------------------------------------------------
+    def mask(self) -> np.ndarray:
+        """Dense {0,1} uint8 mask, shape (M, K) — identical to the mask the
+        masked fallback samples for this spec (same graphs, chain order)."""
+        return self.structure.mask()
+
+    # -- compact <-> dense ------------------------------------------------
+    def _col_index(self) -> np.ndarray:
+        """(M, nnz_per_row) int32: dense column of each compact slot.
+
+        Built by the Kronecker mixed-radix recurrence: appending factor j
+        refines every (row, slot) cell into (n_left_j, d_j) children with
+        column ``parent * n_right_j + adj_j[r_j][k_j]`` — the same
+        enumeration order ``np.kron`` gives the mask.
+        """
+        if self._ci is None:
+            ci = np.zeros((1, 1), np.int64)
+            for g, adj in zip(self.graphs, self.adjs):
+                r, s = ci.shape
+                nl, d = adj.shape
+                ci = (ci[:, None, :, None] * g.n_right
+                      + adj.astype(np.int64)[None, :, None, :]
+                      ).reshape(r * nl, s * d)
+            assert ci.shape == self.data_shape
+            self._ci = ci.astype(np.int32)
+        return self._ci
+
+    def pack(self, w_dense: np.ndarray) -> np.ndarray:
+        """Gather the masked values of a dense (M, K) matrix into Wdata."""
+        if w_dense.shape != (self.m, self.k):
+            raise ValueError(f"expected {(self.m, self.k)}, got {w_dense.shape}")
+        return np.take_along_axis(w_dense, self._col_index(), axis=1)
+
+    def unpack(self, w_data: np.ndarray) -> np.ndarray:
+        """Scatter compact Wdata back to dense (M, K) (zeros off-mask)."""
+        if w_data.shape != self.data_shape:
+            raise ValueError(f"expected {self.data_shape}, got {w_data.shape}")
+        out = np.zeros((self.m, self.k), dtype=w_data.dtype)
+        np.put_along_axis(out, self._col_index(), w_data, axis=1)
+        return out
+
+    # -- transpose --------------------------------------------------------
+    def transpose_layout(self) -> "ChainLayout":
+        """Layout of W^T (every factor transposed). Shares graph samples."""
+        lt = ChainLayout.__new__(ChainLayout)
+        lt.spec = RBGPSpec(
+            factors=tuple(
+                FactorSpec(f.kind, f.n_right, f.n_left, sparsity=f.sparsity)
+                for f in self.spec.factors),
+            seed=self.spec.seed,
+        )
+        lt.structure = self.structure.transpose()
+        lt.graphs = lt.structure.factors
+        lt.adjs = tuple(g.left_adjacency() for g in lt.graphs)
+        lt._ci = None
+        return lt
+
+    def transpose_perm(self) -> np.ndarray:
+        """perm such that WdataT.flat = Wdata.flat[perm] (see
+        :func:`_slot_transpose_perm`)."""
+        return _slot_transpose_perm(
+            self._col_index(), self.transpose_layout()._col_index(),
+            self.m, self.k,
+        )
+
+    # -- memory accounting (paper §4, arbitrary depth) ---------------------
+    def memory_bytes(self, value_bytes: int = 4, index_bytes: int = 4) -> dict:
+        sp = self.spec
+        values = sp.nnz * value_bytes
+        succinct_index = sp.stored_index_edges * index_bytes
+        full_index = sp.nnz * index_bytes  # flat-CSR column indices
+        return {
+            "values": values,
+            "index_succinct": succinct_index,
+            "index_full": full_index,
+            "total": values + succinct_index,
+            "index_compression": full_index / max(succinct_index, 1),
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover
+        sp = self.spec
+        chain = "x".join(
+            f"{f.kind[0]}{f.n_left}:{f.n_right}@{f.sparsity:g}"
+            for f in sp.factors)
+        return (f"ChainLayout({sp.m}x{sp.k} sp={sp.sparsity:.4f} "
+                f"nnz/row={sp.nnz_per_row} [{chain}])")
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,16 @@ from .rbgp4mm import (
 )
 from .rbgp4mm import layout_cache_key
 from .ops import RBGP4Op, get_op, compact_init, default_interpret
-from . import autotune, perf_model, ref
+from .chainmm import (
+    ChainDims,
+    ChainOp,
+    chain_dims,
+    chain_init,
+    chainmm_rhs,
+    chain_sddmm_rhs,
+    get_chain_op,
+)
+from . import autotune, chainmm, perf_model, ref
 
 __all__ = [
     "EPILOGUE_ACTS",
@@ -29,7 +38,15 @@ __all__ = [
     "compact_init",
     "layout_cache_key",
     "default_interpret",
+    "ChainDims",
+    "ChainOp",
+    "chain_dims",
+    "chain_init",
+    "chainmm_rhs",
+    "chain_sddmm_rhs",
+    "get_chain_op",
     "autotune",
+    "chainmm",
     "perf_model",
     "ref",
 ]

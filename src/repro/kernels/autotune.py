@@ -47,6 +47,8 @@ __all__ = [
     "autotune",
     "cache_path",
     "set_cache_path",
+    "set_plan_fingerprint",
+    "plan_fingerprint",
     "clear_memory_cache",
     "candidate_block_ns",
 ]
@@ -121,6 +123,31 @@ def clear_memory_cache() -> None:
         _disk_loaded = False
 
 
+_plan_fingerprint: Optional[str] = None
+
+
+def set_plan_fingerprint(fp: Optional[str]) -> None:
+    """Scope subsequent cache entries to one ``SparsityPlan.fingerprint()``.
+
+    Heterogeneous plans realize many kernel shapes per model; without a
+    plan scope, two plans sharing a (dims, dtype, platform) key would
+    overwrite each other's measured-mode entries (the adjacency — and so
+    the measured timing — differs per plan even at equal dims), and a
+    model could warm up with another plan's configurations.  The launch
+    drivers call this with the active plan's fingerprint so every plan
+    warms up once and keeps its own entries; ``None`` (the default)
+    restores the unscoped namespace — model-mode entries are
+    adjacency-independent, so unscoped sharing stays correct there.
+    """
+    global _plan_fingerprint
+    with _lock:
+        _plan_fingerprint = fp
+
+
+def plan_fingerprint() -> Optional[str]:
+    return _plan_fingerprint
+
+
 def _load_disk_locked() -> None:
     global _disk_loaded
     if _disk_loaded:
@@ -168,8 +195,9 @@ def _n_bucket(n: int) -> int:
 
 
 def _key(kind: str, dims, n_bucket: int, dtype: str, platform: str) -> str:
+    plan = f"plan{_plan_fingerprint}|" if _plan_fingerprint else ""
     return (
-        f"{kind}|{platform}|{dtype}|m{dims.m}k{dims.k}"
+        f"{plan}{kind}|{platform}|{dtype}|m{dims.m}k{dims.k}"
         f"tm{dims.tile_m}tk{dims.tile_k}G{dims.group_rows}C{dims.chunk_cols}"
         f"do{dims.d_o}di{dims.d_i}|n{n_bucket}"
     )
@@ -206,7 +234,7 @@ def _search_model(dims, n: int, dtype: str, kind: str) -> TuneResult:
     """
     el = _DTYPE_BYTES.get(dtype, 4)
     cands = candidate_block_ns(dims, n, dtype)
-    if kind.startswith("sddmm"):
+    if "sddmm" in kind:
         # the reduction runs over n: per-candidate traffic is bn-invariant,
         # so take the largest feasible tile (fewest grid steps)
         bn = cands[-1]
@@ -244,6 +272,17 @@ def _search_measured(dims, n: int, dtype: str, kind: str,
             if kind == "rhs":
                 fn = jax.jit(lambda x, w, _bn=bn, _o=order: K.rbgp4mm_rhs(
                     dims, adj, x, w, block_n=_bn, grid_order=_o))
+            elif kind == "chain_rhs":
+                from . import chainmm as KC
+
+                fn = jax.jit(lambda x, w, _bn=bn: KC.chainmm_rhs(
+                    dims, adj, x, w, block_n=_bn))
+            elif kind == "chain_sddmm":
+                from . import chainmm as KC
+
+                g_c = jax.random.normal(kw, (n, dims.m)).astype(dtype)
+                fn = jax.jit(lambda x, w, _bn=bn: KC.chain_sddmm_rhs(
+                    dims, adj, g_c, x, block_n=_bn))
             elif kind == "lhs":
                 fn = jax.jit(lambda x, w, _bn=bn: K.rbgp4mm(
                     dims, adj, w, x.T, block_n=_bn))
@@ -281,7 +320,9 @@ def autotune(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
       n: token count (bucketed to the next power of two for the cache key).
       dtype: operand dtype name.
       kind: "rhs" | "lhs" | "sddmm" (token-major) | "sddmm_lhs"
-        (feature-major) — distinct kernels never share cache entries.
+        (feature-major) | "chain_rhs" | "chain_sddmm" (blocked-CSR chain
+        executor, ``dims`` a ChainDims) — distinct kernels never share
+        cache entries.
       platform: jax backend name; default ``jax.default_backend()``.
       adj_o: optional concrete outer adjacency — required for measured mode.
       search_fn: test hook replacing the search (same signature as

@@ -36,6 +36,8 @@ __all__ = [
     "KernelEstimate",
     "estimate_rbgp4mm",
     "estimate_rbgp4mm_dims",
+    "estimate_chainmm",
+    "estimate_chain_spec",
     "estimate_dense",
     "estimate_unstructured",
 ]
@@ -113,6 +115,54 @@ def estimate_rbgp4mm_dims(
     """
     return _estimate(dims.m, dims.tile_m, dims.tile_k, dims.group_rows,
                      dims.chunk_cols, dims.d_o, dims.d_i, n,
+                     bytes_per_el, block_n)
+
+
+def estimate_chainmm(
+    dims, n: int, *, bytes_per_el: int = 2, block_n: int = 512
+) -> KernelEstimate:
+    """Cost of the blocked-CSR chain executor (``kernels.chainmm``).
+
+    ``dims`` is a :class:`repro.kernels.chainmm.ChainDims` (or an
+    ``RBGPSpec``-derived view with the same fields): the chain kernel moves
+    the same traffic classes as the RBGP4 one — compact W streamed once per
+    token pass, ``d_head`` gathered input tiles per output tile (head-level
+    tile skipping), one output write — and its MXU packing is set by the
+    dense leaf block (``group_rows`` sublane rows) and the per-head-slot
+    contraction width (``d_i * chunk_cols`` lanes), so the shared
+    first-principles model applies with the chain's numbers.
+    """
+    return _estimate(dims.m, dims.tile_m, dims.tile_k, dims.group_rows,
+                     dims.chunk_cols, dims.d_o, dims.d_i, n,
+                     bytes_per_el, block_n)
+
+
+def estimate_chain_spec(
+    spec, n: int, *, bytes_per_el: int = 2, block_n: int = 512
+) -> KernelEstimate:
+    """Chain estimate straight from an ``RBGPSpec`` (no graph sampling).
+
+    Every quantity the model needs — head tile shape, dense leaf block,
+    per-head-slot contraction width — is determined by the factor sizes
+    and degrees alone, so the budget solver can score candidate chains
+    without constructing a ``ChainLayout``.
+    """
+    fs = spec.factors
+    li = len(fs)
+    while li > 1 and (fs[li - 1].kind == "complete"
+                      or fs[li - 1].sparsity == 0.0):
+        li -= 1
+    g_rows = 1
+    c_cols = 1
+    for f in fs[li:]:
+        g_rows *= f.n_left
+        c_cols *= f.n_right
+    d_head = fs[0].d_left
+    inner = 1
+    for f in fs[1:]:
+        inner *= f.d_left
+    return _estimate(spec.m, spec.m // fs[0].n_left, spec.k // fs[0].n_right,
+                     g_rows, c_cols, d_head, inner // c_cols, n,
                      bytes_per_el, block_n)
 
 

@@ -59,7 +59,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="tokens per paged-KV block (continuous engine)")
     ap.add_argument("--max-live-tokens", type=int, default=0,
                     help="admission budget: max sum(prompt+gen) over "
-                         "running requests (0: pool capacity)")
+                         "running requests (0: pool capacity). With "
+                         "--plan the budget is grown by the weight HBM "
+                         "the plan frees (plan-aware admission)")
     ap.add_argument("--plan", default="",
                     help="SparsityPlan JSON (per-layer path rules); "
                          "overrides --pattern/--sparsity/--backend")
@@ -93,9 +95,14 @@ def main():
     if args.reduced:
         cfg = reduce_config(cfg)
     if args.plan:
+        from repro.kernels import autotune
         from repro.sparsity import SparsityPlan
 
         cfg = apply_sparsity(cfg, plan=SparsityPlan.load(args.plan))
+        # scope autotuner cache entries to this plan: heterogeneous plans
+        # realize many kernel shapes and must warm up once per plan, not
+        # collide on (dims, dtype, platform) alone
+        autotune.set_plan_fingerprint(cfg.plan.fingerprint())
     elif args.sparsity > 0:
         cfg = apply_sparsity(cfg, pattern=args.pattern,
                              sparsity=args.sparsity, backend=args.backend,
@@ -128,7 +135,12 @@ def main():
             "continuous", model, params, page_size=args.page_size,
             max_slots=args.batch, max_live_tokens=args.max_live_tokens,
             max_request_len=max_len,
+            plan=cfg.plan,  # plan-aware admission (None: uniform budget)
         )
+        if args.max_live_tokens and cfg.plan is not None:
+            print(f"plan-aware admission: max_live_tokens "
+                  f"{engine.base_live_tokens} -> {engine.plan_live_tokens} "
+                  f"(weight residency freed by the plan)")
     else:
         engine = make_engine("static", model, params, batch=args.batch)
     sampling = SamplingParams(temperature=args.temperature,

@@ -47,9 +47,13 @@ def build(args):
     if args.reduced:
         cfg = reduce_config(cfg)
     if getattr(args, "plan", ""):
+        from repro.kernels import autotune
         from repro.sparsity import SparsityPlan
 
         cfg = apply_sparsity(cfg, plan=SparsityPlan.load(args.plan))
+        # plan-scoped autotuner cache: heterogeneous plans warm up once
+        # per plan instead of colliding on (dims, dtype, platform)
+        autotune.set_plan_fingerprint(cfg.plan.fingerprint())
     elif args.sparsity > 0:
         cfg = apply_sparsity(cfg, pattern=args.pattern, sparsity=args.sparsity,
                              backend=args.backend, min_dim=args.min_dim)

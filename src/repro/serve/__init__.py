@@ -9,10 +9,11 @@ from .engine import (
     run_sequential,
 )
 from .sampling import SamplingParams, greedy, sample_token
-from .scheduler import FCFSScheduler
+from .scheduler import FCFSScheduler, plan_aware_live_tokens
 
 __all__ = [
     "PageAllocator", "PagedKVCache", "FCFSScheduler",
+    "plan_aware_live_tokens",
     "SamplingParams", "greedy", "sample_token",
     "Request", "ServingEngine", "ContinuousEngine", "StaticEngine",
     "make_engine", "run_sequential",

@@ -161,6 +161,13 @@ class ContinuousEngine(ServingEngine):
                       running set; 0 = bounded only by pool capacity.
     max_request_len:  longest admissible prompt + max_new (sets the block-
                       table width, a static shape of the decode step).
+    plan:             optional :class:`repro.sparsity.SparsityPlan` of the
+                      served weights.  With a non-zero ``max_live_tokens``
+                      the admission budget is grown by the weight HBM the
+                      plan frees (``scheduler.plan_aware_live_tokens``):
+                      sparser layers leave more room for KV pages, so
+                      admission no longer assumes uniform dense weight
+                      residency.  Pool capacity still caps admission.
     """
 
     kind = "continuous"
@@ -168,7 +175,7 @@ class ContinuousEngine(ServingEngine):
     def __init__(self, model, params, *, page_size: int = 8,
                  max_slots: int = 8, n_blocks: int = 0,
                  max_live_tokens: int = 0, max_request_len: int = 0,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, plan=None):
         super().__init__(model, params, cache_dtype=cache_dtype)
         self.page = page_size
         self.max_slots = max_slots
@@ -177,6 +184,26 @@ class ContinuousEngine(ServingEngine):
         if n_blocks <= 0:
             n_blocks = 1 + max_slots * self.max_blocks
         self.kv = PagedKVCache(model, n_blocks, page_size, cache_dtype)
+        self.base_live_tokens = max_live_tokens
+        if plan is not None and max_live_tokens > 0:
+            from repro.sparsity import model_matmul_shapes
+
+            from .scheduler import plan_aware_live_tokens
+
+            # the freed bytes are *weight* residency: size them by the
+            # served params' dtype, not the KV cache dtype
+            wdt = next(
+                (leaf.dtype for leaf in jax.tree_util.tree_leaves(params)
+                 if jnp.issubdtype(leaf.dtype, jnp.floating)),
+                jnp.dtype(jnp.float32),
+            )
+            max_live_tokens = plan_aware_live_tokens(
+                max_live_tokens, plan=plan,
+                shapes=model_matmul_shapes(self.cfg),
+                kv_bytes_per_token=self.kv_bytes_per_token(),
+                value_bytes=jnp.dtype(wdt).itemsize,
+            )
+        self.plan_live_tokens = max_live_tokens
         self.scheduler = FCFSScheduler(
             page_size=page_size, max_slots=max_slots,
             max_live_tokens=max_live_tokens,
@@ -191,6 +218,12 @@ class ContinuousEngine(ServingEngine):
     def gather_tokens(self) -> int:
         """KV slots a decode row attends over (block-table width x page)."""
         return self.max_blocks * self.page
+
+    def kv_bytes_per_token(self) -> float:
+        """Cache footprint of one token across every layer's page pools."""
+        total = sum(leaf.size * leaf.dtype.itemsize
+                    for leaf in jax.tree_util.tree_leaves(self.kv.pools))
+        return total / max(self.kv.allocator.n_total * self.page, 1)
 
     @property
     def idle(self) -> bool:

@@ -28,7 +28,40 @@ from collections import deque
 
 from .cache import blocks_for_tokens as _blocks_for
 
-__all__ = ["FCFSScheduler"]
+__all__ = ["FCFSScheduler", "plan_aware_live_tokens"]
+
+
+def plan_aware_live_tokens(base_tokens: int, *, plan, shapes: dict,
+                           kv_bytes_per_token: float,
+                           value_bytes: int = 2) -> int:
+    """Grow a live-token budget by the weight HBM a sparsity plan frees.
+
+    ``max_live_tokens`` is sized for one accelerator's HBM split between
+    resident weights and KV pages.  A uniform budget implicitly assumes
+    *dense* weight residency; under a heterogeneous :class:`SparsityPlan`
+    the resident weights shrink to ``plan_density(plan, shapes)`` of
+    dense, and the freed bytes are exactly KV headroom the admission
+    control may spend on more live tokens:
+
+        budget = base + (1 - density) * dense_weight_bytes / kv_per_token
+
+    ``shapes`` is the model's projection shape table
+    (:func:`repro.sparsity.model_matmul_shapes`); ``kv_bytes_per_token``
+    the cache footprint of one token across every layer's pools (the
+    engine derives it from its allocated pools).  Pool *capacity* still
+    caps admission — ``FCFSScheduler`` clamps any budget to the physical
+    block pool, so this can never over-admit.
+    """
+    from repro.sparsity import plan_density
+
+    dens = plan_density(plan, shapes)
+    dense_bytes = 0.0
+    for shp in shapes.values():
+        m, k = int(shp[0]), int(shp[1])
+        c = int(shp[2]) if len(shp) > 2 else 1
+        dense_bytes += float(m) * k * c * value_bytes
+    freed = dense_bytes * (1.0 - dens)
+    return int(base_tokens + freed // max(kv_bytes_per_token, 1.0))
 
 
 class FCFSScheduler:

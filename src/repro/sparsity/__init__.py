@@ -12,12 +12,14 @@ from .api import (
     DenseWeight,
     MaskedWeight,
     CompactWeight,
+    ChainWeight,
     sparse_linear,
     sparse_linear_batched,
     sparse_matmul,
     dense_weight,
     expand_rbgp4_mask,
 )
+from .chain import chain_weight, chain_storage_bytes
 from .plan import (
     PatternSpec,
     PlanRule,
@@ -41,6 +43,7 @@ __all__ = [
     "BackendCapabilities", "SparseBackend", "register_backend", "get_backend",
     "available_backends", "resolve_backend", "storage_kind",
     "SparseWeight", "DenseWeight", "MaskedWeight", "CompactWeight",
+    "ChainWeight", "chain_weight", "chain_storage_bytes",
     "sparse_linear", "sparse_linear_batched", "sparse_matmul", "dense_weight",
     "SparseLinear", "expand_rbgp4_mask",
 ]

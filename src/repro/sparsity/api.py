@@ -25,6 +25,11 @@ values are stored*:
                      the container flows through ``jax.jit``, optimizers,
                      checkpointing, and sharding as an ordinary pytree
                      whose only leaves are the trainable values (+ bias).
+  ``ChainWeight``    blocked-CSR storage for >2-sparse-factor product
+                     chains (see ``sparsity/chain.py``): values at the
+                     product's non-zero blocks + per-factor adjacency as
+                     static ``ChainLayout`` aux — the deep-chain analogue
+                     of CompactWeight.
 
 **Backends** — registered executors that say *how the matmul runs*:
 
@@ -33,6 +38,9 @@ values are stored*:
   ``xla_compact``  gather + einsum from compact storage (no dense W).
   ``pallas``       the RBGP4MM Pallas kernels (custom VJP; interpret on
                    CPU, native on TPU).
+  ``chain``        the blocked-CSR chain executor (``kernels/chainmm``):
+                   scalar-prefetched Pallas kernels on TPU, the bit-exact
+                   masked-reference twin elsewhere.
 
 Each backend declares :class:`BackendCapabilities` (needs_layout,
 compact_storage, grad_support, platforms, epilogue, batched) so callers can
@@ -89,6 +97,7 @@ __all__ = [
     "DenseWeight",
     "MaskedWeight",
     "CompactWeight",
+    "ChainWeight",
     "sparse_linear",
     "sparse_linear_batched",
     "sparse_matmul",
@@ -239,6 +248,13 @@ class CompactWeight(SparseWeight):
     _TRAINABLE = ("w_data", "b")
 
 
+# ChainWeight (blocked-CSR storage for >2-sparse-factor product chains)
+# lives in .chain with its storage-schema docs; imported here so the
+# registry, dispatchers, and backends below can type against it.  .chain
+# only needs SparseWeight, which is already bound at this point.
+from .chain import ChainWeight  # noqa: E402
+
+
 # ---------------------------------------------------------------------------
 # backend protocol + registry
 # ---------------------------------------------------------------------------
@@ -249,6 +265,9 @@ class BackendCapabilities:
 
     needs_layout:    requires an RBGP4Layout (trace-time adjacency).
     compact_storage: consumes CompactWeight (2|E| values, no dense W).
+    chain_storage:   consumes ChainWeight (blocked-CSR storage of a deep
+                     product chain — values at non-zero blocks + per-factor
+                     adjacency as static aux).
     grad_support:    differentiable (autodiff or custom VJP).
     platforms:       jax backends the implementation runs on.
     epilogue:        fuses bias/activation/residual into the kernel
@@ -260,6 +279,7 @@ class BackendCapabilities:
 
     needs_layout: bool = False
     compact_storage: bool = False
+    chain_storage: bool = False
     grad_support: bool = True
     platforms: tuple[str, ...] = ("cpu", "gpu", "tpu")
     epilogue: bool = False
@@ -329,6 +349,7 @@ def available_backends(
     weight: Optional[Any] = None,
     needs_layout: Optional[bool] = None,
     compact_storage: Optional[bool] = None,
+    chain_storage: Optional[bool] = None,
     grad_support: Optional[bool] = None,
     epilogue: Optional[bool] = None,
     batched: Optional[bool] = None,
@@ -342,6 +363,8 @@ def available_backends(
         if needs_layout is not None and caps.needs_layout != needs_layout:
             continue
         if compact_storage is not None and caps.compact_storage != compact_storage:
+            continue
+        if chain_storage is not None and caps.chain_storage != chain_storage:
             continue
         if grad_support is not None and caps.grad_support != grad_support:
             continue
@@ -357,17 +380,30 @@ def available_backends(
     return out
 
 
-def storage_kind(backend: str, *, has_layout: bool) -> str:
-    """'dense' is never returned: 'compact' or 'masked' storage for a
-    sparsified layer given the configured backend name.
+def storage_kind(backend: str, *, has_layout: bool, chain: bool = False) -> str:
+    """'dense' is never returned: 'compact', 'chain', or 'masked' storage
+    for a sparsified layer given the configured backend name.
 
     ``auto`` prefers compact storage whenever the pattern has an RBGP4
-    layout (succinct values + runtime-efficient kernels); backends that
-    declare ``compact_storage`` require one.
+    layout (succinct values + runtime-efficient kernels), then chain
+    storage when the pattern is a deeper product chain (``chain=True`` —
+    blocked-CSR values + per-factor indices instead of a materialized
+    mask), and masked storage last.  Backends declaring
+    ``compact_storage`` / ``chain_storage`` require the matching pattern.
     """
     if backend == "auto":
-        return "compact" if has_layout else "masked"
+        if has_layout:
+            return "compact"
+        return "chain" if chain else "masked"
     caps = get_backend(backend).capabilities
+    if caps.chain_storage:
+        if not chain:
+            raise ValueError(
+                f"backend {backend!r} requires a >2-sparse-factor rbgp "
+                f"chain (chain storage is a deep-product property; "
+                f"RBGP4-expressible patterns use compact storage)"
+            )
+        return "chain"
     if caps.compact_storage:
         if not has_layout:
             raise ValueError(
@@ -382,10 +418,14 @@ def resolve_backend(weight: SparseWeight, backend: str = "auto") -> SparseBacken
     """Pick the executing backend for ``weight``.
 
     ``auto``: DenseWeight -> ref; MaskedWeight -> xla_masked;
-    CompactWeight -> pallas on TPU, xla_compact elsewhere.
+    CompactWeight -> pallas on TPU, xla_compact elsewhere;
+    ChainWeight -> chain (which itself picks Pallas on TPU, the bit-exact
+    masked-reference twin elsewhere).
     An explicitly named backend is validated against the weight type.
     """
     if backend == "auto":
+        if isinstance(weight, ChainWeight):
+            return get_backend("chain")
         if isinstance(weight, CompactWeight):
             platform = jax.default_backend()
             pallas = _REGISTRY.get("pallas")
@@ -506,6 +546,13 @@ def dense_weight(weight: SparseWeight, dtype=None) -> jax.Array:
                 functools.partial(kref.unpack_dense, weight.layout)
             )(w_data)
         return kref.unpack_dense(weight.layout, w_data)
+    if isinstance(weight, ChainWeight):
+        from repro.kernels.chainmm import chain_unpack_dense
+
+        w_data = weight.w_data
+        if dtype is not None:
+            w_data = w_data.astype(dtype)
+        return chain_unpack_dense(weight.layout, w_data)
     raise TypeError(f"not a SparseWeight: {type(weight).__name__}")
 
 
@@ -627,7 +674,42 @@ class PallasBackend:
         )
 
 
+class ChainBackend:
+    """Blocked-CSR executor for deep (>2-sparse-factor) product chains.
+
+    On TPU: the scalar-prefetched ``chainmm_rhs`` Pallas forward with a
+    transpose-free SDDMM-style custom VJP (``repro.kernels.chainmm``) —
+    head-factor tiles are skipped at the grid level, mid factors are
+    static slices, leaf blocks feed the MXU densely.
+
+    Off-TPU: the scatter-reference path — the same ``x @ W^T`` dot the
+    ``xla_masked`` backend runs, on a dense operand that is bit-identical
+    to ``w * mask``.  Forward and VJP are therefore *bit-identical* to the
+    masked reference (the parity anchor the chain acceptance gate pins);
+    unlike the masked fallback it replaced, the dense array is a transient
+    compute buffer — storage stays O(sum d_j n_j) indices + nnz values.
+    Interpret-mode Pallas execution stays available for kernel tests via
+    ``repro.kernels.chainmm`` directly.
+    """
+
+    name = "chain"
+    capabilities = BackendCapabilities(chain_storage=True)
+    accepts = (ChainWeight,)
+
+    def linear(self, weight, x):
+        from repro.kernels import chainmm
+
+        w_data = weight.w_data.astype(x.dtype)
+        if jax.default_backend() == "tpu":
+            return chainmm.get_chain_op(weight.layout).linear(x, w_data)
+        return chainmm.chain_ref_linear(weight.layout, w_data, x)
+
+    def matmul(self, weight, x):
+        return dense_weight(weight, x.dtype) @ x
+
+
 register_backend(RefBackend())
 register_backend(XlaMaskedBackend())
 register_backend(XlaCompactBackend())
 register_backend(PallasBackend())
+register_backend(ChainBackend())

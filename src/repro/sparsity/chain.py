@@ -1,0 +1,99 @@
+"""ChainWeight: blocked-CSR storage container for deep RBGP product chains.
+
+The third storage kind in the system (after dense and masked/compact):
+an RBGP product chain with more than two sparse Ramanujan factors is not
+RBGP4-expressible, and before this container existed such chains trained
+through masked emulation — a dense (M, K) trainable array *plus* a
+materialized (M, K) mask, O(M*K) bytes of storage for a pattern whose
+information content is O(sum d_j * n_j).
+
+``ChainWeight`` stores instead:
+
+  * ``w_data`` — trainable values only at the product's non-zero blocks,
+    shape ``(M, prod_j d_j)`` (row pointers are implicit: every row owns
+    exactly ``prod d_j`` stored columns by d-regularity of the factors);
+  * ``layout`` — a :class:`repro.core.ChainLayout` as *static pytree aux
+    data*: per-factor adjacency lists (the blocked-CSR column indices,
+    ``sum d_j * n_left_j`` int32s total) plus the dense-leaf block shape.
+    Like ``CompactWeight``'s RBGP4 layout it never appears as a leaf, so
+    optimizers, checkpoints, and shardings see only the trainable values
+    (+ bias), and treedef equality is by spec — every rank reconstructs
+    the identical layout from the spec with no communication.
+
+Execution is the ``chain`` backend (``repro.kernels.chainmm`` +
+registration in ``repro.sparsity.api``): scalar-prefetched Pallas kernels
+on TPU, the bit-exact masked-reference twin elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+
+from repro.core import ChainLayout
+from .api import SparseWeight
+
+__all__ = ["ChainWeight", "chain_weight", "chain_storage_bytes"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("w_data", "b"),
+    meta_fields=("layout",),
+)
+@dataclasses.dataclass
+class ChainWeight(SparseWeight):
+    """Blocked-CSR chain storage: ``w_data`` (M, prod d_j) + layout aux.
+
+    ``w_data`` may carry extra leading dims in principle, but the built-in
+    executors are per-layer (chains have no stacked-expert storage — the
+    MoE path keeps rbgp4).
+    """
+
+    w_data: jax.Array
+    b: Optional[jax.Array] = None
+    layout: Optional[ChainLayout] = None
+
+    _DATA = ("w_data", "b")
+    _TRAINABLE = ("w_data", "b")
+
+
+def chain_weight(key: jax.Array, layout: ChainLayout, *,
+                 bias: bool = False, dtype=None) -> ChainWeight:
+    """Initialized ChainWeight (Kaiming over present connections)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.chainmm import chain_init
+
+    dtype = dtype or jnp.float32
+    b = jnp.zeros((layout.m,), dtype) if bias else None
+    return ChainWeight(w_data=chain_init(key, layout, dtype=dtype),
+                       b=b, layout=layout)
+
+
+def chain_storage_bytes(layout: ChainLayout, *, value_bytes: int = 4,
+                        index_bytes: int = 4) -> dict:
+    """Index + value storage of one chain layer vs its masked emulation.
+
+    ``chain`` is what this container persists (succinct per-factor indices
+    + non-zero values); ``masked`` is what the masked fallback persisted
+    for the same pattern (dense trainable values *and* a full (M, K) uint8
+    mask — deep chains have no succinct factor pair, so the masked
+    container carries the materialized mask).  The ratio is the
+    acceptance-gate quantity of the chain-executor benchmark.
+    """
+    mem = layout.memory_bytes(value_bytes=value_bytes,
+                              index_bytes=index_bytes)
+    dense = layout.m * layout.k
+    masked = dense * value_bytes + dense  # values + uint8 mask
+    return {
+        "chain_values": mem["values"],
+        "chain_index": mem["index_succinct"],
+        "chain_total": mem["total"],
+        "masked_values": dense * value_bytes,
+        "masked_mask": dense,
+        "masked_total": masked,
+        "ratio": mem["total"] / masked,
+    }

@@ -20,6 +20,10 @@ Storage kinds:
                  factors, typed non-trainable (no ``_``-key convention).
   compact        ``CompactWeight`` (M, nnz_row) values — 2|E| memory — with
                  the RBGP4 layout as static pytree aux data.
+  chain          ``ChainWeight`` blocked-CSR storage for >2-sparse-factor
+                 product chains: values at the product's non-zero blocks
+                 with the per-factor adjacency (``ChainLayout``) as static
+                 aux — no dense values, no materialized mask.
 
 ``init`` returns the weight container itself (bias included); legacy flat
 dicts (``{"w", "_ba_o", ...}`` / ``{"w_data"}``) are still accepted by
@@ -34,8 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RBGP4Layout
+from repro.core import ChainLayout, RBGP4Layout
 from .api import (
+    ChainWeight,
     CompactWeight,
     DenseWeight,
     MaskedWeight,
@@ -101,7 +106,9 @@ class SparseLinear:
             # validates the backend name against the registry and resolves
             # the storage container kind from its declared capabilities
             self.mode = storage_kind(
-                self.cfg.backend, has_layout=self.pattern.layout is not None
+                self.cfg.backend,
+                has_layout=self.pattern.layout is not None,
+                chain=self.pattern.chain_layout is not None,
             )
         # execution backend name handed to dispatch ("auto" resolves by
         # weight type: DenseWeight -> ref, etc.)
@@ -111,6 +118,10 @@ class SparseLinear:
     @property
     def layout(self) -> Optional[RBGP4Layout]:
         return self.pattern.layout if self.pattern else None
+
+    @property
+    def chain_layout(self) -> Optional[ChainLayout]:
+        return self.pattern.chain_layout if self.pattern else None
 
     def n_params(self) -> int:
         if self.mode in ("dense", "masked"):
@@ -147,6 +158,16 @@ class SparseLinear:
                     chunk_cols=lay.spec.chunk_cols,
                 )
             return MaskedWeight(w=w, mask=jnp.asarray(self.pattern.mask()), b=b)
+        if self.mode == "chain":
+            # blocked-CSR values (Kaiming over the nnz_per_row fan-in);
+            # the per-factor adjacency rides as static layout aux
+            from repro.kernels.chainmm import chain_init
+
+            lay = self.chain_layout
+            return ChainWeight(
+                w_data=chain_init(wkey, lay, dtype=self.param_dtype),
+                b=b, layout=lay,
+            )
         # compact
         lay = self.layout
         fan_in = lay.spec.nnz_per_row
@@ -190,6 +211,9 @@ class SparseLinear:
         )
         b = params.get("b")
         if "w_data" in params:
+            if self.mode == "chain":
+                return ChainWeight(w_data=params["w_data"], b=b,
+                                   layout=self.chain_layout)
             return CompactWeight(w_data=params["w_data"], b=b, layout=self.layout)
         if "_ba_o" in params:
             sp = self.layout.spec

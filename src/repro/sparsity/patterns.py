@@ -18,8 +18,10 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import (
+    ChainLayout,
     RBGP4Layout,
     RBGP4Spec,
+    RBGPSpec,
     canonicalize_factors,
     design_rbgp,
     design_rbgp4,
@@ -77,6 +79,9 @@ class PatternInstance:
     index_bytes_succinct: int = 0
     index_bytes_full: int = 0
     chain: Optional[object] = None  # RBGPSpec for non-RBGP4 'rbgp' chains
+    # blocked-CSR layout of a >2-sparse-factor chain (chain storage +
+    # the chainmm executor); None for every other pattern
+    chain_layout: Optional[ChainLayout] = None
 
     def mask(self) -> np.ndarray:
         return self.mask_fn()
@@ -175,15 +180,25 @@ def _rbgp4(m, k, sparsity, cfg):
     )
 
 
+@functools.lru_cache(maxsize=1024)
+def _chain_layout_for(spec: RBGPSpec) -> ChainLayout:
+    """Memoized blocked-CSR layout construction (pure function of spec);
+    sharing the instance shares adjacency, col-index, and chainmm op-cache
+    entries across every layer with the same spec."""
+    return ChainLayout(spec)
+
+
 def _rbgp(m, k, sparsity, cfg):
     """Generalized product chain (paper §3-4 algebra; 'rbgp4' is the
     default instance).  Templates with <= 2 Ramanujan factors canonicalize
-    onto an RBGP4 layout (compact storage + kernels available); deeper
-    chains materialize their mask from the sampled ProductStructure and
-    run on the masked backends.  The decision is template-level (not
-    realized-sparsity-level) so it is knowable without shapes — plan
-    machinery (seed offsetting, scan-stacking signatures) must predict the
-    storage kind before any pattern is built.
+    onto an RBGP4 layout (compact storage + the RBGP4MM kernels); deeper
+    chains get a blocked-CSR :class:`ChainLayout` (chain storage + the
+    chainmm executor, or masked emulation when the configured backend is a
+    masked one — the mask is the layout's own sample either way, so the
+    two storages realize bit-identical masks).  The decision is
+    template-level (not realized-sparsity-level) so it is knowable without
+    shapes — plan machinery (seed offsetting, scan-stacking signatures)
+    must predict the storage kind before any pattern is built.
     """
     spec = design_rbgp(m, k, sparsity, factors=cfg.factors, seed=cfg.seed)
     if cfg.factors is None:
@@ -202,12 +217,13 @@ def _rbgp(m, k, sparsity, cfg):
             index_bytes_full=mem["index_full"],
             chain=spec,
         )
+    chain_layout = _chain_layout_for(spec)
     return PatternInstance(
         name="rbgp", m=m, k=k, sparsity=spec.sparsity,
-        mask_fn=lambda: spec.sample().mask(), nnz=spec.nnz,
+        mask_fn=chain_layout.mask, nnz=spec.nnz,
         index_bytes_succinct=spec.stored_index_edges * 4,
         index_bytes_full=spec.nnz * 4,
-        chain=spec,
+        chain=spec, chain_layout=chain_layout,
     )
 
 

@@ -113,15 +113,25 @@ class PatternSpec(SparsityConfig):
                     if t[0] == "ramanujan")
         return n_ram <= 2
 
+    def is_chain(self) -> bool:
+        """Whether this spec resolves to a >2-sparse-factor product chain
+        (blocked-CSR ``ChainLayout`` storage available).  Template-level,
+        like :meth:`may_have_layout` — the complement of it within the
+        ``rbgp`` pattern."""
+        return self.pattern == "rbgp" and not self.may_have_layout()
+
     def storage(self) -> str:
-        """'dense' | 'masked' | 'compact' — what storage this spec selects
-        (assuming it applies; used for scan/seed decisions, not dispatch)."""
+        """'dense' | 'masked' | 'compact' | 'chain' — what storage this
+        spec selects (assuming it applies; used for scan/seed decisions,
+        not dispatch)."""
         if not self.is_sparse:
             return "dense"
         from .api import storage_kind
 
         try:
-            return storage_kind(self.backend, has_layout=self.may_have_layout())
+            return storage_kind(self.backend,
+                                has_layout=self.may_have_layout(),
+                                chain=self.is_chain())
         except ValueError:
             return "masked"
 
@@ -216,16 +226,16 @@ class SparsityPlan:
 
         Masked-storage rules get ``seed + offset`` so every layer samples
         its own graphs (factors are parameters and stack across scanned
-        periods); compact-storage rules keep their seed — compact layouts
-        are trace-time static aux data, so scanned periods must share one
-        graph sample.  Mirrors the legacy per-layer ``SparsityConfig``
-        seed rule bit-for-bit for lowered uniform plans.
+        periods); compact- and chain-storage rules keep their seed — both
+        layouts are trace-time static aux data, so scanned periods must
+        share one graph sample.  Mirrors the legacy per-layer
+        ``SparsityConfig`` seed rule bit-for-bit for lowered uniform plans.
         """
         if offset == 0:
             return self
         new = []
         for r in self.rules:
-            if r.spec.is_sparse and r.spec.storage() == "compact":
+            if r.spec.is_sparse and r.spec.storage() in ("compact", "chain"):
                 new.append(r)
             else:
                 new.append(dataclasses.replace(
@@ -241,17 +251,19 @@ class SparsityPlan:
         Masked-storage specs are seed-normalized — their factors are
         stacked *parameters*, so per-layer seeds (the
         ``offset_masked_seeds`` decorrelation) only change values, never
-        structure.  Compact-storage specs keep their seed: it determines
-        the trace-time static ``RBGP4Layout`` aux, and stacking different
-        layouts is structurally invalid — heterogeneous compact seeds must
-        fall out of the scan instead.
+        structure.  Compact- and chain-storage specs keep their seed: it
+        determines the trace-time static layout aux (``RBGP4Layout`` /
+        ``ChainLayout``), and stacking different layouts is structurally
+        invalid — heterogeneous compact/chain seeds must fall out of the
+        scan instead.
         """
         out = []
         for path, m, k in paths_shapes:
             spec = self.resolve(path, m, k)
             if not spec.applies_to(m, k):
                 spec = DENSE
-            if not (spec.is_sparse and spec.storage() == "compact"):
+            if not (spec.is_sparse
+                    and spec.storage() in ("compact", "chain")):
                 spec = dataclasses.replace(spec, seed=0)
             out.append(spec)
         return tuple(out)
@@ -482,6 +494,8 @@ def solve_budget(
     max_steps: int = 8,
     seed: int = 0,
     group: Optional[Callable[[str], str]] = None,
+    cost_model: str = "bytes",
+    n_tokens: int = 2048,
 ) -> SparsityPlan:
     """Allocate per-layer pow-2 sparsity steps to hit a global budget.
 
@@ -498,6 +512,23 @@ def solve_budget(
     one pow-2 step of the target (it never overshoots below ``target``
     minus half the largest layer's share).
 
+    ``cost_model`` picks what the greedy (and, for ``target_flops``, the
+    achieved ratio) weighs:
+
+      * ``"bytes"`` (default): raw matmul bytes ``count * m * k *
+        density`` — the analytic model both targets historically shared;
+      * ``"perf_model"``: modeled kernel *wall-clock* from
+        :mod:`repro.kernels.perf_model` at ``n_tokens`` tokens —
+        ``estimate_dense`` for a layer at density 1, the rbgp4 / chain
+        roofline estimate at each candidate step.  The greedy then halves
+        the layer with the largest modeled time contribution, which
+        diverges from bytes exactly where the roofline says sparsity stops
+        paying (memory-bound tails, MXU-underpacked leaf blocks).  Only
+        meaningful with ``target_flops`` and the compact-executor patterns
+        (``rbgp4`` / ``rbgp``) — masked emulation runs dense-speed
+        matmuls, so a wall-clock greedy over masked patterns would never
+        converge.
+
     Deterministic: ties break on lexicographic path (group) order and the
     result depends only on the arguments — the same inputs produce the
     same plan JSON and fingerprint.  ``group`` optionally coalesces paths
@@ -513,6 +544,19 @@ def solve_budget(
     target = target_density if target_density is not None else target_flops
     if not (0.0 < target <= 1.0):
         raise ValueError(f"target must be in (0, 1], got {target}")
+    if cost_model not in ("bytes", "perf_model"):
+        raise ValueError(f"cost_model must be 'bytes' or 'perf_model', "
+                         f"got {cost_model!r}")
+    if cost_model == "perf_model":
+        if target_flops is None:
+            raise ValueError(
+                "cost_model='perf_model' weighs modeled wall-clock, which "
+                "is a FLOP/runtime target — pass target_flops")
+        if pattern not in ("rbgp4", "rbgp"):
+            raise ValueError(
+                f"cost_model='perf_model' models the compact executors "
+                f"(patterns 'rbgp4'/'rbgp'); pattern {pattern!r} runs "
+                f"masked emulation at dense speed")
     shapes = _norm_shapes(shapes)
     base = PatternSpec(pattern=pattern, sparsity=0.5, backend=backend,
                        block=tuple(block), seed=seed, min_dim=min_dim,
@@ -554,25 +598,59 @@ def solve_budget(
     if total_w <= 0:
         raise ValueError("empty shape table")
 
+    if cost_model == "perf_model":
+        from repro.kernels import perf_model as _pm
+
+        def _path_cost(m: int, k: int, c: int, s: int) -> float:
+            if s == 0:
+                return _pm.estimate_dense(m, k, n_tokens).t_total_s * c
+            sp = 1.0 - 2.0 ** (-s)
+            if pattern == "rbgp4":
+                est = _pm.estimate_rbgp4mm(
+                    design_rbgp4(m, k, sp, seed=0), n_tokens)
+            else:
+                est = _pm.estimate_chain_spec(
+                    design_rbgp(m, k, sp, factors=factors, seed=0), n_tokens)
+            return est.t_total_s * c
+
+        # per-group modeled wall-clock at every feasible step (caps <= 8,
+        # designs are lru-cached — the tables are cheap)
+        for g in groups.values():
+            g["cost"] = [sum(_path_cost(*shapes[p], s) for p in g["paths"])
+                         for s in range(g["cap"] + 1)]
+
+    def weight_at(g: dict, s: int) -> float:
+        if cost_model == "perf_model":
+            return g["cost"][min(s, len(g["cost"]) - 1)]
+        return g["w"] * 2.0 ** (-s)
+
+    total0 = sum(weight_at(g, 0) for g in groups.values())
+
     def achieved() -> float:
-        return sum(g["w"] * 2.0 ** (-g["steps"]) for g in groups.values()) \
-            / total_w
+        return sum(weight_at(g, g["steps"]) for g in groups.values()) / total0
 
     order = sorted(groups)
     while achieved() > target:
-        best_key, best_bytes = None, -1.0
+        best_key, best_w = None, -1.0
         for gkey in order:
             g = groups[gkey]
             if g["steps"] >= g["cap"]:
                 continue
-            cur = g["w"] * 2.0 ** (-g["steps"])
-            if cur > best_bytes:
-                best_key, best_bytes = gkey, cur
+            cur = weight_at(g, g["steps"])
+            # under the perf model a further step may hit the roofline
+            # floor (output writes, input gather) — skip steps that no
+            # longer buy modeled time, they only cost accuracy
+            if cost_model == "perf_model" \
+                    and not weight_at(g, g["steps"] + 1) < cur:
+                continue
+            if cur > best_w:
+                best_key, best_w = gkey, cur
         if best_key is None:
             raise ValueError(
-                f"budget unreachable: achieved density {achieved():.4f} > "
+                f"budget unreachable: achieved ratio {achieved():.4f} > "
                 f"target {target} with every layer at its feasibility cap "
-                f"(min_dim={min_dim}, max_steps={max_steps})")
+                f"(min_dim={min_dim}, max_steps={max_steps}, "
+                f"cost_model={cost_model!r})")
         groups[best_key]["steps"] += 1
 
     # emit one rule per sparsity level (densest-matched paths first is
@@ -617,6 +695,11 @@ def _factor_graphs(inst: PatternInstance):
         lay = inst.layout
         return [("G_o", lay.graph_o), ("G_r", lay.graph_r),
                 ("G_i", lay.graph_i), ("G_b", lay.graph_b)]
+    if inst.chain_layout is not None:
+        # the blocked-CSR layout already holds the realized samples —
+        # certify the graphs the executor actually indexes with
+        return [(f"G_{i}", g)
+                for i, g in enumerate(inst.chain_layout.graphs)]
     if inst.chain is not None:
         ps = inst.chain.sample()
         return [(f"G_{i}", g) for i, g in enumerate(ps.factors)]

@@ -1,0 +1,384 @@
+"""Chain executor: blocked-CSR storage + kernels for deep RBGP chains.
+
+The acceptance anchor is *bit* parity: the ``chain`` backend's forward and
+VJP must be bit-identical to the masked reference (``xla_masked`` on the
+same realized mask) on >= 3-sparse-factor chains — the chain container
+replaces masked emulation, so it must mean exactly the same network.  The
+Pallas kernels (interpret mode here, native on TPU) are validated against
+the gather oracle and the dense reference with tight tolerances, like
+every other kernel in the suite.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import ChainLayout, design_rbgp  # noqa: E402
+from repro.kernels import chainmm as C  # noqa: E402
+from repro.sparsity import (  # noqa: E402
+    ChainWeight,
+    PatternSpec,
+    PlanRule,
+    SparseLinear,
+    SparsityConfig,
+    SparsityPlan,
+    chain_weight,
+    dense_weight,
+    make_pattern,
+    sparse_linear,
+    storage_kind,
+)
+from repro.sparsity.api import MaskedWeight  # noqa: E402
+
+T3 = (("ramanujan", 0, 0, 0.5),) * 3
+T4 = (("ramanujan", 0, 0, 0.5),) * 4
+HIER = (("complete", 4, 4, 0.0), ("ramanujan", 0, 0, 0.5),
+        ("ramanujan", 0, 0, 0.5), ("ramanujan", 0, 0, 0.5),
+        ("complete", 2, 2, 0.0))
+
+CHAINS = [
+    ("3ram", 128, 128, 0.875, T3),
+    ("4ram", 256, 256, 0.9375, T4),
+    ("hier", 128, 256, 0.875, HIER),
+]
+
+
+def _layout(m, k, sp, factors, seed=0):
+    return ChainLayout(design_rbgp(m, k, sp, factors=factors, seed=seed))
+
+
+def _masked_twin(lay, w: ChainWeight) -> MaskedWeight:
+    """The masked container realizing the identical network: dense values
+    scattered from the chain values (exact zeros off-mask), same mask."""
+    return MaskedWeight(w=dense_weight(w), mask=jnp.asarray(lay.mask()),
+                        b=w.b)
+
+
+# ---------------------------------------------------------------------------
+# bit parity with the masked reference (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,m,k,sp,factors", CHAINS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chain_backend_bit_identical_to_masked(name, m, k, sp, factors,
+                                               dtype):
+    lay = _layout(m, k, sp, factors, seed=2)
+    key = jax.random.PRNGKey(0)
+    kw, kx, kg = jax.random.split(key, 3)
+    w = chain_weight(kw, lay, bias=True, dtype=dtype)
+    wm = _masked_twin(lay, w)
+    x = jax.random.normal(kx, (17, k)).astype(dtype)
+
+    y_c = sparse_linear(w, x, backend="chain")
+    y_m = sparse_linear(wm, x, backend="xla_masked")
+    np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_m))
+
+    # VJP: cotangents through both backends, compared at the stored slots
+    g = jax.random.normal(kg, (17, m)).astype(dtype)
+
+    def loss_c(w_data, x):
+        ww = ChainWeight(w_data=w_data, b=w.b, layout=lay)
+        return (sparse_linear(ww, x, backend="chain") * g).sum()
+
+    def loss_m(w_dense, x):
+        ww = MaskedWeight(w=w_dense, mask=wm.mask, b=w.b)
+        return (sparse_linear(ww, x, backend="xla_masked") * g).sum()
+
+    gw_c, gx_c = jax.grad(loss_c, argnums=(0, 1))(w.w_data, x)
+    gw_m, gx_m = jax.grad(loss_m, argnums=(0, 1))(wm.w, x)
+    np.testing.assert_array_equal(np.asarray(gx_c), np.asarray(gx_m))
+    np.testing.assert_array_equal(
+        np.asarray(gw_c),
+        np.asarray(C.chain_pack_compact(lay, gw_m)),
+    )
+
+
+def test_chain_auto_dispatch_and_mask_identity():
+    """backend='auto' routes ChainWeight to the chain backend, and the
+    chain layout's mask is the exact mask the masked fallback samples."""
+    cfg = SparsityConfig(pattern="rbgp", sparsity=0.875, min_dim=1,
+                         backend="auto", factors=T3, seed=2)
+    inst = make_pattern(cfg, 128, 128)
+    assert inst.layout is None and inst.chain_layout is not None
+    np.testing.assert_array_equal(inst.mask(),
+                                  inst.chain.sample().mask())
+    lay = inst.chain_layout
+    w = chain_weight(jax.random.PRNGKey(0), lay)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 128))
+    np.testing.assert_array_equal(
+        np.asarray(sparse_linear(w, x)),                  # auto
+        np.asarray(sparse_linear(w, x, backend="chain")),
+    )
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: chain == masked across templates/seeds/dtypes
+# (hypothesis is an optional dev dependency — the rest of this module
+# must still run without it, so only this test is gated)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on CI, which installs it
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        tmpl=st.sampled_from([(128, 128, 0.875, T3), (64, 128, 0.875, T3),
+                              (256, 256, 0.9375, T4),
+                              (128, 256, 0.875, HIER)]),
+        seed=st.integers(min_value=0, max_value=7),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        n=st.integers(min_value=1, max_value=24),
+    )
+    def test_chain_matches_masked_property(tmpl, seed, dtype, n):
+        m, k, sp, factors = tmpl
+        lay = _layout(m, k, sp, factors, seed=seed)
+        kw, kx, kg = jax.random.split(jax.random.PRNGKey(seed + 100), 3)
+        w = chain_weight(kw, lay, dtype=dtype)
+        wm = _masked_twin(lay, w)
+        x = jax.random.normal(kx, (n, k)).astype(dtype)
+        g = jax.random.normal(kg, (n, m)).astype(dtype)
+
+        y_c, pull_c = jax.vjp(
+            lambda wd, x: sparse_linear(
+                ChainWeight(w_data=wd, layout=lay), x, backend="chain"),
+            w.w_data, x)
+        y_m, pull_m = jax.vjp(
+            lambda wd, x: sparse_linear(
+                MaskedWeight(w=wd, mask=wm.mask), x, backend="xla_masked"),
+            wm.w, x)
+        np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_m))
+        gw_c, gx_c = pull_c(g)
+        gw_m, gx_m = pull_m(g)
+        np.testing.assert_array_equal(np.asarray(gx_c), np.asarray(gx_m))
+        np.testing.assert_array_equal(
+            np.asarray(gw_c), np.asarray(C.chain_pack_compact(lay, gw_m)))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret) vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,m,k,sp,factors", CHAINS)
+def test_chainmm_rhs_kernel_vs_oracle(name, m, k, sp, factors):
+    lay = _layout(m, k, sp, factors, seed=1)
+    dims = C.chain_dims(lay)
+    kw, kx = jax.random.split(jax.random.PRNGKey(3))
+    w = C.chain_init(kw, lay)
+    x = jax.random.normal(kx, (37, k), jnp.float32)
+    adj = jnp.asarray(lay.adjs[0])
+    y = C.chainmm_rhs(dims, adj, x, w, interpret=True)
+    y_ref = x @ C.chain_unpack_dense(lay, w).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+    # gather oracle agrees too (the no-dense-W XLA path)
+    y_g = C.chain_gather_mm_rhs(lay, w, x)
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("name,m,k,sp,factors", CHAINS)
+def test_chain_sddmm_kernel_vs_oracle(name, m, k, sp, factors):
+    lay = _layout(m, k, sp, factors, seed=1)
+    dims = C.chain_dims(lay)
+    kg, kx = jax.random.split(jax.random.PRNGKey(4))
+    g = jax.random.normal(kg, (29, m), jnp.float32)
+    x = jax.random.normal(kx, (29, k), jnp.float32)
+    adj = jnp.asarray(lay.adjs[0])
+    dw = C.chain_sddmm_rhs(dims, adj, g, x, interpret=True)
+    dw_ref = C.chain_pack_compact(lay, g.T @ x)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chain_op_custom_vjp_interpret():
+    """ChainOp (the TPU execution path, interpret here): transpose-free
+    custom VJP agrees with autodiff through the dense reference."""
+    m, k, sp, factors = 128, 256, 0.875, HIER
+    lay = _layout(m, k, sp, factors, seed=1)
+    op = C.get_chain_op(lay, interpret=True)
+    kw, kx = jax.random.split(jax.random.PRNGKey(5))
+    w = C.chain_init(kw, lay)
+    x = jax.random.normal(kx, (19, k), jnp.float32)
+
+    def f_op(w, x):
+        return (op.linear(x, w) ** 2).sum()
+
+    def f_ref(w, x):
+        return (C.chain_ref_linear(lay, w, x) ** 2).sum()
+
+    np.testing.assert_allclose(float(f_op(w, x)), float(f_ref(w, x)),
+                               rtol=1e-5)
+    gw, gx = jax.grad(f_op, argnums=(0, 1))(w, x)
+    gw_r, gx_r = jax.grad(f_ref, argnums=(0, 1))(w, x)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chain_transpose_perm_roundtrip():
+    lay = _layout(256, 256, 0.9375, T4, seed=5)
+    w = np.asarray(C.chain_init(jax.random.PRNGKey(0), lay))
+    lt = lay.transpose_layout()
+    wt = w.reshape(-1)[lay.transpose_perm()].reshape(lt.data_shape)
+    np.testing.assert_array_equal(lt.unpack(wt), lay.unpack(w).T)
+
+
+# ---------------------------------------------------------------------------
+# storage plumbing: SparseLinear, plan resolution, autotune, checkpoints
+# ---------------------------------------------------------------------------
+
+def test_sparse_linear_chain_mode_and_counts():
+    cfg = SparsityConfig(pattern="rbgp", sparsity=0.875, min_dim=1,
+                         backend="auto", factors=T3, seed=2)
+    lin = SparseLinear(128, 128, cfg, name="x", use_bias=True)
+    assert lin.mode == "chain"
+    assert lin.chain_layout is not None and lin.layout is None
+    w = lin.init(jax.random.PRNGKey(0))
+    assert isinstance(w, ChainWeight)
+    assert w.w_data.shape == lin.chain_layout.data_shape
+    # n_params counts stored values only (+ bias), not the dense matrix
+    assert lin.n_params() == lin.pattern.nnz + 128
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 128))
+    y = lin.apply(w, x)
+    np.testing.assert_array_equal(
+        np.asarray(y),
+        np.asarray(x @ lin.dense_weight(w).T + w.b))
+
+
+def test_storage_kind_chain_rules():
+    assert storage_kind("auto", has_layout=False, chain=True) == "chain"
+    assert storage_kind("auto", has_layout=True, chain=False) == "compact"
+    assert storage_kind("auto", has_layout=False, chain=False) == "masked"
+    assert storage_kind("chain", has_layout=False, chain=True) == "chain"
+    assert storage_kind("xla_masked", has_layout=False, chain=True) == "masked"
+    with pytest.raises(ValueError, match="chain"):
+        storage_kind("chain", has_layout=True, chain=False)
+
+
+def test_plan_spec_chain_storage_and_seed_rules():
+    deep = PatternSpec(pattern="rbgp", sparsity=0.875, min_dim=1,
+                       backend="auto", factors=T3, seed=2)
+    assert deep.is_chain() and deep.storage() == "chain"
+    masked = PatternSpec(pattern="rbgp", sparsity=0.875, min_dim=1,
+                         backend="xla_masked", factors=T3, seed=2)
+    assert masked.storage() == "masked"
+    plan = SparsityPlan(rules=(PlanRule(".*", deep),))
+    # chain storage is trace-time static aux: per-layer seed offsets must
+    # NOT touch it (scanned periods share one graph sample)
+    off = plan.offset_masked_seeds(1000)
+    assert off.rules[0].spec.seed == 2
+    # ...while the masked spelling of the same chain re-seeds per layer
+    plan_m = SparsityPlan(rules=(PlanRule(".*", masked),))
+    assert plan_m.offset_masked_seeds(1000).rules[0].spec.seed == 1002
+    # and the two storages therefore fingerprint differently (a
+    # masked<->chain switch re-seeds scanned masks and must refuse restore)
+    assert plan.fingerprint() != plan_m.fingerprint()
+    # signature keeps the chain seed (layout-determining)
+    sig = plan.signature([("x", 128, 128)])
+    assert sig[0].seed == 2
+
+
+def test_chain_autotune_kinds_cached(tmp_path):
+    from repro.kernels import autotune
+
+    autotune.set_cache_path(str(tmp_path / "tune.json"))
+    try:
+        lay = _layout(128, 128, 0.875, T3, seed=2)
+        dims = C.chain_dims(lay)
+        r1 = autotune.resolve(dims, 64, kind="chain_rhs", interpret=True)
+        r2 = autotune.resolve(dims, 64, kind="chain_sddmm", interpret=True)
+        assert r1.block_n in autotune.candidate_block_ns(dims, 64, "float32")
+        assert r2.block_n in autotune.candidate_block_ns(dims, 64, "float32")
+        # distinct kinds never share entries
+        keys = list(autotune._mem_cache)
+        assert any(k.startswith("chain_rhs|") for k in keys)
+        assert any(k.startswith("chain_sddmm|") for k in keys)
+    finally:
+        autotune.set_cache_path(None)
+
+
+def test_autotune_plan_fingerprint_scopes_cache(tmp_path):
+    from repro.kernels import autotune
+
+    autotune.set_cache_path(str(tmp_path / "tune.json"))
+    try:
+        lay = _layout(128, 128, 0.875, T3, seed=2)
+        dims = C.chain_dims(lay)
+        autotune.resolve(dims, 64, kind="chain_rhs", interpret=True)
+        unscoped = set(autotune._mem_cache)
+        autotune.set_plan_fingerprint("deadbeefcafe0123")
+        assert autotune.plan_fingerprint() == "deadbeefcafe0123"
+        autotune.resolve(dims, 64, kind="chain_rhs", interpret=True)
+        scoped = set(autotune._mem_cache) - unscoped
+        assert len(scoped) == 1
+        assert next(iter(scoped)).startswith("plandeadbeefcafe0123|")
+    finally:
+        autotune.set_plan_fingerprint(None)
+        autotune.set_cache_path(None)
+
+
+def test_chain_weight_checkpoint_roundtrip(tmp_path):
+    """ChainWeight flows through CheckpointManager: values round-trip
+    bitwise, the layout aux is reconstructed from the module (never
+    persisted), and plan-fingerprint stamping still guards restores."""
+    from repro.train.checkpoint import CheckpointManager
+
+    cfg = SparsityConfig(pattern="rbgp", sparsity=0.875, min_dim=1,
+                         backend="auto", factors=T3, seed=2)
+    lin = SparseLinear(128, 128, cfg, name="x", use_bias=True)
+    w = lin.init(jax.random.PRNGKey(0))
+    plan = SparsityPlan.uniform(PatternSpec.from_config(cfg))
+
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2,
+                            plan_fingerprint=plan.fingerprint())
+    mgr.save(3, {"lin": w})
+    like = {"lin": lin.init(jax.random.PRNGKey(9))}
+    got, meta = mgr.restore(like)
+    assert meta["plan_fingerprint"] == plan.fingerprint()
+    np.testing.assert_array_equal(np.asarray(got["lin"].w_data),
+                                  np.asarray(w.w_data))
+    np.testing.assert_array_equal(np.asarray(got["lin"].b),
+                                  np.asarray(w.b))
+    assert got["lin"].layout == w.layout  # spec-equality of the aux
+    # a different plan refuses the restore
+    other = CheckpointManager(str(tmp_path / "ck"), keep=2,
+                              plan_fingerprint="0" * 16)
+    with pytest.raises(RuntimeError, match="plan"):
+        other.restore(like)
+
+
+def test_chain_pytree_jit_and_trainable_split():
+    from repro.utils import split_trainable
+
+    lay = _layout(128, 128, 0.875, T3, seed=2)
+    w = chain_weight(jax.random.PRNGKey(0), lay, bias=True)
+    leaves, treedef = jax.tree_util.tree_flatten(w)
+    assert len(leaves) == 2  # w_data + b; layout is aux
+    w2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert w2.layout == lay
+    tr, stat = split_trainable({"x": w})
+    assert tr["x"].w_data is not None and tr["x"].b is not None
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 128))
+    y = jax.jit(lambda w, x: sparse_linear(w, x))(w, x)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(sparse_linear(w, x)))
+
+
+def test_chain_storage_bytes_beats_masked():
+    from repro.sparsity import chain_storage_bytes
+
+    lay = _layout(256, 256, 0.875, T3, seed=2)
+    rep = chain_storage_bytes(lay)
+    # values at 1/8 density + tiny per-factor indices vs dense values+mask
+    assert rep["ratio"] < 0.25
+    assert rep["chain_index"] < rep["masked_mask"] / 100

@@ -167,6 +167,48 @@ def test_admission_under_memory_pressure(lm):
     assert eng.stats["peak_allocated_blocks"] <= eng.kv.allocator.n_total
 
 
+def test_plan_aware_admission_budget(lm):
+    """A sparsity plan frees weight HBM, so the admission budget grows —
+    monotonically with sparsity — while pool capacity still caps it, and
+    the math matches plan_aware_live_tokens exactly."""
+    from repro.serve import plan_aware_live_tokens
+    from repro.sparsity import model_matmul_shapes, solve_budget
+
+    model, params = lm
+    shapes = model_matmul_shapes(model.cfg)
+    plan_half = solve_budget(shapes, target_density=0.5, min_dim=64)
+    plan_quarter = solve_budget(shapes, target_density=0.25, min_dim=64)
+
+    def budget(plan):
+        eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                               max_live_tokens=24, max_request_len=24,
+                               plan=plan)
+        return eng
+
+    uniform = budget(None)
+    assert uniform.plan_live_tokens == uniform.base_live_tokens == 24
+    half = budget(plan_half)
+    quarter = budget(plan_quarter)
+    assert half.plan_live_tokens > 24
+    assert quarter.plan_live_tokens > half.plan_live_tokens
+    want = plan_aware_live_tokens(
+        24, plan=plan_half, shapes=shapes,
+        kv_bytes_per_token=half.kv_bytes_per_token(),
+        value_bytes=jnp.dtype(jnp.float32).itemsize)
+    assert half.plan_live_tokens == want
+    # the scheduler still clamps the grown budget to pool capacity
+    cap = half.kv.allocator.n_total * half.page
+    assert half.scheduler.max_live_tokens <= cap
+    # and the engine still serves correctly under the grown budget
+    workload = make_workload(WORKLOADS[0], model.cfg.vocab_size, seed=3)
+    submit_all(half, workload)
+    out = half.drain()
+    ref = run_sequential(model, params, workload,
+                         cache_len=half.gather_tokens)
+    for r in workload:
+        np.testing.assert_array_equal(out[r["rid"]], ref[r["rid"]])
+
+
 def test_submit_validation(lm):
     model, params = lm
     eng = ContinuousEngine(model, params, page_size=4, max_slots=2,

@@ -256,6 +256,53 @@ def test_budget_solver_errors():
         solve_budget({"a": (64, 64)}, target_density=0.5, min_dim=256)
 
 
+def test_budget_solver_perf_model_cost():
+    """cost_model='perf_model' weighs the greedy by modeled kernel
+    wall-clock: deterministic, hits the target ratio under the model (not
+    under bytes), and is only accepted with target_flops + a compact-
+    executor pattern."""
+    shapes = {"l0.attn.wq": (2048, 2048, 1), "l0.mlp.up": (5632, 2048, 2),
+              "l0.mlp.down": (2048, 5632, 1), "head": (512, 128, 1)}
+    p1 = solve_budget(shapes, target_flops=0.5, cost_model="perf_model")
+    p2 = solve_budget(shapes, target_flops=0.5, cost_model="perf_model")
+    assert p1.fingerprint() == p2.fingerprint()
+    p_bytes = solve_budget(shapes, target_flops=0.5)
+    # wall-clock does not shrink 1:1 with bytes, so the perf-model greedy
+    # allocates deeper sparsity than the bytes greedy at an equal target
+    assert plan_density(p1, shapes) < plan_density(p_bytes, shapes)
+    # modeled time ratio actually meets the target
+    from repro.core import design_rbgp4
+    from repro.kernels import perf_model as pm
+
+    def modeled(plan):
+        tot_s = tot_d = 0.0
+        for path, (m, k, c) in shapes.items():
+            spec = plan.resolve(path, m, k)
+            dense = pm.estimate_dense(m, k, 2048).t_total_s * c
+            tot_d += dense
+            if spec.applies_to(m, k) and spec.is_sparse:
+                tot_s += pm.estimate_rbgp4mm(
+                    design_rbgp4(m, k, spec.sparsity, seed=0), 2048
+                ).t_total_s * c
+            else:
+                tot_s += dense
+        return tot_s / tot_d
+
+    # the perf-model plan meets the modeled target; the bytes plan (same
+    # nominal target, bytes-weighted greedy) misses it — wall-clock does
+    # not shrink 1:1 with bytes
+    assert modeled(p1) <= 0.5
+    assert modeled(p_bytes) > 0.5
+    # validation
+    with pytest.raises(ValueError, match="target_flops"):
+        solve_budget(shapes, target_density=0.5, cost_model="perf_model")
+    with pytest.raises(ValueError, match="compact executors"):
+        solve_budget(shapes, target_flops=0.5, cost_model="perf_model",
+                     pattern="block")
+    with pytest.raises(ValueError, match="cost_model"):
+        solve_budget(shapes, target_flops=0.5, cost_model="wat")
+
+
 def _rand_shapes(rng, n):
     out = {}
     for i in range(n):
