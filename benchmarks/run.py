@@ -20,7 +20,7 @@ import json
 
 
 SECTIONS = ("table1", "table2", "plan", "table3", "kernels", "stacked",
-            "chain", "serve", "roofline")
+            "chain", "serve", "serve_sharded", "roofline")
 
 
 def main() -> None:
@@ -84,6 +84,11 @@ def main() -> None:
 
         print("\n# === Serving (static vs continuous batching, paged KV) ===")
         rows += serve_engine.run(print)
+    if want("serve_sharded"):
+        from . import serve_sharded
+
+        print("\n# === Sharded serving (continuous vs TP mesh vs disagg) ===")
+        rows += serve_sharded.run(print)
     if want("roofline"):
         from . import roofline
 

@@ -257,7 +257,12 @@ def _search_measured(dims, n: int, dtype: str, kind: str,
     import jax
     import jax.numpy as jnp
 
-    from . import rbgp4mm as K
+    import importlib
+
+    # NOTE: the package __init__ re-exports a *function* named rbgp4mm,
+    # shadowing the submodule under `from . import rbgp4mm` / `import ...
+    # as` (both bind the package attribute) — go through sys.modules.
+    K = importlib.import_module(f"{__package__}.rbgp4mm")
 
     if adj_o is None:
         return _search_model(dims, n, dtype, kind)
@@ -273,12 +278,12 @@ def _search_measured(dims, n: int, dtype: str, kind: str,
                 fn = jax.jit(lambda x, w, _bn=bn, _o=order: K.rbgp4mm_rhs(
                     dims, adj, x, w, block_n=_bn, grid_order=_o))
             elif kind == "chain_rhs":
-                from . import chainmm as KC
+                KC = importlib.import_module(f"{__package__}.chainmm")
 
                 fn = jax.jit(lambda x, w, _bn=bn: KC.chainmm_rhs(
                     dims, adj, x, w, block_n=_bn))
             elif kind == "chain_sddmm":
-                from . import chainmm as KC
+                KC = importlib.import_module(f"{__package__}.chainmm")
 
                 g_c = jax.random.normal(kw, (n, dims.m)).astype(dtype)
                 fn = jax.jit(lambda x, w, _bn=bn: KC.chain_sddmm_rhs(

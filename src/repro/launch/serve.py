@@ -1,12 +1,20 @@
 """Serving driver: thin CLI over the repro.serve engines.
 
-Two engines (see src/repro/serve/README.md for the tradeoffs):
+Four engines (see src/repro/serve/README.md for the tradeoffs):
 
   * ``--engine continuous`` (default): continuous batching with a paged KV
     cache — requests are admitted mid-flight, decode reads through
     per-request block tables, cache memory scales with live tokens;
   * ``--engine static``: the classic fixed-batch baseline — equal-prompt
-    groups prefill once and decode in lockstep to the longest generation.
+    groups prefill once and decode in lockstep to the longest generation;
+  * ``--engine sharded``: the continuous loop SPMD over a ``--mesh``
+    dp,tp[,ep] device mesh (weights column/row-parallel, experts EP,
+    page pools TP-sharded on heads);
+  * ``--engine disagg``: prefill and decode as separate roles on two
+    submeshes with explicit KV-page handoff.
+
+``--prefill-chunk N`` (paged engines) feeds prompts in fixed N-token
+chunks, one per step, so long prompts never stall the decode batch.
 
 Workloads: by default ``--batch`` identical requests of ``--prompt-len`` /
 ``--gen`` (the old fixed-batch behavior); ``--mixed`` switches to a
@@ -38,9 +46,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--engine", default="continuous",
-                    choices=["continuous", "static"],
-                    help="continuous batching w/ paged KV, or the "
-                         "fixed-batch baseline")
+                    choices=["static", "continuous", "sharded", "disagg"],
+                    help="fixed-batch baseline, continuous batching w/ "
+                         "paged KV, mesh-sharded continuous (--mesh), or "
+                         "prefill/decode disaggregation (--mesh splits "
+                         "the local devices between the two roles)")
+    ap.add_argument("--mesh", default="",
+                    help="dp,tp[,ep] serving mesh dims (sharded/disagg "
+                         "engines), e.g. '1,2' or '1,2,2'.  TP and EP "
+                         "share the 'model' axis.  For --engine disagg "
+                         "the local devices are split in half: first half "
+                         "prefill role, second half decode role, each a "
+                         "dp x tp x ep mesh")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: feed admitted prompts in fixed "
+                         "chunks of this many tokens, at most one chunk "
+                         "per engine step interleaved with decode "
+                         "(0: single-shot prefill)")
     ap.add_argument("--batch", type=int, default=4,
                     help="decode slots (continuous) / batch size (static)")
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -125,24 +147,54 @@ def main():
     workload = RequestStream(
         cfg.vocab_size, n_req, prompt_lens=pl, gen_lens=gl,
         n_codebooks=cfg.n_codebooks, seed=args.seed,
-        arrival_rate=args.arrival_rate if args.engine == "continuous" else 0.0,
+        arrival_rate=args.arrival_rate if args.engine != "static" else 0.0,
     ).requests()
     max_len = max(r["prompt"].shape[0] + r["max_new_tokens"]
                   for r in workload)
 
-    if args.engine == "continuous":
-        engine = make_engine(
-            "continuous", model, params, page_size=args.page_size,
-            max_slots=args.batch, max_live_tokens=args.max_live_tokens,
-            max_request_len=max_len,
+    if args.engine == "static":
+        engine = make_engine("static", model, params, batch=args.batch)
+    else:
+        eng_kw = dict(
+            page_size=args.page_size, max_slots=args.batch,
+            max_live_tokens=args.max_live_tokens, max_request_len=max_len,
+            prefill_chunk=args.prefill_chunk,
             plan=cfg.plan,  # plan-aware admission (None: uniform budget)
         )
+        if args.engine == "continuous":
+            engine = make_engine("continuous", model, params, **eng_kw)
+        else:
+            from repro.launch.mesh import make_serve_mesh
+
+            dims = [int(x) for x in args.mesh.split(",")] if args.mesh \
+                else [1, 1]
+            dims += [1] * (3 - len(dims))
+            dp, tp, ep = dims[:3]
+            if args.engine == "sharded":
+                engine = make_engine("sharded", model, params,
+                                     mesh=make_serve_mesh(dp, tp, ep),
+                                     **eng_kw)
+            else:
+                devs = jax.devices()
+                need = dp * tp * ep
+                if len(devs) < 2 * need:
+                    raise SystemExit(
+                        f"--engine disagg needs two {dp}x{tp}x{ep} role "
+                        f"meshes = {2 * need} devices; have {len(devs)}"
+                    )
+                engine = make_engine(
+                    "disagg", model, params,
+                    prefill_mesh=make_serve_mesh(dp, tp, ep,
+                                                 devices=devs[:need]),
+                    decode_mesh=make_serve_mesh(
+                        dp, tp, ep, devices=devs[need:2 * need]),
+                    **eng_kw)
+            print(f"mesh: dp={dp} tp={tp} ep={ep} over "
+                  f"{len(jax.devices())} devices (engine={args.engine})")
         if args.max_live_tokens and cfg.plan is not None:
             print(f"plan-aware admission: max_live_tokens "
                   f"{engine.base_live_tokens} -> {engine.plan_live_tokens} "
                   f"(weight residency freed by the plan)")
-    else:
-        engine = make_engine("static", model, params, batch=args.batch)
     sampling = SamplingParams(temperature=args.temperature,
                               seed=args.seed + 1)
     pending = sorted(workload, key=lambda r: r["arrival_step"])
@@ -171,11 +223,16 @@ def main():
           f"{st['decode_time_s']*1e3:.0f}ms "
           f"({n_gen/max(st['decode_time_s'], 1e-9):.0f} tok/s, "
           f"{int(st['wasted_row_steps'])} wasted row-steps)")
-    if args.engine == "continuous":
+    if args.engine != "static":
         occ = st["allocated_block_steps"] / max(st["block_steps"], 1)
         print(f"paged KV: page={args.page_size} "
               f"peak {int(st['peak_allocated_blocks'])} blocks, "
               f"mean pool occupancy {occ:.1%}")
+        if args.prefill_chunk:
+            print(f"chunked prefill: {int(st['prefill_chunks'])} chunks "
+                  f"of {args.prefill_chunk} tokens")
+        if "handoffs" in st:
+            print(f"disaggregation: {int(st['handoffs'])} KV-page handoffs")
     rid0 = min(out)
     print(f"sample continuation (req {rid0}): "
           f"{np.asarray(out[rid0]).ravel()[:8].tolist()}")

@@ -222,8 +222,12 @@ class GQAttention:
             new_cache, got, k_pos = paged_cache_update(
                 cache, {"k": k, "v": v}, positions, block_tables
             )
-            k_all = got["k"].astype(q.dtype)
-            v_all = got["v"].astype(q.dtype)
+            # pin the gathered per-request view to the pools' TP layout
+            # (kv heads over 'model'); without this XLA is free to
+            # all-gather the full gathered KV before attention, defeating
+            # the sharded-pool bandwidth win.  No-op without a mesh.
+            k_all = shard(got["k"].astype(q.dtype), "dp", None, "tp", None)
+            v_all = shard(got["v"].astype(q.dtype), "dp", None, "tp", None)
         elif cache is not None:
             index = positions[0, 0]  # decode/prefill in lockstep
             rolling = self.window > 0

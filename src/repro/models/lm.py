@@ -164,9 +164,23 @@ class LMModel:
         return self.stack.init_cache(batch, cache_len, dtype,
                                      full_length=full_length)
 
-    def init_pages(self, n_blocks: int, page_size: int, dtype=jnp.bfloat16):
-        """Paged KV pools for the serving engine (see repro.serve.cache)."""
-        return self.stack.init_pages(n_blocks, page_size, dtype)
+    def init_pages(self, n_blocks: int, page_size: int, dtype=jnp.bfloat16,
+                   *, mesh=None):
+        """Paged KV pools for the serving engine (see repro.serve.cache).
+
+        With ``mesh`` the pools are created already laid out by
+        ``repro.parallel.sharding.page_pool_specs`` (heads over 'model' for
+        TP, blocks replicated), so the sharded engines never materialize a
+        replicated copy first.
+        """
+        pools = self.stack.init_pages(n_blocks, page_size, dtype)
+        if mesh is not None:
+            from repro.parallel.sharding import page_pool_specs
+
+            pools = jax.tree_util.tree_map(
+                jax.device_put, pools, page_pool_specs(pools, mesh)
+            )
+        return pools
 
     def prefill(self, params, batch: dict, cache):
         """Run the prompt through the stack, filling the cache.
@@ -181,6 +195,37 @@ class LMModel:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         x, cache, _ = self.stack.apply(params["stack"], x, positions, caches=cache)
         x = self.norm_f.apply(params["norm_f"], x[:, -1:])
+        return self._head(params, x)[:, 0], cache
+
+    def prefill_chunk(self, params, batch: dict, cache, index, n_valid):
+        """One fixed-size prefill chunk written at offset ``index``.
+
+        The serving engines split long prompts into equal ``(B, C)`` chunks
+        so every chunk shares ONE compiled program regardless of prompt
+        length (``index`` and ``n_valid`` are traced scalars).  The final
+        chunk of a prompt is ragged: rows past ``n_valid`` are pad tokens
+        carrying position ``-1``, so the position-mask attention paths (and
+        the paged-cache scatter later) treat their cache slots as empty —
+        chunked prefill is bit-identical to single-shot prefill because the
+        masked slots contribute exact zeros to every softmax reduction.
+
+        Returns (logits at the last *valid* row ``(B, V[...])``, cache).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, C = tokens.shape[:2]
+        dtype = jnp.dtype(cfg.compute_dtype)
+        x = self._embed(params, tokens, batch.get("patch_embeds"), dtype)
+        offs = jnp.arange(C, dtype=jnp.int32)
+        row = jnp.where(offs < jnp.asarray(n_valid, jnp.int32),
+                        jnp.asarray(index, jnp.int32) + offs,
+                        jnp.int32(-1))
+        positions = jnp.broadcast_to(row, (B, C))
+        x, cache, _ = self.stack.apply(params["stack"], x, positions, caches=cache)
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(n_valid, jnp.int32) - 1, 1, axis=1
+        )
+        x = self.norm_f.apply(params["norm_f"], x)
         return self._head(params, x)[:, 0], cache
 
     def decode_step(self, params, tokens_new, cache, index):

@@ -34,6 +34,7 @@ __all__ = [
     "param_sharding_tree",
     "batch_specs",
     "cache_specs",
+    "page_pool_specs",
     "named",
     "spec_tree_to_shardings",
 ]
@@ -195,6 +196,38 @@ def cache_specs(abstract_cache: Any, mesh: Mesh, *, long_context: bool):
 
     return jax.tree_util.tree_map_with_path(
         one, abstract_cache, is_leaf=lambda x: x is None
+    )
+
+
+def page_pool_specs(abstract_pools: Any, mesh: Mesh):
+    """Shardings for the serving page pools (see repro.serve.cache).
+
+    The block dim must stay replicated — any decode row may read any
+    physical block, and block tables are host-assigned, so sharding blocks
+    would turn every gather into a cross-device shuffle.  Only the true
+    heads dim (leaves ``(n_blocks, page, H, hd)``; scanned
+    ``(T, n_blocks, page, H, hd)``) shards over 'model' (TP).  Everything
+    else — position marks, MLA compressed ``(n_blocks, page, r)`` leaves —
+    replicates, deliberately conservative: sharding a contraction dim would
+    insert an extra psum into the decode attention and break the per-row
+    bit-parity argument the serve tests rely on.
+    """
+    m_size = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        name = path_str(path)
+        off = 1 if name.startswith("scan") else 0
+        spec = [None] * len(leaf.shape)
+        hd = 2 + off
+        if (not name.endswith("pos") and len(leaf.shape) == 4 + off
+                and leaf.shape[hd] >= m_size and leaf.shape[hd] % m_size == 0):
+            spec[hd] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(
+        one, abstract_pools, is_leaf=lambda x: x is None
     )
 
 

@@ -1,5 +1,7 @@
 """Serving subsystem: continuous batching + paged KV cache (see README.md)."""
-from .cache import PageAllocator, PagedKVCache
+from .cache import PageAllocator, PagedKVCache, pack_prefill_pages
+from .chunked import ChunkedPrefillState, chunk_cache_len, trim_cache
+from .distributed import DisaggregatedEngine, ShardedContinuousEngine
 from .engine import (
     ContinuousEngine,
     Request,
@@ -12,9 +14,11 @@ from .sampling import SamplingParams, greedy, sample_token
 from .scheduler import FCFSScheduler, plan_aware_live_tokens
 
 __all__ = [
-    "PageAllocator", "PagedKVCache", "FCFSScheduler",
-    "plan_aware_live_tokens",
+    "PageAllocator", "PagedKVCache", "pack_prefill_pages",
+    "ChunkedPrefillState", "chunk_cache_len", "trim_cache",
+    "FCFSScheduler", "plan_aware_live_tokens",
     "SamplingParams", "greedy", "sample_token",
     "Request", "ServingEngine", "ContinuousEngine", "StaticEngine",
+    "ShardedContinuousEngine", "DisaggregatedEngine",
     "make_engine", "run_sequential",
 ]

@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PageAllocator", "PagedKVCache", "blocks_for_tokens"]
+__all__ = ["PageAllocator", "PagedKVCache", "blocks_for_tokens",
+           "pack_prefill_pages"]
 
 
 def blocks_for_tokens(n_tokens: int, page_size: int) -> int:
@@ -107,17 +108,66 @@ class PageAllocator:
             self._free.append(b)
 
 
+def pack_prefill_pages(cache, n_blocks: int, page_size: int):
+    """Reshape a batch-1 contiguous prefill cache into per-request pages.
+
+    ``cache`` leaves are (1, L, ...) (scanned: (T, 1, L, ...)); the result
+    tree has leaves (n_blocks, page, ...) / (T, n_blocks, page, ...) — the
+    exact shape a block-row scatter (or a cross-role ``device_put`` handoff
+    in the disaggregated engine) consumes.  Slots past L are padded with
+    position -1 / data 0, i.e. marked empty for the position-mask paths.
+    """
+    tgt = n_blocks * page_size
+
+    def pack(leaf, scan: bool):
+        # (T, 1, L, ...) -> (T, nb, P, ...)  |  (1, L, ...) -> (nb, P, ...)
+        leaf = leaf[:, 0] if scan else leaf[0]
+        ax = 1 if scan else 0
+        L = leaf.shape[ax]
+        if L > tgt:
+            raise ValueError(
+                f"prefill cache length {L} > {n_blocks} blocks "
+                f"x page {page_size}")
+        if L < tgt:
+            fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
+            pad = [(0, 0)] * leaf.ndim
+            pad[ax] = (0, tgt - L)
+            leaf = jnp.pad(leaf, pad, constant_values=fill)
+        shape = leaf.shape[:ax] + (n_blocks, page_size) + leaf.shape[ax + 1:]
+        return leaf.reshape(shape)
+
+    tm = jax.tree_util.tree_map
+    return {
+        "head": [tm(lambda l: pack(l, False), pl) for pl in cache["head"]],
+        "scan": tm(lambda l: pack(l, True), cache["scan"]),
+        "tail": [tm(lambda l: pack(l, False), pl) for pl in cache["tail"]],
+    }
+
+
 class PagedKVCache:
-    """Device page pools + allocator for one model's serving caches."""
+    """Device page pools + allocator for one model's serving caches.
+
+    With ``mesh`` the pools are laid out by
+    :func:`repro.parallel.sharding.page_pool_specs`: the block dim stays
+    replicated (any decode row may read any block), head/channel dims shard
+    over 'model' (TP), and ``self.shardings`` holds the NamedSharding tree
+    so the engines can pin jit outputs / handoff transfers to it.
+    """
 
     def __init__(self, model, n_blocks: int, page_size: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, *, mesh=None):
         if page_size < 1:
             raise ValueError(f"page_size={page_size}")
         self.model = model
         self.page = page_size
         self.dtype = dtype
-        self.pools = model.init_pages(n_blocks, page_size, dtype)
+        self.mesh = mesh
+        self.pools = model.init_pages(n_blocks, page_size, dtype, mesh=mesh)
+        self.shardings = None
+        if mesh is not None:
+            from repro.parallel.sharding import page_pool_specs
+
+            self.shardings = page_pool_specs(self.pools, mesh)
         self.allocator = PageAllocator(n_blocks)
 
     # -- sizing ----------------------------------------------------------------
@@ -150,34 +200,27 @@ class PagedKVCache:
         scattering afterwards keeps the paged engine bit-identical to the
         sequential path on the prompt portion by construction.
         """
-        nb = len(blocks)
-        tgt = nb * self.page
+        self.write_pages(pack_prefill_pages(cache, len(blocks), self.page),
+                         blocks)
+
+    def write_pages(self, paged, blocks: list[int]) -> None:
+        """Scatter pre-paged per-request leaves (``pack_prefill_pages``
+        shapes, possibly ``device_put`` from another role's mesh — the
+        disaggregation handoff) into ``blocks``."""
         idx = jnp.asarray(blocks, jnp.int32)
 
         def scatter(pool, leaf, scan: bool):
-            # (T, 1, L, ...) -> (T, nb, P, ...)  |  (1, L, ...) -> (nb, P, ...)
-            leaf = leaf[:, 0] if scan else leaf[0]
-            ax = 1 if scan else 0
-            L = leaf.shape[ax]
-            if L > tgt:
-                raise ValueError(f"prefill cache length {L} > {nb} blocks")
-            if L < tgt:
-                fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
-                pad = [(0, 0)] * leaf.ndim
-                pad[ax] = (0, tgt - L)
-                leaf = jnp.pad(leaf, pad, constant_values=fill)
-            shape = leaf.shape[:ax] + (nb, self.page) + leaf.shape[ax + 1:]
-            leaf = leaf.reshape(shape).astype(pool.dtype)
+            leaf = leaf.astype(pool.dtype)
             return pool.at[:, idx].set(leaf) if scan else pool.at[idx].set(leaf)
 
         tm = jax.tree_util.tree_map
         self.pools = {
             "head": [tm(lambda p, c: scatter(p, c, False), pl, cl)
-                     for pl, cl in zip(self.pools["head"], cache["head"])],
+                     for pl, cl in zip(self.pools["head"], paged["head"])],
             "scan": tm(lambda p, c: scatter(p, c, True),
-                       self.pools["scan"], cache["scan"]),
+                       self.pools["scan"], paged["scan"]),
             "tail": [tm(lambda p, c: scatter(p, c, False), pl, cl)
-                     for pl, cl in zip(self.pools["tail"], cache["tail"])],
+                     for pl, cl in zip(self.pools["tail"], paged["tail"])],
         }
 
     # -- recycle -------------------------------------------------------------------

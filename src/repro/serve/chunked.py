@@ -1,0 +1,119 @@
+"""Chunked prefill: fixed-size prompt chunks interleaved with decode.
+
+A long prompt prefilled in one shot monopolizes an engine step: every live
+decode row stalls for the full O(S^2) prefill.  Chunked prefill instead
+splits each admitted prompt into fixed ``chunk``-token pieces and feeds ONE
+piece per engine step, so decode latency is bounded by a single chunk's
+work no matter how long the prompt is (the step-trace test asserts exactly
+that).  Because every chunk has the same static shape ``(1, chunk)``, all
+prompts of all lengths share one compiled ``model.prefill_chunk`` program —
+no per-request recompiles.
+
+Bit-exactness is preserved: chunks run through the *contiguous* cache path
+(``LMModel.prefill_chunk``) writing into a persistent full-length temp
+cache; the final chunk's ragged tail carries position ``-1`` pads, which
+every position-masked softmax treats as exact-zero contributions.  After
+the last chunk the temp cache is trimmed to the request's block span and
+scattered into the page pools exactly like single-shot prefill.
+
+Admission accounting is unchanged: the scheduler reserves the request's
+full ``prompt + max_new`` tokens (and worst-case blocks) at admission, so
+in-flight chunk tokens are always inside the ``plan_aware_live_tokens``
+budget by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ChunkedPrefillState", "chunk_cache_len", "trim_cache"]
+
+
+def chunk_cache_len(max_request_len: int, page_size: int, chunk: int) -> int:
+    """Length of the shared-shape temp prefill cache.
+
+    Must cover (a) the widest block span any request can hold
+    (``blocks_for(max_request_len) * page`` — the paged scatter target) and
+    (b) the last chunk's write window (``ceil(max_len / chunk) * chunk`` —
+    a dynamic-update-slice whose start would otherwise clamp and corrupt
+    earlier slots).  One length for every request = one compile.
+    """
+    blocks = -(-max_request_len // page_size)
+    return max(blocks * page_size, -(-max_request_len // chunk) * chunk)
+
+
+def trim_cache(cache: Any, n: int) -> Any:
+    """Slice a contiguous prefill cache to its first ``n`` slots.
+
+    ``cache`` is the engine temp-cache tree ({"head": [...], "scan": {...},
+    "tail": [...]}; leaves (1, L, ...), scanned leaves (T, 1, L, ...)).
+    Slots past the prompt hold position ``-1`` (ragged-chunk pads / never
+    written), so trimming them cannot drop live data.
+    """
+
+    def cut(leaf, scan: bool):
+        ax = 2 if scan else 1
+        if leaf.shape[ax] <= n:
+            return leaf
+        return jax.lax.slice_in_dim(leaf, 0, n, axis=ax)
+
+    tm = jax.tree_util.tree_map
+    return {
+        "head": [tm(lambda l: cut(l, False), pl) for pl in cache["head"]],
+        "scan": tm(lambda l: cut(l, True), cache["scan"]),
+        "tail": [tm(lambda l: cut(l, False), pl) for pl in cache["tail"]],
+    }
+
+
+@dataclasses.dataclass(eq=False)
+class ChunkedPrefillState:
+    """Progress of one request's chunked prefill (FCFS-processed)."""
+
+    req: Any                       # serve.engine.Request
+    cache: Any                     # persistent contiguous temp cache
+    chunk: int
+    pos: int = 0                   # tokens already fed
+    logits: Optional[np.ndarray] = None   # last-valid-row logits, final chunk
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= self.req.prompt_len
+
+    def next_chunk(self) -> tuple[np.ndarray, int, int]:
+        """(tokens (1, chunk[, n_cb]), start index, n_valid) for the next
+        chunk; the ragged tail of the final chunk is zero-padded (those
+        rows are written with position -1 and masked everywhere)."""
+        S = self.req.prompt_len
+        start = self.pos
+        n_valid = min(self.chunk, S - start)
+        piece = self.req.prompt[start:start + n_valid]
+        if n_valid < self.chunk:
+            pad = np.zeros((self.chunk - n_valid,) + piece.shape[1:],
+                           piece.dtype)
+            piece = np.concatenate([piece, pad], axis=0)
+        return piece[None], start, n_valid
+
+    def advance(self, n_valid: int, cache: Any,
+                logits: Optional[np.ndarray]) -> None:
+        self.pos += n_valid
+        self.cache = cache
+        if logits is not None:
+            self.logits = logits
+
+
+def run_one_chunk(state: ChunkedPrefillState, params, chunk_fn) -> int:
+    """Feed one chunk of ``state`` through ``chunk_fn`` (a jitted
+    ``model.prefill_chunk``).  Returns the number of prompt tokens fed."""
+    tokens, start, n_valid = state.next_chunk()
+    logits, cache = chunk_fn(
+        params, {"tokens": jnp.asarray(tokens)}, state.cache,
+        jnp.int32(start), jnp.int32(n_valid),
+    )
+    will_finish = start + n_valid >= state.req.prompt_len
+    state.advance(n_valid, cache,
+                  np.asarray(logits) if will_finish else None)
+    return n_valid

@@ -36,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cache import PagedKVCache, blocks_for_tokens
+from .cache import PagedKVCache, blocks_for_tokens, pack_prefill_pages
+from .chunked import ChunkedPrefillState, chunk_cache_len, run_one_chunk, \
+    trim_cache
 from .sampling import SamplingParams, sample_token
 from .scheduler import FCFSScheduler
 
@@ -161,6 +163,13 @@ class ContinuousEngine(ServingEngine):
                       running set; 0 = bounded only by pool capacity.
     max_request_len:  longest admissible prompt + max_new (sets the block-
                       table width, a static shape of the decode step).
+    prefill_chunk:    0 = single-shot prefill (reference path).  > 0 =
+                      chunked prefill: admitted prompts are fed in fixed
+                      ``prefill_chunk``-token pieces, at most ONE piece per
+                      engine step, interleaved with the batched decode (see
+                      repro.serve.chunked) — decode latency is bounded by
+                      one chunk's work regardless of prompt length, and all
+                      prompt lengths share one compiled chunk program.
     plan:             optional :class:`repro.sparsity.SparsityPlan` of the
                       served weights.  With a non-zero ``max_live_tokens``
                       the admission budget is grown by the weight HBM the
@@ -175,6 +184,7 @@ class ContinuousEngine(ServingEngine):
     def __init__(self, model, params, *, page_size: int = 8,
                  max_slots: int = 8, n_blocks: int = 0,
                  max_live_tokens: int = 0, max_request_len: int = 0,
+                 prefill_chunk: int = 0,
                  cache_dtype=jnp.float32, plan=None):
         super().__init__(model, params, cache_dtype=cache_dtype)
         self.page = page_size
@@ -183,7 +193,14 @@ class ContinuousEngine(ServingEngine):
         self.max_blocks = blocks_for_tokens(self.max_request_len, page_size)
         if n_blocks <= 0:
             n_blocks = 1 + max_slots * self.max_blocks
-        self.kv = PagedKVCache(model, n_blocks, page_size, cache_dtype)
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk > 0:
+            self.chunk_cache = chunk_cache_len(
+                self.max_request_len, page_size, prefill_chunk
+            )
+        self._prefilling: dict[int, ChunkedPrefillState] = {}
+        self.step_trace: list[dict] = []
+        self.kv = self._make_kv(n_blocks)
         self.base_live_tokens = max_live_tokens
         if plan is not None and max_live_tokens > 0:
             from repro.sparsity import model_matmul_shapes
@@ -209,10 +226,26 @@ class ContinuousEngine(ServingEngine):
             max_live_tokens=max_live_tokens,
             n_blocks_capacity=self.kv.allocator.n_total,
         )
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step_paged, donate_argnums=(2,))
+        self.prefill_params = self.params
+        self._jit_fns()
         self.stats.update(block_steps=0, allocated_block_steps=0,
-                          live_token_steps=0, peak_allocated_blocks=0)
+                          live_token_steps=0, peak_allocated_blocks=0,
+                          prefill_chunks=0, decode_row_steps=0)
+
+    # -- hooks the sharded engines override ------------------------------------------
+    def _make_kv(self, n_blocks: int) -> PagedKVCache:
+        return PagedKVCache(self.model, n_blocks, self.page, self.cache_dtype)
+
+    def _jit_fns(self) -> None:
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step_paged,
+                               donate_argnums=(2,))
+        self._chunk = jax.jit(self.model.prefill_chunk, donate_argnums=(2,))
+
+    def _handoff(self, paged):
+        """Identity in the single-role engines; the disaggregated engine
+        overrides this with the cross-mesh ``device_put`` KV-page handoff."""
+        return paged
 
     @property
     def gather_tokens(self) -> int:
@@ -242,11 +275,20 @@ class ContinuousEngine(ServingEngine):
     def step(self) -> list[Request]:
         """Admit + prefill new requests, then one batched decode step."""
         finished: list[Request] = []
+        admitted = 0
         for req in self.scheduler.admit():
-            self._prefill_request(req)
-            if req.done:
-                self._finish(req, finished)
-        self._decode_batch(finished)
+            admitted += 1
+            if self.prefill_chunk > 0:
+                self._begin_chunked(req)
+            else:
+                self._prefill_request(req)
+                if req.done:
+                    self._finish(req, finished)
+        chunks = self._run_prefill_chunk(finished)
+        decoded = self._decode_batch(finished)
+        self.step_trace.append({"admitted": admitted,
+                                "prefill_chunks": chunks,
+                                "decode_rows": decoded})
         self.stats["steps"] += 1
         na = self.kv.allocator.n_allocated
         self.stats["allocated_block_steps"] += na
@@ -267,19 +309,79 @@ class ContinuousEngine(ServingEngine):
                                       full_length=True)
         t0 = time.perf_counter()
         logits, cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(req.prompt[None])}, cache
+            self.prefill_params, {"tokens": jnp.asarray(req.prompt[None])},
+            cache
         )
         logits = np.asarray(logits)
         self.stats["prefill_time_s"] += time.perf_counter() - t0
-        self.kv.write_prefill(cache, req.blocks)
+        self.kv.write_pages(
+            self._handoff(
+                pack_prefill_pages(cache, len(req.blocks), self.page)
+            ),
+            req.blocks,
+        )
         self._sample(req, logits[0])
         self.stats["prefill_calls"] += 1
         self.stats["prompt_tokens"] += S
 
-    def _decode_batch(self, finished: list[Request]) -> None:
-        active = [r for r in self.scheduler.running.values() if not r.done]
+    # -- chunked prefill ---------------------------------------------------------------
+    def _begin_chunked(self, req: Request) -> None:
+        """Allocate the request's prompt blocks and its temp prefill cache.
+
+        The temp cache has the ONE shared ``chunk_cache`` length for every
+        request, so all prompts reuse a single compiled chunk program.
+        """
+        req.blocks = self.kv.allocator.alloc(
+            self.kv.blocks_for(req.prompt_len)
+        )
+        cache = self.model.init_cache(1, self.chunk_cache, self.cache_dtype,
+                                      full_length=True)
+        self._prefilling[req.rid] = ChunkedPrefillState(
+            req=req, cache=cache, chunk=self.prefill_chunk
+        )
+
+    def _run_prefill_chunk(self, finished: list[Request]) -> int:
+        """Feed at most ONE chunk (of the oldest in-flight prefill) per
+        step — the bound the step-trace test asserts.  On the final chunk,
+        trim the temp cache to the request's block span, scatter it into
+        the page pools, and sample the first token from the chunk logits.
+        """
+        if not self._prefilling:
+            return 0
+        rid = next(iter(self._prefilling))   # dict preserves FCFS order
+        state = self._prefilling[rid]
+        t0 = time.perf_counter()
+        fed = run_one_chunk(state, self.prefill_params, self._chunk)
+        self.stats["prefill_time_s"] += time.perf_counter() - t0
+        self.stats["prefill_chunks"] += 1
+        self.stats["prompt_tokens"] += fed
+        if state.done:
+            del self._prefilling[rid]
+            req = state.req
+            nb = len(req.blocks)
+            self.kv.write_pages(
+                self._handoff(pack_prefill_pages(
+                    trim_cache(state.cache, nb * self.page), nb, self.page
+                )),
+                req.blocks,
+            )
+            self._sample(req, state.logits[0])
+            self.stats["prefill_calls"] += 1
+            if req.done:
+                self._finish(req, finished)
+        return 1
+
+    def _decode_batch(self, finished: list[Request]) -> int:
+        # sorted by rid: deterministic row layout whatever the admission
+        # interleaving was (cross-role reproducibility for disaggregation);
+        # rows still mid-prefill have no sampled token yet and are skipped
+        active = sorted(
+            (r for r in self.scheduler.running.values()
+             if not r.done and r.rid not in self._prefilling),
+            key=lambda r: r.rid,
+        )
         if not active:
-            return
+            return 0
         for r in active:
             need = self.kv.blocks_for(r.input_pos + 1)
             if need > len(r.blocks):
@@ -302,10 +404,12 @@ class ContinuousEngine(ServingEngine):
         logits = np.asarray(logits)
         self.stats["decode_time_s"] += time.perf_counter() - t0
         self.stats["decode_steps"] += 1
+        self.stats["decode_row_steps"] += len(active)
         for r in active:
             self._sample(r, logits[r.slot])
             if r.done:
                 self._finish(r, finished)
+        return len(active)
 
     def _finish(self, req: Request, finished: list[Request]) -> None:
         """Evict: reset + free every block the request held."""
@@ -435,4 +539,12 @@ def make_engine(kind: str, model, params, **kw) -> ServingEngine:
         return ContinuousEngine(model, params, **kw)
     if kind == "static":
         return StaticEngine(model, params, **kw)
-    raise ValueError(f"unknown engine kind {kind!r}; have continuous|static")
+    if kind in ("sharded", "disagg"):
+        from .distributed import DisaggregatedEngine, ShardedContinuousEngine
+
+        cls = ShardedContinuousEngine if kind == "sharded" \
+            else DisaggregatedEngine
+        return cls(model, params, **kw)
+    raise ValueError(
+        f"unknown engine kind {kind!r}; have continuous|static|sharded|disagg"
+    )

@@ -107,7 +107,8 @@ class FCFSScheduler:
         return not self.waiting and not self.running
 
     # -- queue ---------------------------------------------------------------------
-    def submit(self, req) -> None:
+    def validate(self, req) -> None:
+        """Reject requests that could never be admitted (budget / pool)."""
         total = req.prompt_len + req.max_new_tokens
         if total > self.max_live_tokens:
             raise ValueError(
@@ -120,7 +121,25 @@ class FCFSScheduler:
                 f"the pool has {self.capacity_blocks}; it can never be "
                 f"admitted"
             )
-        self.waiting.append(req)
+
+    def submit(self, req) -> None:
+        self.validate(req)
+        # deterministic FCFS even when callers interleave submissions from
+        # several producers within one arrival tick: the queue is kept
+        # sorted by (arrival_step, rid), so admission order — and with it
+        # slot assignment, decode-row layout, and eventual eviction order —
+        # depends only on the request set, not on submission interleaving.
+        # Required for cross-role reproducibility in the disaggregated
+        # engine, where prefill and decode roles each see the stream.
+        key = (getattr(req, "arrival_step", 0), getattr(req, "rid", 0))
+        i = len(self.waiting)
+        while i > 0:
+            prev = self.waiting[i - 1]
+            if (getattr(prev, "arrival_step", 0),
+                    getattr(prev, "rid", 0)) <= key:
+                break
+            i -= 1
+        self.waiting.insert(i, req)
 
     def _fits(self, req) -> bool:
         total = req.prompt_len + req.max_new_tokens

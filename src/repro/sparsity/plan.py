@@ -487,7 +487,7 @@ def solve_budget(
     target_density: Optional[float] = None,
     target_flops: Optional[float] = None,
     pattern: str = "rbgp4",
-    backend: str = "auto",
+    backend: Union[str, dict, Callable[[str], str]] = "auto",
     factors: Optional[tuple] = None,
     block: tuple[int, int] = (4, 4),
     min_dim: int = 256,
@@ -538,6 +538,23 @@ def solve_budget(
     are always coupled into one group (before ``group`` applies): stacked
     expert storage needs one spec for both projections, so the solver
     never splits them.
+
+    ``backend`` routes execution per layer:
+
+      * a ``str`` — every emitted rule carries it (the old behavior);
+      * an ordered ``dict`` of ``{path-regex: backend}`` — first
+        ``re.search`` match wins, unmatched paths fall back to
+        ``"auto"``.  E.g. ``{r"attn\\.": "pallas", r"(gate|up|down)":
+        "xla_masked"}`` routes attention projections to the fused kernel
+        while small MLPs stay on masked XLA;
+      * a callable ``path -> backend`` for arbitrary routing.
+
+    Backends are resolved on the *coupled* path (``….experts.in/out`` →
+    ``….experts``) so a StackedExperts' storage kind follows its own rule
+    rather than the global default, and rules are emitted per
+    ``(steps, backend)`` bucket — the plan fingerprint still hashes
+    storage kinds, not backend names, so routing between compatible
+    backends never invalidates checkpoints.
     """
     if (target_density is None) == (target_flops is None):
         raise ValueError("pass exactly one of target_density / target_flops")
@@ -558,7 +575,18 @@ def solve_budget(
                 f"(patterns 'rbgp4'/'rbgp'); pattern {pattern!r} runs "
                 f"masked emulation at dense speed")
     shapes = _norm_shapes(shapes)
-    base = PatternSpec(pattern=pattern, sparsity=0.5, backend=backend,
+
+    def backend_for(path: str) -> str:
+        if callable(backend):
+            return backend(path)
+        if isinstance(backend, dict):
+            for pat, b in backend.items():
+                if re.search(pat, path):
+                    return b
+            return "auto"
+        return backend
+
+    base = PatternSpec(pattern=pattern, sparsity=0.5, backend="auto",
                        block=tuple(block), seed=seed, min_dim=min_dim,
                        factors=factors)
     # stacked expert weights only support the rbgp4 pattern (one
@@ -653,20 +681,24 @@ def solve_budget(
                 f"cost_model={cost_model!r})")
         groups[best_key]["steps"] += 1
 
-    # emit one rule per sparsity level (densest-matched paths first is
-    # irrelevant — path regexes are disjoint full matches)
-    by_steps: dict[int, list[str]] = {}
+    # emit one rule per (sparsity level, backend) bucket (rule order among
+    # buckets is irrelevant — path regexes are disjoint full matches); the
+    # backend is resolved on the coupled path so both expert sides agree
+    by_bucket: dict[tuple[int, str], list[str]] = {}
     for gkey in order:
         g = groups[gkey]
         if g["steps"] > 0:
-            by_steps.setdefault(g["steps"], []).extend(g["paths"])
+            for p in g["paths"]:
+                b = backend_for(experts_re.sub(".experts", p))
+                by_bucket.setdefault((g["steps"], b), []).append(p)
     rules = []
-    for s in sorted(by_steps, reverse=True):
-        paths = sorted(by_steps[s])
-        spec = dataclasses.replace(base, sparsity=1.0 - 2.0 ** (-s))
+    for s, b in sorted(by_bucket, key=lambda t: (-t[0], t[1])):
+        paths = sorted(by_bucket[(s, b)])
+        spec = dataclasses.replace(base, sparsity=1.0 - 2.0 ** (-s),
+                                   backend=b)
         rules.append(PlanRule(
             match="|".join(re.escape(p) for p in paths), spec=spec,
-            note=f"budget: {s} pow-2 steps (density 2^-{s})",
+            note=f"budget: {s} pow-2 steps (density 2^-{s}), backend {b}",
         ))
     rules.append(PlanRule(".*", DENSE, note="budget: keep dense"))
     return SparsityPlan(rules=tuple(rules))

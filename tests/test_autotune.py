@@ -144,3 +144,181 @@ def test_vmem_bound_prunes_huge_tiles():
                    * dims.chunk_cols * 2
                    + 2 * bn * dims.tile_m * 2)
         assert working <= autotune.VMEM_BUDGET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# measured mode (REPRO_AUTOTUNE_MODE=measure): gate, timer, cache scoping
+# ---------------------------------------------------------------------------
+#
+# The real measured search only fires on TPU; these tests force the gate
+# (platform="tpu"), stub the kernel entry points so the candidates build on
+# CPU, and drive time.perf_counter with a deterministic clock whose per-call
+# advance is set by the stub at trace time — so "fastest candidate" is
+# whatever the test declares, not wall time.
+
+
+@pytest.fixture
+def fake_timer(monkeypatch):
+    """Deterministic perf_counter: each call advances by ``cost['cur']``.
+
+    The kernel stubs set ``cost['cur']`` when they are traced (once per
+    candidate, during the warmup call), so every timed rep of that
+    candidate measures exactly that cost.
+    """
+    import time
+
+    cost = {"cur": 1.0}
+    clock = {"t": 0.0}
+
+    def fake_clock():
+        clock["t"] += cost["cur"]
+        return clock["t"]
+
+    monkeypatch.setattr(time, "perf_counter", fake_clock)
+    return cost
+
+
+def test_measured_mode_rhs_stubbed_timer(monkeypatch, fake_timer):
+    """The TPU+env gate runs the timed search; the declared-fastest
+    (block_n, grid_order) wins with source "measured" and persists under
+    the tpu platform key."""
+    import importlib
+
+    # the package __init__ shadows the submodule with a function of the
+    # same name; import_module reaches the real module (as autotune does)
+    K = importlib.import_module("repro.kernels.rbgp4mm")
+
+    lay = make_dims(seed=6)
+    dims = KernelDims.from_layout(lay)
+    seen = []
+
+    def stub_rhs(d, adj, x, w, block_n=None, grid_order="nm", **kw):
+        seen.append((block_n, grid_order))
+        fake_timer["cur"] = 1.0 if (block_n, grid_order) == (256, "mn") \
+            else 5.0
+        return jnp.zeros((x.shape[0], d.m), x.dtype)
+
+    monkeypatch.setattr(K, "rbgp4mm_rhs", stub_rhs)
+    monkeypatch.setenv("REPRO_AUTOTUNE_MODE", "measure")
+
+    res = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                            platform="tpu", adj_o=np.asarray(lay.adj_o))
+    assert res.source == "measured"
+    assert (res.block_n, res.grid_order) == (256, "mn")
+    # both grid orders were explored for every feasible block_n
+    cands = autotune.candidate_block_ns(dims, 512, "float32")
+    assert sorted(set(seen)) == sorted(
+        {(bn, o) for bn in cands for o in autotune.GRID_ORDERS})
+    # persisted under the tpu key; survives a "new process"
+    disk = json.load(open(autotune.cache_path()))
+    (key,) = [k for k in disk if "|tpu|" in k]
+    assert key.startswith("rhs|tpu|float32|")
+    assert disk[key]["source"] == "measured"
+    autotune.clear_memory_cache()
+    seen.clear()
+    r2 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                           platform="tpu", adj_o=np.asarray(lay.adj_o))
+    assert r2 == res and not seen  # disk hit, no re-measure
+
+
+def test_measured_mode_chain_rhs(monkeypatch, fake_timer):
+    """chain_rhs measured search goes through chainmm_rhs (single grid
+    order) and keys the cache under the chain kind."""
+    from repro.core import ChainLayout, design_rbgp
+    from repro.kernels import chainmm as C
+
+    lay = ChainLayout(design_rbgp(
+        128, 128, 0.875, factors=(("ramanujan", 0, 0, 0.5),) * 3, seed=7))
+    dims = C.chain_dims(lay)
+    seen = []
+
+    def stub_chain(d, adj, x, w, block_n=None, **kw):
+        seen.append(block_n)
+        fake_timer["cur"] = 1.0 if block_n == seen[0] else 5.0
+        return jnp.zeros((x.shape[0], d.m), x.dtype)
+
+    monkeypatch.setattr(C, "chainmm_rhs", stub_chain)
+    monkeypatch.setenv("REPRO_AUTOTUNE_MODE", "measure")
+
+    res = autotune.autotune(dims, 256, dtype="float32", kind="chain_rhs",
+                            platform="tpu", adj_o=np.asarray(lay.adjs[0]))
+    assert res.source == "measured"
+    assert res.grid_order == "nm"  # chain kinds never explore "mn"
+    assert res.block_n == seen[0]
+    disk = json.load(open(autotune.cache_path()))
+    assert any(k.startswith("chain_rhs|tpu|") for k in disk)
+
+
+def test_measured_mode_requires_adjacency(monkeypatch):
+    """No concrete adj_o -> the measured search cannot build kernels and
+    falls back to the analytic model (still cached)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_MODE", "measure")
+    lay = make_dims(seed=8)
+    dims = KernelDims.from_layout(lay)
+    res = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                            platform="tpu", adj_o=None)
+    assert res.source == "model"
+
+
+def test_measured_mode_gate_off_without_env(monkeypatch):
+    """platform=tpu alone is not enough: without REPRO_AUTOTUNE_MODE=
+    measure the model search runs (kernel stubs must never be hit)."""
+    import importlib
+
+    K = importlib.import_module("repro.kernels.rbgp4mm")
+
+    monkeypatch.delenv("REPRO_AUTOTUNE_MODE", raising=False)
+
+    def boom(*a, **kw):
+        raise AssertionError("measured search ran without the env gate")
+
+    monkeypatch.setattr(K, "rbgp4mm_rhs", boom)
+    lay = make_dims(seed=9)
+    dims = KernelDims.from_layout(lay)
+    res = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                            platform="tpu", adj_o=np.asarray(lay.adj_o))
+    assert res.source == "model"
+
+
+def test_plan_fingerprint_scopes_measured_entries(monkeypatch, fake_timer):
+    """Two plans resolving the same (dims, dtype, platform) keep separate
+    measured entries: the key gains a plan{fp}| prefix while the
+    fingerprint is set, and the unscoped entry is untouched."""
+    import importlib
+
+    K = importlib.import_module("repro.kernels.rbgp4mm")
+
+    lay = make_dims(seed=10)
+    dims = KernelDims.from_layout(lay)
+    searches = []
+
+    def stub_rhs(d, adj, x, w, block_n=None, grid_order="nm", **kw):
+        searches.append((block_n, grid_order))
+        return jnp.zeros((x.shape[0], d.m), x.dtype)
+
+    monkeypatch.setattr(K, "rbgp4mm_rhs", stub_rhs)
+    monkeypatch.setenv("REPRO_AUTOTUNE_MODE", "measure")
+    adj = np.asarray(lay.adj_o)
+
+    try:
+        r_plain = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                                    platform="tpu", adj_o=adj)
+        n_plain = len(searches)
+        assert n_plain > 0
+        autotune.set_plan_fingerprint("fp123")
+        r_fp = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                                 platform="tpu", adj_o=adj)
+        # scoped key is distinct: the search ran again, not a cache hit
+        assert len(searches) == 2 * n_plain
+        disk = json.load(open(autotune.cache_path()))
+        keys = sorted(disk)
+        assert any(k.startswith("planfp123|rhs|tpu|") for k in keys)
+        assert any(k.startswith("rhs|tpu|") for k in keys)
+        # within the scope, the entry is a stable hit across "processes"
+        autotune.clear_memory_cache()
+        r_fp2 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                                  platform="tpu", adj_o=adj)
+        assert r_fp2 == r_fp and len(searches) == 2 * n_plain
+        assert r_plain.source == r_fp.source == "measured"
+    finally:
+        autotune.set_plan_fingerprint(None)

@@ -37,6 +37,16 @@ def test_serve_parser_has_engine_knobs():
     assert ap.get_default("engine") == "continuous"
     assert ap.get_default("page_size") == 8
     assert ap.get_default("max_live_tokens") == 0
+    # sharded-serving knobs (PR 6): engine choices + mesh/chunk defaults
+    engine_action = next(a for a in ap._actions if a.dest == "engine")
+    assert engine_action.choices == ["static", "continuous", "sharded",
+                                     "disagg"]
+    assert ap.get_default("mesh") == ""
+    assert ap.get_default("prefill_chunk") == 0
+    args = ap.parse_args(["--engine", "disagg", "--mesh", "1,2,2",
+                          "--prefill-chunk", "8"])
+    assert (args.engine, args.mesh, args.prefill_chunk) == \
+        ("disagg", "1,2,2", 8)
 
 
 @pytest.mark.slow

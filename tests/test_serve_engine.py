@@ -252,3 +252,81 @@ def test_page_allocator_basics():
     assert a.n_allocated == 0 and a.n_free == a.n_total
     with pytest.raises(ValueError):
         PageAllocator(1)   # no room for the reserved trash block
+
+
+# -- chunked prefill ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [5, 8])
+def test_greedy_parity_chunked_prefill(lm, chunk):
+    """Chunked prefill (fixed chunks, at most one per step, interleaved
+    with decode) is bit-identical to single-shot prefill — padding rows
+    carry position -1 and contribute exact-zero attention summands."""
+    model, params = lm
+    workload = make_workload(WORKLOADS[1], model.cfg.vocab_size, seed=11)
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=3,
+                           max_request_len=40, prefill_chunk=chunk)
+    submit_all(eng, workload)
+    out = eng.drain()
+    ref = run_sequential(model, params, workload,
+                         cache_len=eng.gather_tokens)
+    for r in workload:
+        np.testing.assert_array_equal(
+            out[r["rid"]], ref[r["rid"]],
+            err_msg=f"chunk={chunk} request {r['rid']}")
+    # decode is never stalled by more than one prefill chunk per step
+    assert eng.step_trace
+    assert all(t["prefill_chunks"] <= 1 for t in eng.step_trace)
+    n_chunks = sum(t["prefill_chunks"] for t in eng.step_trace)
+    assert n_chunks == eng.stats["prefill_chunks"]
+    assert n_chunks == sum(-(-r["prompt"].shape[0] // chunk)
+                           for r in workload)
+    # and decode rows actually run alongside streaming chunks
+    assert any(t["prefill_chunks"] == 1 and t["decode_rows"] > 0
+               for t in eng.step_trace)
+
+
+# -- scheduler determinism ----------------------------------------------------------
+
+
+def test_scheduler_deterministic_under_equal_arrival_ticks():
+    """Submission interleaving within one arrival tick must not change
+    admission order, slot assignment, or eviction order: the waiting queue
+    is kept sorted by (arrival_step, rid)."""
+    import dataclasses
+    import itertools
+
+    from repro.serve.scheduler import FCFSScheduler
+
+    @dataclasses.dataclass
+    class Req:
+        rid: int
+        arrival_step: int
+        prompt_len: int = 6
+        max_new_tokens: int = 2
+        slot: int = None
+        reserved_blocks: int = 0
+
+    def build():
+        return [Req(0, 0), Req(1, 0), Req(2, 1), Req(3, 0), Req(4, 1)]
+
+    want_wait = [0, 1, 3, 2, 4]       # (arrival, rid)-sorted
+    baseline = None
+    for perm in itertools.permutations(range(5)):
+        reqs = build()
+        sched = FCFSScheduler(page_size=4, max_slots=2,
+                              max_live_tokens=64, n_blocks_capacity=16)
+        for i in perm:
+            sched.submit(reqs[i])
+        assert [r.rid for r in sched.waiting] == want_wait, perm
+        trace = []
+        while not sched.idle:
+            for r in sched.admit():
+                trace.append(("admit", r.rid, r.slot))
+            # finish the lowest-rid running request (engine decode order)
+            done = min(sched.running.values(), key=lambda r: r.rid)
+            trace.append(("finish", done.rid))
+            sched.finish(done)
+        if baseline is None:
+            baseline = trace
+        assert trace == baseline, perm

@@ -649,3 +649,88 @@ def test_make_pattern_deterministic_across_processes():
         local[name] = hashlib.sha256(
             np.ascontiguousarray(mask).tobytes()).hexdigest()
     assert local == a
+
+
+# ---------------------------------------------------------------------------
+# per-layer backend routing (solve_budget backend= dict / callable)
+# ---------------------------------------------------------------------------
+
+
+ROUTE_SHAPES = {
+    "l1.moe.experts.in": (512, 1024, 8),
+    "l1.moe.experts.out": (1024, 512, 4),
+    "l1.attn.wq": (1024, 1024, 1),
+    "l1.attn.wo": (1024, 1024, 1),
+}
+
+
+def test_budget_solver_backend_dict_routing():
+    """A dict backend routes per path (first re.search match, fallback
+    'auto'); expert sides resolve on the coupled path so both agree."""
+    plan = solve_budget(ROUTE_SHAPES, target_density=0.25, min_dim=64,
+                        backend={r"\.experts": "xla_compact",
+                                 r"attn\.": "xla_masked"})
+    assert plan.resolve("l1.moe.experts.in").backend == "xla_compact"
+    assert plan.resolve("l1.moe.experts.out").backend == "xla_compact"
+    wq = plan.resolve("l1.attn.wq")
+    assert wq.is_sparse and wq.backend == "xla_masked"
+    # a regex written against the *coupled* expert path routes both sides
+    plan2 = solve_budget(ROUTE_SHAPES, target_density=0.25, min_dim=64,
+                         backend={r"\.experts$": "xla_masked"})
+    assert plan2.resolve("l1.moe.experts.in").backend == "xla_masked"
+    assert plan2.resolve("l1.moe.experts.out").backend == "xla_masked"
+    # unmatched paths fall back to "auto"
+    assert plan2.resolve("l1.attn.wq").backend == "auto"
+
+
+def test_budget_solver_backend_callable_and_buckets():
+    """A callable routes arbitrarily; equal-sparsity layers with
+    different backends emit separate (steps, backend) rules."""
+    shapes = {"a.x": (512, 512), "b.x": (512, 512)}
+    plan = solve_budget(
+        shapes, target_density=0.5, min_dim=64,
+        backend=lambda p: "xla_compact" if p.startswith("a") else
+        "xla_masked")
+    sa, sb = plan.resolve("a.x"), plan.resolve("b.x")
+    assert sa.is_sparse and sb.is_sparse
+    assert sa.sparsity == sb.sparsity           # same pow-2 step...
+    assert (sa.backend, sb.backend) == ("xla_compact", "xla_masked")
+    sparse_rules = [r for r in plan.rules if r.spec.is_sparse]
+    assert len(sparse_rules) == 2               # ...but separate rules
+    assert {r.spec.backend for r in sparse_rules} == \
+        {"xla_compact", "xla_masked"}
+    for r in sparse_rules:
+        assert f"backend {r.spec.backend}" in r.note
+
+
+def test_backend_routing_fingerprint_tracks_storage_not_backend():
+    """The plan fingerprint hashes realized storage kinds: 'auto' and
+    'xla_compact' share compact storage (same masks, same fingerprint)
+    while 'xla_masked' changes storage and therefore the fingerprint."""
+    base = solve_budget(ROUTE_SHAPES, target_density=0.25, min_dim=64)
+    compact = solve_budget(ROUTE_SHAPES, target_density=0.25, min_dim=64,
+                           backend={r"\.": "xla_compact"})
+    masked = solve_budget(ROUTE_SHAPES, target_density=0.25, min_dim=64,
+                          backend={r"attn\.": "xla_masked"})
+    assert compact.fingerprint() == base.fingerprint()
+    assert masked.fingerprint() != base.fingerprint()
+
+
+def test_backend_routing_json_roundtrip_and_stacked_experts():
+    """Routed plans survive dumps/loads, and StackedExperts realizes the
+    storage its own rule picked."""
+    from repro.models.moe import StackedExperts
+
+    plan = solve_budget(ROUTE_SHAPES, target_density=0.25, min_dim=64,
+                        backend={r"\.experts": "xla_masked",
+                                 r"attn\.": "xla_compact"})
+    back = SparsityPlan.loads(plan.dumps())
+    assert back.fingerprint() == plan.fingerprint()
+    assert back.resolve("l1.moe.experts.in").backend == "xla_masked"
+    assert back.resolve("l1.attn.wq").backend == "xla_compact"
+    se = StackedExperts(8, 1024, 512, plan, name="l1.moe")
+    assert se.storage == "masked"
+    plan_c = solve_budget(ROUTE_SHAPES, target_density=0.25, min_dim=64,
+                          backend={r"\.experts": "xla_compact"})
+    assert StackedExperts(8, 1024, 512, plan_c,
+                          name="l1.moe").storage == "compact"
