@@ -20,7 +20,7 @@ import json
 
 
 SECTIONS = ("table1", "table2", "plan", "table3", "kernels", "stacked",
-            "chain", "serve", "serve_sharded", "roofline")
+            "chain", "serve", "serve_sharded", "serve_faults", "roofline")
 
 
 def main() -> None:
@@ -89,6 +89,11 @@ def main() -> None:
 
         print("\n# === Sharded serving (continuous vs TP mesh vs disagg) ===")
         rows += serve_sharded.run(print)
+    if want("serve_faults"):
+        from . import serve_faults
+
+        print("\n# === Fault soak (seeded fault schedules, recompute parity) ===")
+        rows += serve_faults.run(print)
     if want("roofline"):
         from . import roofline
 

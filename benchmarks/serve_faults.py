@@ -1,0 +1,179 @@
+"""Fault-injection soak: seeded fault schedules against the serving engine.
+
+Runs the continuous engine with ``reserve="prompt"`` oversubscription on a
+deliberately tight page pool under N seeded :class:`FaultSchedule.random`
+schedules (capacity drops/restores, transient allocation failures, step
+delays, request kills) with allocator invariant checks armed
+(``REPRO_SERVE_CHECKS=1``), and gates every run on the robustness
+contract:
+
+  * every request reaches a terminal lifecycle state (no stalls, no
+    leaks — the drain either finishes or the watchdog would have raised);
+  * every request that still FINISHED produced tokens bit-identical to
+    the no-fault baseline run (preemption/kill recompute is exact);
+  * the allocator is whole afterwards: zero allocated blocks, free +
+    quarantined partitions the pool, ``check_invariants()`` passes.
+
+CSV rows: name,us_per_call(=us per generated token),derived.
+Standalone:
+  PYTHONPATH=src python -m benchmarks.serve_faults --json SERVE_FAULTS.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+N_SCHEDULES = 20
+SHAPES = [(4, 8), (12, 10), (8, 9), (16, 6), (6, 10)]
+PAGE = 4
+SLOTS = 4
+MAX_LEN = 40
+N_BLOCKS = 13
+SEED = 0
+
+
+def _build(seed):
+    import jax
+
+    from repro.configs import apply_sparsity, get_config, reduce_config
+    from repro.models import LMModel
+
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    cfg = apply_sparsity(cfg, pattern="rbgp4", sparsity=0.5, backend="auto",
+                         min_dim=64)
+    model = LMModel(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _workload(cfg, seed):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return [
+        {"rid": i, "prompt": rng.integers(
+            0, cfg.vocab_size, s).astype(np.int32),
+         "max_new_tokens": g}
+        for i, (s, g) in enumerate(SHAPES)
+    ]
+
+
+def _drain(model, params, workload, faults=None):
+    from repro.serve import ContinuousEngine
+
+    eng = ContinuousEngine(model, params, page_size=PAGE, max_slots=SLOTS,
+                           max_request_len=MAX_LEN, reserve="prompt",
+                           n_blocks=N_BLOCKS, faults=faults,
+                           preempt_backoff=0)
+    for r in workload:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    t0 = time.perf_counter()
+    out = eng.drain()
+    return eng, out, time.perf_counter() - t0
+
+
+def run(print_fn=print, n_schedules: int = N_SCHEDULES,
+        seed: int = SEED) -> list[tuple]:
+    os.environ["REPRO_SERVE_CHECKS"] = "1"
+
+    from repro.serve import FINISHED, TERMINAL_STATES, FaultSchedule
+
+    model, params = _build(seed)
+    workload = _workload(model.cfg, seed)
+    n_gen = sum(g for _, g in SHAPES)
+    print_fn(f"# workload: {len(workload)} requests, {n_gen} new tokens; "
+             f"pool {N_BLOCKS} blocks x {PAGE} tokens, reserve=prompt; "
+             f"{n_schedules} fault schedules, invariant checks ON")
+
+    # the no-fault reference outputs (also warms the shared jit cache)
+    base_eng, baseline, _ = _drain(model, params, workload)
+    assert all(r.state == FINISHED for r in base_eng.requests.values())
+
+    totals = dict(preemptions=0, fault_kills=0, expired=0, failed=0,
+                  resumed_prefills=0, fault_events=0, finished=0,
+                  survivors_checked=0)
+    wall = 0.0
+    for s in range(n_schedules):
+        faults = FaultSchedule.random(seed + s, horizon=32, n_events=5,
+                                      max_drop=4)
+        eng, out, dt = _drain(model, params, workload, faults=faults)
+        wall += dt
+
+        # gate 1: every request terminal
+        bad = {r.rid: r.state for r in eng.requests.values()
+               if r.state not in TERMINAL_STATES}
+        assert not bad, f"schedule {s}: non-terminal requests {bad}"
+
+        # gate 2: surviving outputs bit-identical to the no-fault run
+        for req in eng.requests.values():
+            if req.state == FINISHED:
+                totals["finished"] += 1
+                if (out[req.rid] != baseline[req.rid]).any():
+                    raise AssertionError(
+                        f"schedule {s}: request {req.rid} survived faults "
+                        f"but diverged from the no-fault run")
+                totals["survivors_checked"] += 1
+
+        # gate 3: allocator conservation after the churn
+        alloc = eng.kv.allocator
+        alloc.check_invariants()
+        assert alloc.n_allocated == 0, f"schedule {s}: leaked blocks"
+        assert alloc.n_free + alloc.n_quarantined == N_BLOCKS - 1
+
+        st = eng.stats
+        for k in ("preemptions", "fault_kills", "expired", "failed",
+                  "resumed_prefills", "fault_events"):
+            totals[k] += int(st[k])
+        print_fn(f"# schedule {s:2d} (seed {seed + s:2d}): "
+                 f"{len(faults)} events, {int(st['preemptions'])} preempts, "
+                 f"{int(st['fault_kills'])} kills, "
+                 f"{int(st['failed'])} failed, "
+                 f"{sum(1 for r in eng.requests.values() if r.state == FINISHED)}"
+                 f"/{len(workload)} finished -> OK")
+
+    print_fn(f"# soak passed: {n_schedules} schedules, "
+             f"{totals['fault_events']} fault events, "
+             f"{totals['preemptions']} preemptions, "
+             f"{totals['fault_kills']} kills, all terminal, "
+             f"{totals['survivors_checked']} survivor outputs bit-exact, "
+             f"zero invariant violations")
+    per_tok = wall / max(n_schedules * n_gen, 1) * 1e6
+    return [
+        ("serve_faults/soak_tok", per_tok, totals["finished"]),
+        ("serve_faults/schedules", 0.0, n_schedules),
+        ("serve_faults/fault_events", 0.0, totals["fault_events"]),
+        ("serve_faults/preemptions", 0.0, totals["preemptions"]),
+        ("serve_faults/fault_kills", 0.0, totals["fault_kills"]),
+        ("serve_faults/failed", 0.0, totals["failed"]),
+        ("serve_faults/expired", 0.0, totals["expired"]),
+        ("serve_faults/resumed_prefills", 0.0, totals["resumed_prefills"]),
+        ("serve_faults/survivors_checked", 0.0,
+         totals["survivors_checked"]),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedules", type=int, default=N_SCHEDULES)
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--json", default="",
+                    help="write rows as a name -> us_per_call/derived map")
+    args = ap.parse_args()
+
+    rows = run(print, n_schedules=args.schedules, seed=args.seed)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived:.4f}")
+    if args.json:
+        payload = {
+            "us_per_call": {name: us for name, us, _ in rows},
+            "derived": {name: derived for name, _, derived in rows},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -98,6 +98,34 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--autotune-cache", default="",
                     help="persistent kernel-autotune cache path (resolves "
                          "block_n='auto' for the compact/pallas backends)")
+    # -- robustness / fault-tolerance knobs (paged engines) -------------------
+    ap.add_argument("--reserve", default="worst_case",
+                    choices=["worst_case", "prompt"],
+                    help="admission block reservation: worst_case never "
+                         "preempts; prompt oversubscribes the pool and "
+                         "preempts lowest-priority requests under pressure "
+                         "(bit-exact resume via re-prefill)")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request deadline in engine steps; requests "
+                         "EXPIRE (freeing their pages) past it (0: none)")
+    ap.add_argument("--max-retries", type=int, default=32,
+                    help="preemptions + fault restarts a request survives "
+                         "before FAILED")
+    ap.add_argument("--max-idle-steps", type=int, default=1000,
+                    help="watchdog: consecutive no-progress steps with "
+                         "work pending before EngineStallError")
+    ap.add_argument("--fault-seed", type=int, default=-1,
+                    help="seeded FaultSchedule.random applied to the "
+                         "engine (capacity drops, alloc failures, delays, "
+                         "request kills); -1 = no faults")
+    ap.add_argument("--fault-events", type=int, default=6,
+                    help="events in the random fault schedule")
+    ap.add_argument("--fault-horizon", type=int, default=48,
+                    help="last engine step a random fault can land on")
+    ap.add_argument("--json", default="",
+                    help="write run stats (throughput + lifecycle counters: "
+                         "rejected/expired/preempted/cancelled/failed) to "
+                         "this path as JSON")
     return ap
 
 
@@ -152,6 +180,16 @@ def main():
     max_len = max(r["prompt"].shape[0] + r["max_new_tokens"]
                   for r in workload)
 
+    faults = None
+    if args.fault_seed >= 0:
+        from repro.serve import FaultSchedule
+
+        faults = FaultSchedule.random(args.fault_seed,
+                                      horizon=args.fault_horizon,
+                                      n_events=args.fault_events)
+        print(f"fault schedule: seed={args.fault_seed} "
+              f"{len(faults)} events over {faults.horizon} steps")
+
     if args.engine == "static":
         engine = make_engine("static", model, params, batch=args.batch)
     else:
@@ -160,6 +198,8 @@ def main():
             max_live_tokens=args.max_live_tokens, max_request_len=max_len,
             prefill_chunk=args.prefill_chunk,
             plan=cfg.plan,  # plan-aware admission (None: uniform budget)
+            reserve=args.reserve, max_retries=args.max_retries,
+            max_idle_steps=args.max_idle_steps, faults=faults,
         )
         if args.engine == "continuous":
             engine = make_engine("continuous", model, params, **eng_kw)
@@ -198,14 +238,22 @@ def main():
     sampling = SamplingParams(temperature=args.temperature,
                               seed=args.seed + 1)
     pending = sorted(workload, key=lambda r: r["arrival_step"])
+    deadline = args.deadline_steps or None
+
+    from repro.serve import RequestError
 
     t0 = time.perf_counter()
     step = 0
     while pending or not engine.idle:
         while pending and pending[0]["arrival_step"] <= step:
             r = pending.pop(0)
-            engine.submit(r["prompt"], r["max_new_tokens"],
-                          sampling=sampling, arrival_step=r["arrival_step"])
+            try:
+                engine.submit(r["prompt"], r["max_new_tokens"],
+                              sampling=sampling,
+                              arrival_step=r["arrival_step"],
+                              deadline_steps=deadline)
+            except RequestError as e:
+                print(f"rejected request ({e.reason}): {e}")
         engine.step()
         step += 1
     out = {rid: req.tokens for rid, req in sorted(engine.finished.items())}
@@ -233,9 +281,40 @@ def main():
                   f"of {args.prefill_chunk} tokens")
         if "handoffs" in st:
             print(f"disaggregation: {int(st['handoffs'])} KV-page handoffs")
-    rid0 = min(out)
-    print(f"sample continuation (req {rid0}): "
-          f"{np.asarray(out[rid0]).ravel()[:8].tolist()}")
+    lifecycle = {k: int(st.get(k, 0)) for k in (
+        "rejected", "expired", "cancelled", "failed", "preemptions",
+        "fault_kills", "resumed_prefills", "fault_events",
+        "fault_paused_steps",
+    )}
+    if any(lifecycle.values()):
+        print("lifecycle: " + " ".join(f"{k}={v}"
+                                       for k, v in lifecycle.items() if v))
+    if args.json:
+        import json
+
+        from repro.serve import TERMINAL_STATES
+
+        states: dict = {}
+        for req in engine.requests.values():
+            states[req.state] = states.get(req.state, 0) + 1
+        payload = {
+            "arch": cfg.name, "engine": args.engine,
+            "reserve": args.reserve, "requests": len(engine.requests),
+            "served": len(out), "wall_s": wall,
+            "prompt_tokens": n_prompt, "generated_tokens": n_gen,
+            "tok_per_s": (n_prompt + n_gen) / max(wall, 1e-9),
+            "states": states,
+            "all_terminal": all(r.state in TERMINAL_STATES
+                                for r in engine.requests.values()),
+            **lifecycle,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+    if out:
+        rid0 = min(out)
+        print(f"sample continuation (req {rid0}): "
+              f"{np.asarray(out[rid0]).ravel()[:8].tolist()}")
 
 
 if __name__ == "__main__":

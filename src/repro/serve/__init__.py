@@ -10,8 +10,24 @@ from .engine import (
     make_engine,
     run_sequential,
 )
+from .faults import FAULT_KINDS, FaultEvent, FaultInjector, FaultSchedule
+from .lifecycle import (
+    CANCELLED,
+    DECODING,
+    EXPIRED,
+    FAILED,
+    FINISHED,
+    LIVE_STATES,
+    PREFILLING,
+    QUEUED,
+    TERMINAL_STATES,
+    EngineStallError,
+    RequestError,
+    transition,
+)
 from .sampling import SamplingParams, greedy, sample_token
 from .scheduler import FCFSScheduler, plan_aware_live_tokens
+from .snapshot import SNAPSHOT_VERSION, restore_engine, save_engine
 
 __all__ = [
     "PageAllocator", "PagedKVCache", "pack_prefill_pages",
@@ -21,4 +37,11 @@ __all__ = [
     "Request", "ServingEngine", "ContinuousEngine", "StaticEngine",
     "ShardedContinuousEngine", "DisaggregatedEngine",
     "make_engine", "run_sequential",
+    # lifecycle / robustness
+    "QUEUED", "PREFILLING", "DECODING",
+    "FINISHED", "CANCELLED", "EXPIRED", "FAILED",
+    "TERMINAL_STATES", "LIVE_STATES", "transition",
+    "RequestError", "EngineStallError",
+    "FAULT_KINDS", "FaultEvent", "FaultSchedule", "FaultInjector",
+    "SNAPSHOT_VERSION", "save_engine", "restore_engine",
 ]

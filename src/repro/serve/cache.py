@@ -26,6 +26,7 @@ Two host-side pieces:
 """
 from __future__ import annotations
 
+import os
 from typing import Iterable, Optional
 
 import jax
@@ -34,6 +35,13 @@ import numpy as np
 
 __all__ = ["PageAllocator", "PagedKVCache", "blocks_for_tokens",
            "pack_prefill_pages"]
+
+
+def _checks_enabled() -> bool:
+    """Debug-mode toggle: ``REPRO_SERVE_CHECKS=1`` makes every allocator
+    mutation re-verify the full invariant set (read per call so tests and
+    soak harnesses can flip it without rebuilding engines)."""
+    return os.environ.get("REPRO_SERVE_CHECKS", "") == "1"
 
 
 def blocks_for_tokens(n_tokens: int, page_size: int) -> int:
@@ -56,6 +64,14 @@ class PageAllocator:
       * no block is ever handed out twice without an intervening free;
       * ``n_free + n_allocated == n_total`` at all times;
       * freeing returns exactly the blocks that were allocated.
+
+    Fault injection (repro.serve.faults) can *quarantine* free blocks —
+    a reversible capacity drop modelling a neighbouring tenant grabbing
+    HBM or a device loss.  Quarantined blocks leave ``n_total`` (so the
+    conservation invariant holds with the shrunken pool) and return via
+    :meth:`restore_quarantined`.  With ``REPRO_SERVE_CHECKS=1`` every
+    mutation re-verifies the whole invariant set via
+    :meth:`check_invariants`.
     """
 
     def __init__(self, n_blocks: int):
@@ -69,10 +85,11 @@ class PageAllocator:
         # which keeps block tables readable in tests/debug dumps
         self._free = list(range(n_blocks - 1, 0, -1))
         self._allocated: set[int] = set()
+        self._quarantined: set[int] = set()
 
     @property
     def n_total(self) -> int:
-        return self.n_blocks - 1
+        return self.n_blocks - 1 - len(self._quarantined)
 
     @property
     def n_free(self) -> int:
@@ -81,6 +98,10 @@ class PageAllocator:
     @property
     def n_allocated(self) -> int:
         return len(self._allocated)
+
+    @property
+    def n_quarantined(self) -> int:
+        return len(self._quarantined)
 
     def can_alloc(self, n: int) -> bool:
         return n <= self.n_free
@@ -91,21 +112,84 @@ class PageAllocator:
         if n > self.n_free:
             raise RuntimeError(
                 f"out of cache blocks: requested {n}, free {self.n_free} "
-                f"of {self.n_total} (the scheduler reserves worst-case "
-                f"blocks at admission, so this indicates a bookkeeping bug)"
+                f"of {self.n_total} (under worst-case reservation this is "
+                f"a bookkeeping bug; under reserve='prompt' oversubscription "
+                f"the engine must preempt before allocating)"
             )
         blocks = [self._free.pop() for _ in range(n)]
         self._allocated.update(blocks)
+        if _checks_enabled():
+            self.check_invariants()
         return blocks
 
     def free(self, blocks: Iterable[int]) -> None:
         blocks = list(blocks)
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate blocks in free({blocks})")
         for b in blocks:
             if b not in self._allocated:
                 raise ValueError(f"double free / foreign block {b}")
         for b in blocks:
             self._allocated.discard(b)
             self._free.append(b)
+        if _checks_enabled():
+            self.check_invariants()
+
+    # -- fault-injection capacity control ---------------------------------------
+    def quarantine(self, n: int) -> int:
+        """Remove up to ``n`` FREE blocks from the pool (capacity drop).
+
+        Only free blocks can be taken — live data is never yanked; the
+        effective drop is ``min(n, n_free)`` and the count actually taken
+        is returned.  ``n_total`` shrinks so conservation keeps holding.
+        """
+        take = min(max(n, 0), self.n_free)
+        for _ in range(take):
+            self._quarantined.add(self._free.pop())
+        if _checks_enabled():
+            self.check_invariants()
+        return take
+
+    def restore_quarantined(self, n: Optional[int] = None) -> int:
+        """Return up to ``n`` quarantined blocks (all when ``n`` is None)."""
+        give = len(self._quarantined) if n is None \
+            else min(max(n, 0), len(self._quarantined))
+        for _ in range(give):
+            self._free.append(self._quarantined.pop())
+        if _checks_enabled():
+            self.check_invariants()
+        return give
+
+    # -- debug mode -------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Verify the full allocator invariant set; raise on any violation.
+
+        free ∪ allocated ∪ quarantined must exactly partition the non-trash
+        block ids, with no duplicates and block 0 never present.  Cheap at
+        pool sizes (sets over a few hundred ints); gated behind
+        ``REPRO_SERVE_CHECKS=1`` on the hot paths, but always callable.
+        """
+        free = self._free
+        free_set = set(free)
+        if len(free_set) != len(free):
+            raise AssertionError(f"duplicate block in free list: {free}")
+        universe = set(range(1, self.n_blocks))
+        parts = (free_set, self._allocated, self._quarantined)
+        names = ("free", "allocated", "quarantined")
+        for i in range(len(parts)):
+            if 0 in parts[i]:
+                raise AssertionError(f"trash block 0 in {names[i]} set")
+            for j in range(i + 1, len(parts)):
+                both = parts[i] & parts[j]
+                if both:
+                    raise AssertionError(
+                        f"blocks {sorted(both)} in both {names[i]} and "
+                        f"{names[j]}")
+        union = free_set | self._allocated | self._quarantined
+        if union != universe:
+            raise AssertionError(
+                f"lost/foreign blocks: missing {sorted(universe - union)}, "
+                f"extra {sorted(union - universe)}")
 
 
 def pack_prefill_pages(cache, n_blocks: int, page_size: int):

@@ -71,26 +71,41 @@ def trim_cache(cache: Any, n: int) -> Any:
 
 @dataclasses.dataclass(eq=False)
 class ChunkedPrefillState:
-    """Progress of one request's chunked prefill (FCFS-processed)."""
+    """Progress of one request's chunked prefill (FCFS-processed).
+
+    ``tokens`` defaults to the request's prompt; the preemption-resume
+    path passes prompt ++ generated prefix instead (``Request.
+    prefill_tokens``), so an evicted request's chunked re-prefill rebuilds
+    the exact cache the uninterrupted run had.
+    """
 
     req: Any                       # serve.engine.Request
     cache: Any                     # persistent contiguous temp cache
     chunk: int
+    tokens: Optional[np.ndarray] = None   # default: req.prompt
     pos: int = 0                   # tokens already fed
     logits: Optional[np.ndarray] = None   # last-valid-row logits, final chunk
 
+    def __post_init__(self):
+        if self.tokens is None:
+            self.tokens = self.req.prompt
+
+    @property
+    def total(self) -> int:
+        return self.tokens.shape[0]
+
     @property
     def done(self) -> bool:
-        return self.pos >= self.req.prompt_len
+        return self.pos >= self.total
 
     def next_chunk(self) -> tuple[np.ndarray, int, int]:
         """(tokens (1, chunk[, n_cb]), start index, n_valid) for the next
         chunk; the ragged tail of the final chunk is zero-padded (those
         rows are written with position -1 and masked everywhere)."""
-        S = self.req.prompt_len
+        S = self.total
         start = self.pos
         n_valid = min(self.chunk, S - start)
-        piece = self.req.prompt[start:start + n_valid]
+        piece = self.tokens[start:start + n_valid]
         if n_valid < self.chunk:
             pad = np.zeros((self.chunk - n_valid,) + piece.shape[1:],
                            piece.dtype)
@@ -113,7 +128,7 @@ def run_one_chunk(state: ChunkedPrefillState, params, chunk_fn) -> int:
         params, {"tokens": jnp.asarray(tokens)}, state.cache,
         jnp.int32(start), jnp.int32(n_valid),
     )
-    will_finish = start + n_valid >= state.req.prompt_len
+    will_finish = start + n_valid >= state.total
     state.advance(n_valid, cache,
                   np.asarray(logits) if will_finish else None)
     return n_valid

@@ -90,6 +90,14 @@ class ShardedContinuousEngine(ContinuousEngine):
     Same knobs as :class:`ContinuousEngine` plus the mesh.  Host-side
     bookkeeping (scheduler, allocator, block tables) is untouched — block
     tables and positions enter the jit replicated, only tensors shard.
+
+    That includes preemption: victim selection under ``reserve="prompt"``
+    pool pressure is the inherited host-side ``_pick_victim`` — ``min``
+    over live requests keyed ``(priority, -arrival_step, -rid)`` — and
+    never consults device state, so a TP x EP engine preempts *the same
+    victims at the same clocks* regardless of how the mesh is carved up
+    (``preempt_log`` traces are compared across mesh shapes in
+    tests/test_serve_sharded.py).
     """
 
     kind = "sharded"

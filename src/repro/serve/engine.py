@@ -25,6 +25,17 @@ request at its exact prompt length through the *reference* prefill (then
 scatters the cache into pages), decode rows never interact (per-row
 attention, per-token norms), and the gathered paged view presents the same
 positions mask as a contiguous cache of ``max_blocks * page`` slots.
+
+Robustness layer (see repro.serve.lifecycle / faults / snapshot): every
+request carries an explicit lifecycle state; admission can oversubscribe
+the pool (``reserve="prompt"``), in which case mid-decode growth preempts
+the lowest-priority live request instead of failing — pages are freed, the
+prompt + generated prefix kept, and re-admission *re-prefills* prompt+prefix
+so the resumed greedy stream is bit-identical to the uninterrupted one
+(sampling keys are per-(request, step)).  Deadlines (``deadline_steps``),
+``cancel(rid)``, bounded retries with exponential backoff, a no-progress
+watchdog, deterministic fault injection, and crash-consistent snapshots
+complete the failure story.
 """
 from __future__ import annotations
 
@@ -39,6 +50,10 @@ import numpy as np
 from .cache import PagedKVCache, blocks_for_tokens, pack_prefill_pages
 from .chunked import ChunkedPrefillState, chunk_cache_len, run_one_chunk, \
     trim_cache
+from .faults import FaultInjector, FaultSchedule
+from .lifecycle import (CANCELLED, DECODING, EXPIRED, FAILED, FINISHED,
+                        PREFILLING, QUEUED, TERMINAL_STATES,
+                        EngineStallError, RequestError, transition)
 from .sampling import SamplingParams, sample_token
 from .scheduler import FCFSScheduler
 
@@ -53,11 +68,18 @@ class Request:
     max_new_tokens: int
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     arrival_step: int = 0
+    priority: int = 0                # higher = evicted later under pressure
+    deadline_step: Optional[int] = None   # absolute engine-clock deadline
     # runtime state
     generated: list = dataclasses.field(default_factory=list)
     blocks: list = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     reserved_blocks: int = 0
+    state: str = QUEUED              # lifecycle.py state machine
+    not_before: int = 0              # re-admission backoff (engine clock)
+    preemptions: int = 0             # pool-pressure evictions survived
+    restarts: int = 0                # fault kills survived (prefix discarded)
+    error: Optional[RequestError] = None   # set on FAILED / EXPIRED
 
     @property
     def prompt_len(self) -> int:
@@ -71,6 +93,27 @@ class Request:
     def input_pos(self) -> int:
         """Position of the next decode input (the last sampled token)."""
         return self.prompt_len + len(self.generated) - 1
+
+    @property
+    def prefill_len(self) -> int:
+        """Tokens a (re-)prefill must feed: prompt plus any generated
+        prefix a preemption preserved.  Equals ``prompt_len`` for fresh
+        requests."""
+        return self.prompt_len + len(self.generated)
+
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        """(prefill_len[, n_cb]) prompt ++ generated prefix — the resume
+        re-prefill input.  Feeding these through prefill puts the KV cache
+        in exactly the state the uninterrupted run had after sampling
+        ``len(generated)`` tokens, so the next sample (keyed per (request,
+        step)) continues the stream bit-identically."""
+        if not self.generated:
+            return self.prompt
+        gen = np.asarray(self.generated, np.int32).reshape(
+            (len(self.generated),) + self.prompt.shape[1:]
+        )
+        return np.concatenate([self.prompt, gen], axis=0)
 
     @property
     def tokens(self) -> np.ndarray:
@@ -91,29 +134,71 @@ class ServingEngine:
         self.requests: dict[int, Request] = {}
         self.finished: dict[int, Request] = {}
         self._next_rid = 0
+        self._clock = 0                 # engine step clock (deadline basis)
         self.stats: dict[str, float] = {
             "steps": 0, "prefill_calls": 0, "decode_steps": 0,
             "prompt_tokens": 0, "generated_tokens": 0, "wasted_row_steps": 0,
             "prefill_time_s": 0.0, "decode_time_s": 0.0,
+            # robustness counters (lifecycle / preemption / faults)
+            "rejected": 0, "cancelled": 0, "expired": 0, "failed": 0,
+            "preemptions": 0, "fault_kills": 0, "resumed_prefills": 0,
+            "fault_events": 0, "fault_paused_steps": 0,
         }
 
     # -- API -----------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
                sampling: Optional[SamplingParams] = None,
-               arrival_step: int = 0) -> int:
+               arrival_step: int = 0, *,
+               deadline_steps: Optional[int] = None,
+               priority: int = 0) -> int:
+        """Enqueue a request; returns its rid.
+
+        ``deadline_steps``: optional step budget — the request EXPIREs (and
+        releases every page) once the engine clock passes
+        ``max(clock, arrival_step) + deadline_steps``.  ``priority``:
+        higher values are preempted later under pool pressure (ties break
+        by youngest-first, see ``_pick_victim``).  Rejections raise
+        :class:`RequestError` whose ``reason`` code distinguishes malformed
+        arguments from budget/capacity impossibility.
+        """
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim not in (1, 2) or prompt.shape[0] < 1:
-            raise ValueError(f"prompt shape {prompt.shape}")
+            self.stats["rejected"] += 1
+            raise RequestError("bad_prompt", f"prompt shape {prompt.shape}")
         if max_new_tokens < 1:
-            raise ValueError(f"max_new_tokens={max_new_tokens}")
+            self.stats["rejected"] += 1
+            raise RequestError("bad_max_new_tokens",
+                               f"max_new_tokens={max_new_tokens}")
+        if deadline_steps is not None and deadline_steps < 1:
+            self.stats["rejected"] += 1
+            raise RequestError("bad_deadline",
+                               f"deadline_steps={deadline_steps}")
         rid = self._next_rid
-        self._next_rid += 1
+        deadline = None if deadline_steps is None else \
+            max(self._clock, arrival_step) + deadline_steps
         req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
                       sampling=sampling or SamplingParams(),
-                      arrival_step=arrival_step)
+                      arrival_step=arrival_step, priority=priority,
+                      deadline_step=deadline)
+        try:
+            self._enqueue(req)
+        except RequestError:
+            self.stats["rejected"] += 1
+            raise
+        self._next_rid += 1
         self.requests[rid] = req
-        self._enqueue(req)
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Withdraw a live request: frees its pages/slot immediately and
+        moves it to CANCELLED (its partial ``tokens`` stay readable).
+        Returns False if the rid is unknown or already terminal."""
+        req = self.requests.get(rid)
+        if req is None or req.state in TERMINAL_STATES:
+            return False
+        self._terminate(req, CANCELLED)
+        self.stats["cancelled"] += 1
+        return True
 
     def step(self) -> list[Request]:
         raise NotImplementedError
@@ -134,6 +219,10 @@ class ServingEngine:
 
     # -- shared helpers --------------------------------------------------------------
     def _enqueue(self, req: Request) -> None:
+        raise NotImplementedError
+
+    def _terminate(self, req: Request, state: str,
+                   error: Optional[RequestError] = None) -> None:
         raise NotImplementedError
 
     def _next_input(self, req: Request) -> np.ndarray:
@@ -177,6 +266,20 @@ class ContinuousEngine(ServingEngine):
                       sparser layers leave more room for KV pages, so
                       admission no longer assumes uniform dense weight
                       residency.  Pool capacity still caps admission.
+    reserve:          admission block-reservation policy.  "worst_case"
+                      (default) reserves ``blocks_for(prompt + max_new)``
+                      so growth never fails; "prompt" reserves only the
+                      prefill's blocks — the pool oversubscribes and
+                      mid-decode growth preempts the lowest-priority live
+                      request (bit-exact resume via re-prefill).
+    max_retries:      preemptions + fault restarts a request survives
+                      before it is FAILED (``retries_exhausted``).
+    preempt_backoff:  base of the exponential re-admission backoff (steps).
+    max_idle_steps:   watchdog fuse — consecutive no-progress steps with
+                      work pending before ``EngineStallError`` (with live
+                      rids / pool occupancy / queue diagnostics) is raised.
+    faults:           optional :class:`FaultSchedule` (or prepared
+                      :class:`FaultInjector`) applied at each step.
     """
 
     kind = "continuous"
@@ -185,7 +288,10 @@ class ContinuousEngine(ServingEngine):
                  max_slots: int = 8, n_blocks: int = 0,
                  max_live_tokens: int = 0, max_request_len: int = 0,
                  prefill_chunk: int = 0,
-                 cache_dtype=jnp.float32, plan=None):
+                 cache_dtype=jnp.float32, plan=None,
+                 reserve: str = "worst_case", max_retries: int = 32,
+                 preempt_backoff: int = 1, max_idle_steps: int = 1000,
+                 faults=None):
         super().__init__(model, params, cache_dtype=cache_dtype)
         self.page = page_size
         self.max_slots = max_slots
@@ -198,10 +304,32 @@ class ContinuousEngine(ServingEngine):
             self.chunk_cache = chunk_cache_len(
                 self.max_request_len, page_size, prefill_chunk
             )
+        self.max_retries = max_retries
+        self.preempt_backoff = max(preempt_backoff, 0)
+        self.max_idle_steps = max_idle_steps
+        self._idle_streak = 0
+        if isinstance(faults, FaultSchedule):
+            faults = FaultInjector(faults)
+        self._injector: Optional[FaultInjector] = faults
         self._prefilling: dict[int, ChunkedPrefillState] = {}
         self.step_trace: list[dict] = []
+        # (clock, rid, "preempt"|"restart") — the deterministic eviction
+        # trace the sharded tests compare across mesh shapes
+        self.preempt_log: list[tuple[int, int, str]] = []
         self.kv = self._make_kv(n_blocks)
         self.base_live_tokens = max_live_tokens
+        self.plan = plan
+        self.plan_fingerprint = plan.fingerprint() if plan is not None \
+            else None
+        # everything snapshot.restore_engine needs to rebuild this engine
+        self._init_kw = dict(
+            page_size=page_size, max_slots=max_slots, n_blocks=n_blocks,
+            max_live_tokens=max_live_tokens,
+            max_request_len=self.max_request_len,
+            prefill_chunk=prefill_chunk, reserve=reserve,
+            max_retries=max_retries, preempt_backoff=preempt_backoff,
+            max_idle_steps=max_idle_steps,
+        )
         if plan is not None and max_live_tokens > 0:
             from repro.sparsity import model_matmul_shapes
 
@@ -225,6 +353,7 @@ class ContinuousEngine(ServingEngine):
             page_size=page_size, max_slots=max_slots,
             max_live_tokens=max_live_tokens,
             n_blocks_capacity=self.kv.allocator.n_total,
+            reserve=reserve,
         )
         self.prefill_params = self.params
         self._jit_fns()
@@ -237,10 +366,21 @@ class ContinuousEngine(ServingEngine):
         return PagedKVCache(self.model, n_blocks, self.page, self.cache_dtype)
 
     def _jit_fns(self) -> None:
-        self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step_paged,
-                               donate_argnums=(2,))
-        self._chunk = jax.jit(self.model.prefill_chunk, donate_argnums=(2,))
+        # jitted programs are cached on the model object so many engines
+        # over the same model (the fault soak builds dozens) share compiles
+        cache = getattr(self.model, "_serve_jit", None)
+        if cache is None:
+            cache = {}
+            self.model._serve_jit = cache
+        fns = cache.get("continuous")
+        if fns is None:
+            fns = (
+                jax.jit(self.model.prefill),
+                jax.jit(self.model.decode_step_paged, donate_argnums=(2,)),
+                jax.jit(self.model.prefill_chunk, donate_argnums=(2,)),
+            )
+            cache["continuous"] = fns
+        self._prefill, self._decode, self._chunk = fns
 
     def _handoff(self, paged):
         """Identity in the single-role engines; the disaggregated engine
@@ -251,6 +391,15 @@ class ContinuousEngine(ServingEngine):
     def gather_tokens(self) -> int:
         """KV slots a decode row attends over (block-table width x page)."""
         return self.max_blocks * self.page
+
+    def snapshot(self, path: str) -> dict:
+        """Crash-consistent snapshot (see serve.snapshot): host state only,
+        atomic write; call between steps.  Restore with
+        ``serve.snapshot.restore_engine`` finishes in-flight requests with
+        byte-identical outputs."""
+        from .snapshot import save_engine
+
+        return save_engine(self, path)
 
     def kv_bytes_per_token(self) -> float:
         """Cache footprint of one token across every layer's page pools."""
@@ -264,28 +413,36 @@ class ContinuousEngine(ServingEngine):
 
     def _enqueue(self, req: Request) -> None:
         if req.prompt_len + req.max_new_tokens > self.max_request_len:
-            raise ValueError(
+            raise RequestError(
+                "too_long",
                 f"request {req.rid}: prompt {req.prompt_len} + max_new "
                 f"{req.max_new_tokens} exceeds max_request_len="
-                f"{self.max_request_len}"
+                f"{self.max_request_len}",
+                rid=req.rid,
             )
         self.scheduler.submit(req)
 
     # -- steps -----------------------------------------------------------------------
     def step(self) -> list[Request]:
-        """Admit + prefill new requests, then one batched decode step."""
+        """One engine tick: faults, expiry, admit+prefill, batched decode."""
         finished: list[Request] = []
-        admitted = 0
-        for req in self.scheduler.admit():
-            admitted += 1
-            if self.prefill_chunk > 0:
-                self._begin_chunked(req)
-            else:
-                self._prefill_request(req)
-                if req.done:
-                    self._finish(req, finished)
-        chunks = self._run_prefill_chunk(finished)
-        decoded = self._decode_batch(finished)
+        paused = False
+        if self._injector is not None:
+            paused = self._injector.begin_step(self, self._clock)
+        self._expire(finished)
+        admitted = chunks = decoded = 0
+        if not paused:
+            for req in self.scheduler.admit(self._clock):
+                admitted += 1
+                transition(req, PREFILLING)
+                if self.prefill_chunk > 0:
+                    self._begin_chunked(req)
+                else:
+                    self._prefill_request(req)
+                    if req.slot is not None and req.done:
+                        self._finish(req, finished)
+            chunks = self._run_prefill_chunk(finished)
+            decoded = self._decode_batch(finished)
         self.step_trace.append({"admitted": admitted,
                                 "prefill_chunks": chunks,
                                 "decode_rows": decoded})
@@ -299,17 +456,182 @@ class ContinuousEngine(ServingEngine):
         self.stats["peak_allocated_blocks"] = max(
             self.stats["peak_allocated_blocks"], na
         )
+        self._watchdog(admitted + chunks + decoded + len(finished), paused)
+        self._clock += 1
         return finished
 
+    # -- lifecycle: expiry / cancellation / preemption ---------------------------------
+    def _terminate(self, req: Request, state: str,
+                   error: Optional[RequestError] = None) -> None:
+        """Move a live request to a terminal state, releasing everything."""
+        self._prefilling.pop(req.rid, None)
+        if req.blocks:
+            self.kv.reset_blocks(req.blocks)
+            self.kv.allocator.free(req.blocks)
+            req.blocks = []
+        if req.slot is not None:
+            self.scheduler.finish(req)
+        else:
+            self.scheduler.remove(req)
+        transition(req, state)
+        req.error = error
+        self._mark_finished(req)
+
+    def _expire(self, finished: list[Request]) -> None:
+        for req in list(self.requests.values()):
+            if (req.state not in TERMINAL_STATES
+                    and req.deadline_step is not None
+                    and self._clock >= req.deadline_step):
+                self._terminate(req, EXPIRED, RequestError(
+                    "deadline",
+                    f"request {req.rid} missed deadline_step="
+                    f"{req.deadline_step} at engine clock {self._clock}",
+                    rid=req.rid,
+                ))
+                self.stats["expired"] += 1
+                finished.append(req)
+
+    def _pick_victim(self) -> Optional[Request]:
+        """Deterministic preemption order: lowest priority first, then
+        youngest arrival, then highest rid.  Host-side state only, so the
+        choice is identical across mesh shapes (the sharded engines
+        inherit this verbatim — the PR-6 determinism carry-over)."""
+        live = list(self.scheduler.running.values())
+        if not live:
+            return None
+        return min(live, key=lambda r: (r.priority, -r.arrival_step, -r.rid))
+
+    def _preempt(self, req: Request, restart: bool = False) -> None:
+        """Evict a live request: free its pages, keep prompt (+ generated
+        prefix unless ``restart``), re-queue with exponential backoff.
+        Exhausting ``max_retries`` moves it to FAILED instead."""
+        self._prefilling.pop(req.rid, None)
+        if req.blocks:
+            self.kv.reset_blocks(req.blocks)
+            self.kv.allocator.free(req.blocks)
+            req.blocks = []
+        self.scheduler.finish(req)
+        self.preempt_log.append(
+            (self._clock, req.rid, "restart" if restart else "preempt")
+        )
+        if restart:
+            # fault kill: the generated prefix is lost with the "crash";
+            # per-(request, step) sampling keys regenerate it identically
+            req.generated = []
+            req.restarts += 1
+            self.stats["fault_kills"] += 1
+        else:
+            req.preemptions += 1
+            self.stats["preemptions"] += 1
+        retries = req.preemptions + req.restarts
+        if retries > self.max_retries:
+            transition(req, FAILED)
+            req.error = RequestError(
+                "retries_exhausted",
+                f"request {req.rid} exceeded max_retries={self.max_retries} "
+                f"({req.preemptions} preemptions, {req.restarts} fault "
+                f"restarts)",
+                rid=req.rid,
+            )
+            self.stats["failed"] += 1
+            self._mark_finished(req)
+            return
+        transition(req, QUEUED)
+        req.not_before = self._clock + 1 + \
+            self.preempt_backoff * (2 ** min(retries - 1, 6))
+        self.scheduler.requeue(req)
+
+    def _fault_kill(self, idx: int) -> None:
+        """Injected crash of one live request (victim = sorted live rids
+        indexed mod n — deterministic for a given schedule + workload)."""
+        rids = sorted(r.rid for r in self.scheduler.running.values())
+        if not rids:
+            return
+        self._preempt(self.requests[rids[idx % len(rids)]], restart=True)
+
+    def _ensure_blocks(self, req: Request, n_new: int) -> Optional[list]:
+        """Allocate ``n_new`` blocks for ``req``, preempting under pressure.
+
+        Evicts ``_pick_victim()`` (which may be ``req`` itself) until the
+        allocation fits.  Returns the blocks, or None if ``req`` was the
+        victim (caller must drop the request's work for this step).  While
+        an injected ``alloc_fail`` fault is armed, every allocation is a
+        transient failure — ``req`` is preempted and retried after backoff.
+        """
+        if n_new <= 0:
+            return []
+        if (self._injector is not None
+                and not self._injector.alloc_allowed(self._clock)):
+            self._preempt(req)
+            return None
+        alloc = self.kv.allocator
+        while not alloc.can_alloc(n_new):
+            victim = self._pick_victim()
+            if victim is None:
+                self._preempt(req)
+                return None
+            self._preempt(victim)
+            if victim is req:
+                return None
+        return alloc.alloc(n_new)
+
+    def _watchdog(self, progress: int, paused: bool) -> None:
+        """Raise EngineStallError after ``max_idle_steps`` consecutive
+        no-progress steps with work pending.  Injected pauses and pure
+        backoff waits (nothing running, every waiting request's
+        ``not_before`` in the future) are benign and reset the streak."""
+        if progress > 0 or paused or self.idle:
+            self._idle_streak = 0
+            return
+        waiting = list(self.scheduler.waiting)
+        if (not self.scheduler.running and waiting and all(
+                getattr(r, "not_before", 0) > self._clock for r in waiting)):
+            self._idle_streak = 0
+            return
+        self._idle_streak += 1
+        if self._idle_streak < self.max_idle_steps:
+            return
+        alloc = self.kv.allocator
+        diag = {
+            "clock": self._clock,
+            "live": {r.rid: r.state
+                     for r in self.scheduler.running.values()},
+            "waiting": [(r.rid, getattr(r, "not_before", 0))
+                        for r in waiting],
+            "pool": {"n_free": alloc.n_free, "n_allocated": alloc.n_allocated,
+                     "n_quarantined": alloc.n_quarantined,
+                     "n_total": alloc.n_total},
+            "budget": {"live_tokens": self.scheduler.live_tokens,
+                       "reserved_blocks": self.scheduler.reserved_blocks,
+                       "capacity_blocks": self.scheduler.capacity_blocks},
+        }
+        raise EngineStallError(
+            f"engine made no progress for {self._idle_streak} consecutive "
+            f"steps with work pending ({len(diag['live'])} running, "
+            f"{len(waiting)} waiting; pool {alloc.n_free} free / "
+            f"{alloc.n_quarantined} quarantined of {alloc.n_total}); "
+            f"diagnostics attached",
+            diag,
+        )
+
     def _prefill_request(self, req: Request) -> None:
-        """Reference prefill at the exact prompt length, then page it."""
-        S = req.prompt_len
-        req.blocks = self.kv.allocator.alloc(self.kv.blocks_for(S))
-        cache = self.model.init_cache(1, S, self.cache_dtype,
+        """Reference prefill at the exact prefill length, then page it.
+
+        For a fresh request that is the prompt; for a preempted one it is
+        prompt ++ generated prefix (the bit-exact resume path — the next
+        ``_sample`` call is keyed at ``step=len(generated)``, exactly the
+        step the uninterrupted run would be at)."""
+        L = req.prefill_len
+        blocks = self._ensure_blocks(req, self.kv.blocks_for(L))
+        if blocks is None:
+            return   # req itself was preempted under pool pressure
+        req.blocks = blocks
+        cache = self.model.init_cache(1, L, self.cache_dtype,
                                       full_length=True)
         t0 = time.perf_counter()
         logits, cache = self._prefill(
-            self.prefill_params, {"tokens": jnp.asarray(req.prompt[None])},
+            self.prefill_params,
+            {"tokens": jnp.asarray(req.prefill_tokens[None])},
             cache
         )
         logits = np.asarray(logits)
@@ -320,25 +642,34 @@ class ContinuousEngine(ServingEngine):
             ),
             req.blocks,
         )
+        if req.generated:
+            self.stats["resumed_prefills"] += 1
         self._sample(req, logits[0])
+        transition(req, DECODING)
         self.stats["prefill_calls"] += 1
-        self.stats["prompt_tokens"] += S
+        self.stats["prompt_tokens"] += L
 
     # -- chunked prefill ---------------------------------------------------------------
     def _begin_chunked(self, req: Request) -> None:
-        """Allocate the request's prompt blocks and its temp prefill cache.
+        """Allocate the request's prefill blocks and its temp prefill cache.
 
         The temp cache has the ONE shared ``chunk_cache`` length for every
         request, so all prompts reuse a single compiled chunk program.
+        Resumed requests chunk prompt ++ generated prefix (never longer
+        than ``max_request_len``, so the shared cache always fits).
         """
-        req.blocks = self.kv.allocator.alloc(
-            self.kv.blocks_for(req.prompt_len)
-        )
+        blocks = self._ensure_blocks(req, self.kv.blocks_for(req.prefill_len))
+        if blocks is None:
+            return   # req itself was preempted under pool pressure
+        req.blocks = blocks
         cache = self.model.init_cache(1, self.chunk_cache, self.cache_dtype,
                                       full_length=True)
         self._prefilling[req.rid] = ChunkedPrefillState(
-            req=req, cache=cache, chunk=self.prefill_chunk
+            req=req, cache=cache, chunk=self.prefill_chunk,
+            tokens=req.prefill_tokens,
         )
+        if req.generated:
+            self.stats["resumed_prefills"] += 1
 
     def _run_prefill_chunk(self, finished: list[Request]) -> int:
         """Feed at most ONE chunk (of the oldest in-flight prefill) per
@@ -366,6 +697,7 @@ class ContinuousEngine(ServingEngine):
                 req.blocks,
             )
             self._sample(req, state.logits[0])
+            transition(req, DECODING)
             self.stats["prefill_calls"] += 1
             if req.done:
                 self._finish(req, finished)
@@ -383,9 +715,19 @@ class ContinuousEngine(ServingEngine):
         if not active:
             return 0
         for r in active:
+            if r.slot is None:
+                continue   # preempted while growing an earlier row
             need = self.kv.blocks_for(r.input_pos + 1)
             if need > len(r.blocks):
-                r.blocks += self.kv.allocator.alloc(need - len(r.blocks))
+                got = self._ensure_blocks(r, need - len(r.blocks))
+                if got is None:
+                    continue   # r itself was the preemption victim
+                r.blocks += got
+                self.scheduler.grow(r, len(got))
+        # growth may have evicted rows (theirs or later ones): re-filter
+        active = [r for r in active if r.slot is not None]
+        if not active:
+            return 0
         B = self.max_slots
         tok_shape = (B, 1) + active[0].prompt.shape[1:]
         tokens = np.zeros(tok_shape, np.int32)
@@ -417,6 +759,7 @@ class ContinuousEngine(ServingEngine):
         self.kv.allocator.free(req.blocks)
         req.blocks = []
         self.scheduler.finish(req)
+        transition(req, FINISHED)
         self._mark_finished(req)
         finished.append(req)
 
@@ -442,6 +785,16 @@ class StaticEngine(ServingEngine):
     def _enqueue(self, req: Request) -> None:
         self._queue.append(req)
 
+    def _terminate(self, req: Request, state: str,
+                   error: Optional[RequestError] = None) -> None:
+        """Static batches run to completion inside one step(), so only
+        still-queued requests can be cancelled/expired here."""
+        if req in self._queue:
+            self._queue.remove(req)
+        transition(req, state)
+        req.error = error
+        self._mark_finished(req)
+
     def step(self) -> list[Request]:
         """Serve one batch to completion (the static-batching granularity).
 
@@ -459,6 +812,8 @@ class StaticEngine(ServingEngine):
         max_gen = max(r.max_new_tokens for r in group)
         cache = self.model.init_cache(B, S + max_gen, self.cache_dtype)
         prompts = np.stack([r.prompt for r in group])
+        for r in group:
+            transition(r, PREFILLING)
         t0 = time.perf_counter()
         logits, cache = self._prefill(
             self.params, {"tokens": jnp.asarray(prompts)}, cache
@@ -467,6 +822,7 @@ class StaticEngine(ServingEngine):
         self.stats["prefill_time_s"] += time.perf_counter() - t0
         for i, r in enumerate(group):
             self._sample(r, logits[i])
+            transition(r, DECODING)
         self.stats["prefill_calls"] += 1
         self.stats["prompt_tokens"] += B * S
         for step_i in range(1, max_gen):
@@ -491,8 +847,10 @@ class StaticEngine(ServingEngine):
                 else:
                     self._sample(r, logits[i])
         for r in group:
+            transition(r, FINISHED)
             self._mark_finished(r)
         self.stats["steps"] += 1
+        self._clock += 1
         return group
 
 

@@ -12,12 +12,25 @@ only if all three hold:
     running requests never exceeds ``max_live_tokens`` (the admission-
     control knob — lower it to trade latency for a smaller cache
     footprint);
-  * worst-case block reservation fits: the sum of
-    ``ceil((prompt + max_new) / page)`` over running requests never exceeds
-    the pool.  Blocks are still *allocated* lazily as tokens are actually
-    produced (that is what the occupancy win measures), but reserving the
-    worst case up front means a mid-decode allocation can never fail — no
-    preemption/swap machinery needed.
+  * block reservation fits.  Two reservation policies:
+
+      - ``reserve="worst_case"`` (default): reserve
+        ``ceil((prompt + max_new) / page)`` at admission.  Blocks are
+        still *allocated* lazily, but a mid-decode allocation can never
+        fail — no preemption needed.  This is the PR-3 contract and what
+        every parity test not about preemption runs under.
+      - ``reserve="prompt"``: reserve only the blocks the prefill itself
+        needs.  The pool oversubscribes, admission packs more requests,
+        and mid-decode growth *can* fail — the engine then preempts the
+        lowest-priority live request (free pages, keep prompt + generated
+        prefix) and re-admits it later via re-prefill.  Per-(request,
+        step) sampling keys keep the resumed stream bit-identical.
+
+Requests evicted by the engine come back through :meth:`requeue` with a
+``not_before`` backoff stamp; :meth:`admit` skips requests still backing
+off and is head-of-line blocking among the *eligible* ones only — strict
+FCFS over eligible requests keeps admission deterministic without letting
+one backing-off request stall fresh traffic.
 
 Invariants here and in the allocator are locked down by the hypothesis
 suite in tests/test_paged_cache.py.
@@ -27,6 +40,7 @@ from __future__ import annotations
 from collections import deque
 
 from .cache import blocks_for_tokens as _blocks_for
+from .lifecycle import RequestError
 
 __all__ = ["FCFSScheduler", "plan_aware_live_tokens"]
 
@@ -69,16 +83,35 @@ class FCFSScheduler:
     the scheduler stamps ``slot`` and ``reserved_blocks`` onto them."""
 
     def __init__(self, *, page_size: int, max_slots: int,
-                 max_live_tokens: int, n_blocks_capacity: int):
+                 max_live_tokens: int, n_blocks_capacity: int,
+                 reserve: str = "worst_case"):
         if max_slots < 1:
             raise ValueError(f"max_slots={max_slots}")
+        if reserve not in ("worst_case", "prompt"):
+            raise ValueError(f"reserve={reserve!r} "
+                             f"(want 'worst_case' or 'prompt')")
         self.page = page_size
         self.max_slots = max_slots
+        self.reserve = reserve
+        # capacity_blocks is the *live* admission bound — fault injection
+        # shrinks/restores it with the allocator's quarantine; the
+        # configured capacity is what validate() rejects against, so a
+        # transient capacity drop never turns into a permanent rejection.
         self.capacity_blocks = n_blocks_capacity
+        self.capacity_blocks_configured = n_blocks_capacity
         cap_tokens = n_blocks_capacity * page_size
-        self.max_live_tokens = (
-            min(max_live_tokens, cap_tokens) if max_live_tokens else cap_tokens
-        )
+        if reserve == "worst_case":
+            self.max_live_tokens = (
+                min(max_live_tokens, cap_tokens) if max_live_tokens
+                else cap_tokens
+            )
+        else:
+            # prompt mode: the pool is *meant* to oversubscribe (that is
+            # what creates preemption pressure), so worst-case token sums
+            # are not clamped to pool tokens — the prefill-block
+            # reservation in _fits is the physical gate.  An explicit
+            # max_live_tokens still bounds admission as usual.
+            self.max_live_tokens = max_live_tokens or (1 << 62)
         self.waiting: deque = deque()
         self.running: dict = {}
         self._free_slots = list(range(max_slots - 1, -1, -1))
@@ -110,20 +143,47 @@ class FCFSScheduler:
     def validate(self, req) -> None:
         """Reject requests that could never be admitted (budget / pool)."""
         total = req.prompt_len + req.max_new_tokens
+        rid = getattr(req, "rid", None)
         if total > self.max_live_tokens:
-            raise ValueError(
+            raise RequestError(
+                "over_token_budget",
                 f"request needs {total} tokens but max_live_tokens="
-                f"{self.max_live_tokens}; it can never be admitted"
+                f"{self.max_live_tokens}; it can never be admitted",
+                rid=rid,
             )
-        if _blocks_for(total, self.page) > self.capacity_blocks:
-            raise ValueError(
+        if _blocks_for(total, self.page) > self.capacity_blocks_configured:
+            raise RequestError(
+                "over_pool_capacity",
                 f"request needs {_blocks_for(total, self.page)} blocks but "
-                f"the pool has {self.capacity_blocks}; it can never be "
-                f"admitted"
+                f"the pool has {self.capacity_blocks_configured}; it can "
+                f"never be admitted",
+                rid=rid,
             )
 
     def submit(self, req) -> None:
         self.validate(req)
+        self._insert(req)
+
+    def requeue(self, req) -> None:
+        """Put a preempted/restarted request back in the arrival order.
+
+        No re-validation: the request was admissible when first submitted
+        and its worst-case footprint never grows (the generated prefix is
+        part of ``prompt + max_new``).  Sorted insertion by (arrival_step,
+        rid) means a preempted request keeps its original queue position —
+        eviction does not also cost it its place in line.
+        """
+        self._insert(req)
+
+    def remove(self, req) -> bool:
+        """Drop a waiting request (cancellation/expiry before admission)."""
+        try:
+            self.waiting.remove(req)
+            return True
+        except ValueError:
+            return False
+
+    def _insert(self, req) -> None:
         # deterministic FCFS even when callers interleave submissions from
         # several producers within one arrival tick: the queue is kept
         # sorted by (arrival_step, rid), so admission order — and with it
@@ -141,31 +201,68 @@ class FCFSScheduler:
             i -= 1
         self.waiting.insert(i, req)
 
+    def _reserve_blocks_for(self, req) -> int:
+        total = req.prompt_len + req.max_new_tokens
+        if self.reserve == "worst_case":
+            return _blocks_for(total, self.page)
+        # prompt mode: reserve only what the (resume-aware) prefill writes;
+        # decode growth is accounted incrementally via grow()
+        return _blocks_for(getattr(req, "prefill_len", req.prompt_len),
+                           self.page)
+
     def _fits(self, req) -> bool:
         total = req.prompt_len + req.max_new_tokens
         return (
             bool(self._free_slots)
             and self._live_tokens + total <= self.max_live_tokens
-            and self._reserved_blocks + _blocks_for(total, self.page)
+            and self._reserved_blocks + self._reserve_blocks_for(req)
             <= self.capacity_blocks
         )
 
-    def admit(self) -> list:
-        """Pop FCFS head-of-queue requests while they fit; stamp slots."""
+    def admit(self, now_step: int = 0) -> list:
+        """Pop FCFS-eligible requests while they fit; stamp slots.
+
+        Requests whose ``not_before`` backoff stamp is in the future are
+        skipped (not popped); among the eligible remainder admission is
+        head-of-line blocking, preserving strict FCFS determinism.
+        """
         admitted = []
-        while self.waiting and self._fits(self.waiting[0]):
-            req = self.waiting.popleft()
+        i = 0
+        while i < len(self.waiting):
+            req = self.waiting[i]
+            if getattr(req, "not_before", 0) > now_step:
+                i += 1  # backing off — skip, keep queue position
+                continue
+            if not self._fits(req):
+                break  # head-of-line blocking among eligible requests
+            del self.waiting[i]
             total = req.prompt_len + req.max_new_tokens
             req.slot = self._free_slots.pop()
-            req.reserved_blocks = _blocks_for(total, self.page)
+            req.reserved_blocks = self._reserve_blocks_for(req)
             self._live_tokens += total
             self._reserved_blocks += req.reserved_blocks
             self.running[req.slot] = req
             admitted.append(req)
         return admitted
 
+    def grow(self, req, n_blocks: int = 1) -> None:
+        """Account lazy block growth beyond the admission reservation.
+
+        Under ``reserve="prompt"`` the engine allocates decode blocks the
+        admission never reserved; charging them here keeps ``_fits`` (and
+        with it the preemption pressure signal) truthful.  A no-op under
+        worst-case reservation, where growth is always pre-reserved.
+        """
+        if self.reserve == "worst_case":
+            return
+        if self.running.get(req.slot) is not req:
+            raise ValueError(f"request in slot {req.slot} is not running")
+        req.reserved_blocks += n_blocks
+        self._reserved_blocks += n_blocks
+
     def finish(self, req) -> None:
-        """Evict a finished request: release its slot and reservations."""
+        """Evict a finished (or preempted) request: release its slot and
+        reservations."""
         if self.running.get(req.slot) is not req:
             raise ValueError(f"request in slot {req.slot} is not running")
         del self.running[req.slot]

@@ -18,8 +18,20 @@ import types
 
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # CI installs hypothesis; locally only @given tests skip
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+    st = _StrategyStub()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
 
 from repro.serve import FCFSScheduler, PageAllocator
 
@@ -66,6 +78,82 @@ def test_allocator_conservation_and_no_double_alloc(n_blocks, ops):
         a.free(blocks)
     assert a.n_allocated == 0 and a.n_free == a.n_total
     assert ever_handed <= set(range(1, n_blocks))
+
+
+# -- quarantine (fault injection) + debug invariant checks --------------------------
+
+
+def test_quarantine_basic():
+    a = PageAllocator(10)          # 9 usable
+    held = a.alloc(3)
+    assert a.quarantine(4) == 4    # 4 of the 6 free blocks sidelined
+    assert a.n_quarantined == 4 and a.n_total == 5
+    assert a.n_free == 2 and a.n_allocated == 3
+    assert a.quarantine(10) == 2   # only free blocks can be taken
+    assert a.n_free == 0 and a.n_quarantined == 6
+    a.free(held)                   # freeing ignores quarantine entirely
+    assert a.n_free == 3
+    assert a.restore_quarantined(2) == 2
+    assert a.n_quarantined == 4 and a.n_free == 5
+    assert a.restore_quarantined() == 4   # None -> restore everything
+    assert a.n_quarantined == 0
+    assert a.n_free == a.n_total == 9
+    a.check_invariants()
+
+
+def test_free_rejects_duplicates_in_one_call():
+    a = PageAllocator(8)
+    got = a.alloc(2)
+    with pytest.raises(ValueError):
+        a.free([got[0], got[0]])
+    a.free(got)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_blocks=st.integers(2, 40),
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["alloc", "free", "quarantine", "restore"]),
+            st.integers(0, 12),
+        ),
+        max_size=80,
+    ),
+)
+def test_allocator_invariants_under_quarantine(n_blocks, ops, monkeypatch):
+    """check_invariants() (armed via REPRO_SERVE_CHECKS=1, as the serve
+    debug mode does) holds after arbitrary interleavings of alloc/free
+    with fault-injected quarantine/restore, and the three sets stay a
+    disjoint partition with conservation."""
+    monkeypatch.setenv("REPRO_SERVE_CHECKS", "1")
+    a = PageAllocator(n_blocks)
+    held: list[list[int]] = []
+    for kind, n in ops:
+        if kind == "alloc":
+            if a.can_alloc(n):
+                held.append(a.alloc(n))
+            else:
+                with pytest.raises(RuntimeError):
+                    a.alloc(n)
+        elif kind == "free":
+            if held:
+                a.free(held.pop(n % len(held)))
+        elif kind == "quarantine":
+            taken = a.quarantine(n)
+            assert taken <= n
+        else:
+            back = a.restore_quarantined(n if n else None)
+            assert back <= (n or n_blocks)
+        a.check_invariants()
+        # capacity shrinks exactly by what is quarantined
+        assert a.n_total == n_blocks - 1 - a.n_quarantined
+        assert a.n_free + a.n_allocated == a.n_total
+        assert a.n_allocated == sum(len(b) for b in held)
+    a.restore_quarantined()
+    for blocks in held:
+        a.free(blocks)
+    a.check_invariants()
+    assert a.n_free == a.n_total == n_blocks - 1
 
 
 # -- scheduler ---------------------------------------------------------------------

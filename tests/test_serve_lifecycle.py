@@ -1,0 +1,365 @@
+"""Robustness-layer tests: lifecycle, preemption parity, faults, snapshots.
+
+The acceptance gates of the fault-tolerant serving runtime:
+
+  * preemption parity — a pool sized to force multiple mid-generation
+    evictions (``reserve="prompt"`` oversubscription) produces greedy
+    outputs bit-identical to the oversized-pool run AND to the sequential
+    oracle, on both the single-shot and chunked-prefill paths;
+  * snapshot/restore — an engine killed mid-flight and rebuilt from its
+    snapshot finishes every request byte-identically; restores under a
+    different plan fingerprint are refused;
+  * fault soak — seeded random fault schedules (capacity drops, alloc
+    failures, delays, kills) leave every request terminal, surviving
+    outputs identical to the no-fault run, and the allocator whole
+    (checked with REPRO_SERVE_CHECKS=1 on every mutation).
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import apply_sparsity, get_config, reduce_config
+from repro.models import LMModel
+from repro.serve import (
+    CANCELLED,
+    DECODING,
+    EXPIRED,
+    FAILED,
+    FINISHED,
+    QUEUED,
+    TERMINAL_STATES,
+    ContinuousEngine,
+    EngineStallError,
+    FaultEvent,
+    FaultSchedule,
+    Request,
+    RequestError,
+    restore_engine,
+    run_sequential,
+    transition,
+)
+
+# a workload whose decode growth overflows a small pool: prompts reserve
+# 1+3+2+4+2 = 12 blocks at page 4, generations force +13 more
+SHAPES = [(4, 8), (12, 10), (8, 9), (16, 6), (6, 10)]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    cfg = apply_sparsity(cfg, pattern="rbgp4", sparsity=0.5,
+                         backend="xla_masked", min_dim=64)
+    model = LMModel(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def make_workload(model, shapes=SHAPES, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        {"rid": i, "prompt": rng.integers(
+            0, model.cfg.vocab_size, s).astype(np.int32),
+         "max_new_tokens": g}
+        for i, (s, g) in enumerate(shapes)
+    ]
+
+
+def run_engine(model, params, workload, **kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_request_len", 40)
+    eng = ContinuousEngine(model, params, **kw)
+    for r in workload:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    out = eng.drain()
+    return eng, out
+
+
+# -- state machine ------------------------------------------------------------------
+
+
+def test_transition_edges():
+    req = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    assert req.state == QUEUED
+    transition(req, "PREFILLING")
+    transition(req, "DECODING")
+    transition(req, "QUEUED")          # preemption edge
+    transition(req, "PREFILLING")
+    transition(req, "DECODING")
+    transition(req, FINISHED)
+    with pytest.raises(RuntimeError, match="illegal lifecycle transition"):
+        transition(req, "DECODING")    # terminal states are absorbing
+    req2 = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    with pytest.raises(RuntimeError, match="illegal"):
+        transition(req2, FINISHED)     # QUEUED cannot finish directly
+
+
+def test_request_error_codes(lm):
+    model, params = lm
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=16)
+    cases = [
+        (dict(prompt=np.zeros((0,), np.int32), max_new_tokens=2),
+         "bad_prompt"),
+        (dict(prompt=np.zeros(4, np.int32), max_new_tokens=0),
+         "bad_max_new_tokens"),
+        (dict(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+              deadline_steps=0), "bad_deadline"),
+        (dict(prompt=np.zeros(15, np.int32), max_new_tokens=8),
+         "too_long"),
+    ]
+    for kwargs, reason in cases:
+        with pytest.raises(RequestError) as ei:
+            eng.submit(**kwargs)
+        assert ei.value.reason == reason, (reason, ei.value.reason)
+        assert isinstance(ei.value, ValueError)   # old callers keep working
+    assert eng.stats["rejected"] == len(cases)
+    # a rejected submit consumes no rid and registers nothing
+    assert eng._next_rid == 0 and not eng.requests
+
+
+# -- preemption parity (acceptance gate) --------------------------------------------
+
+
+def test_preemption_parity(lm):
+    """Tight pool + prompt reservation forces >= 2 mid-generation
+    evictions; outputs must match the oversized pool and the oracle."""
+    model, params = lm
+    wl = make_workload(model)
+    eng_small, out_small = run_engine(model, params, wl,
+                                      reserve="prompt", n_blocks=11)
+    assert eng_small.stats["preemptions"] >= 2, eng_small.stats
+    assert eng_small.stats["resumed_prefills"] >= 2
+    eng_big, out_big = run_engine(model, params, wl)
+    assert eng_big.stats["preemptions"] == 0
+    ref = run_sequential(model, params, wl, cache_len=eng_big.gather_tokens)
+    for r in wl:
+        rid = r["rid"]
+        np.testing.assert_array_equal(out_small[rid], out_big[rid],
+                                      err_msg=f"rid {rid} small-vs-big")
+        np.testing.assert_array_equal(out_big[rid], ref[rid],
+                                      err_msg=f"rid {rid} big-vs-oracle")
+    for req in eng_small.finished.values():
+        assert req.state == FINISHED
+    # every page came back: allocator conservation after eviction churn
+    alloc = eng_small.kv.allocator
+    assert alloc.n_allocated == 0
+    assert alloc.n_free == alloc.n_total
+
+
+def test_preemption_parity_chunked(lm):
+    """Same gate through the chunked-prefill path: resumed requests
+    re-chunk prompt ++ prefix and still match the oracle."""
+    model, params = lm
+    wl = make_workload(model)
+    eng, out = run_engine(model, params, wl, reserve="prompt", n_blocks=11,
+                          prefill_chunk=4)
+    assert eng.stats["preemptions"] >= 2
+    ref = run_sequential(model, params, wl, cache_len=eng.gather_tokens)
+    for r in wl:
+        np.testing.assert_array_equal(out[r["rid"]], ref[r["rid"]],
+                                      err_msg=f"rid {r['rid']} chunked")
+    assert all(t["prefill_chunks"] <= 1 for t in eng.step_trace)
+
+
+def test_priority_orders_victims(lm):
+    """Higher-priority requests are evicted later: with one high-priority
+    request in the tight-pool workload, every eviction hits the others."""
+    model, params = lm
+    wl = make_workload(model)
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=4,
+                           max_request_len=40, reserve="prompt",
+                           n_blocks=11)
+    for r in wl:
+        eng.submit(r["prompt"], r["max_new_tokens"],
+                   priority=1 if r["rid"] == 1 else 0)
+    eng.drain()
+    assert eng.stats["preemptions"] >= 2
+    assert all(rid != 1 for _, rid, _ in eng.preempt_log)
+
+
+# -- deadlines / cancellation -------------------------------------------------------
+
+
+def test_deadline_expiry_releases_pages(lm):
+    model, params = lm
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=40)
+    rid_fast = eng.submit(np.arange(4, dtype=np.int32) % 7, 3)
+    rid_slow = eng.submit(np.arange(8, dtype=np.int32) % 7, 30,
+                          deadline_steps=5)
+    out = eng.drain()
+    fast, slow = eng.requests[rid_fast], eng.requests[rid_slow]
+    assert fast.state == FINISHED and len(out[rid_fast]) == 3
+    assert slow.state == EXPIRED
+    assert slow.error is not None and slow.error.reason == "deadline"
+    assert 0 < len(slow.tokens) < 30      # partial progress kept readable
+    assert eng.stats["expired"] == 1
+    alloc = eng.kv.allocator
+    assert alloc.n_allocated == 0 and alloc.n_free == alloc.n_total
+
+
+def test_cancel(lm):
+    model, params = lm
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=1,
+                           max_request_len=40)
+    rid_run = eng.submit(np.arange(4, dtype=np.int32) % 7, 20)
+    rid_wait = eng.submit(np.arange(4, dtype=np.int32) % 7, 5)
+    eng.step()   # rid_run admitted + prefilled; rid_wait queued (1 slot)
+    assert eng.requests[rid_run].state == DECODING
+    assert eng.cancel(rid_run)          # cancel mid-decode: frees the slot
+    assert eng.requests[rid_run].state == CANCELLED
+    assert eng.kv.allocator.n_allocated == 0
+    assert eng.cancel(rid_wait)         # cancel while still queued
+    assert eng.requests[rid_wait].state == CANCELLED
+    assert not eng.cancel(rid_run)      # already terminal -> False
+    assert not eng.cancel(999)          # unknown rid -> False
+    assert eng.idle and eng.stats["cancelled"] == 2
+
+
+def test_retries_exhausted_fails_request(lm):
+    """Allocation failures armed over many steps preempt the lone request
+    at every prefill attempt; bounded retries turn the loop into FAILED."""
+    model, params = lm
+    faults = FaultSchedule([FaultEvent(s, "alloc_fail", 2)
+                            for s in range(0, 12, 2)])
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=40, reserve="prompt",
+                           n_blocks=12, faults=faults, max_retries=3,
+                           preempt_backoff=0)
+    rid = eng.submit(np.arange(16, dtype=np.int32) % 7, 8)
+    eng.drain()
+    req = eng.requests[rid]
+    assert req.state == FAILED
+    assert req.error.reason == "retries_exhausted"
+    assert req.preemptions == eng.max_retries + 1
+    assert eng.stats["failed"] == 1
+    alloc = eng.kv.allocator
+    assert alloc.n_allocated == 0 and alloc.n_free == alloc.n_total
+
+
+# -- watchdog -----------------------------------------------------------------------
+
+
+def test_watchdog_raises_with_diagnostics(lm):
+    """Quarantining the whole pool stalls admission forever; the watchdog
+    raises a diagnostic instead of letting drain() spin to its fuse."""
+    model, params = lm
+    faults = FaultSchedule([FaultEvent(0, "capacity_drop", 100)])
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=40, faults=faults,
+                           max_idle_steps=10)
+    eng.submit(np.arange(4, dtype=np.int32) % 7, 3)
+    with pytest.raises(EngineStallError) as ei:
+        eng.drain()
+    diag = ei.value.diagnostics
+    assert diag["pool"]["n_free"] == 0
+    assert diag["pool"]["n_quarantined"] > 0
+    assert len(diag["waiting"]) == 1
+    assert diag["clock"] >= eng.max_idle_steps - 1
+
+
+# -- fault soak (smoke-sized; benchmarks/serve_faults.py runs the full one) ---------
+
+
+def test_fault_soak_small(lm):
+    model, params = lm
+    wl = make_workload(model)
+    _, baseline = run_engine(model, params, wl, reserve="prompt",
+                             n_blocks=13)
+    os.environ["REPRO_SERVE_CHECKS"] = "1"
+    try:
+        for seed in range(4):
+            faults = FaultSchedule.random(seed, horizon=24, n_events=4,
+                                          max_drop=3)
+            eng, out = run_engine(model, params, wl, reserve="prompt",
+                                  n_blocks=13, faults=faults,
+                                  preempt_backoff=0)
+            states = {r.rid: r.state for r in eng.requests.values()}
+            assert all(s in TERMINAL_STATES for s in states.values()), states
+            for req in eng.requests.values():
+                if req.state == FINISHED:
+                    np.testing.assert_array_equal(
+                        out[req.rid], baseline[req.rid],
+                        err_msg=f"seed {seed} rid {req.rid}")
+            alloc = eng.kv.allocator
+            alloc.check_invariants()
+            assert alloc.n_allocated == 0
+    finally:
+        os.environ.pop("REPRO_SERVE_CHECKS", None)
+
+
+# -- snapshot / restore (acceptance gate) -------------------------------------------
+
+
+def test_snapshot_restore_byte_identical(lm):
+    """Kill the engine mid-flight at several different steps; the restored
+    engine finishes every request byte-identically to the oracle."""
+    model, params = lm
+    wl = make_workload(model)
+    ref_eng, _ = run_engine(model, params, wl)
+    ref = run_sequential(model, params, wl, cache_len=ref_eng.gather_tokens)
+    for kill_at in (1, 4, 7):
+        eng = ContinuousEngine(model, params, page_size=4, max_slots=4,
+                               max_request_len=40)
+        for r in wl:
+            eng.submit(r["prompt"], r["max_new_tokens"])
+        for _ in range(kill_at):
+            eng.step()
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "engine.npz")
+            eng.snapshot(path)
+            del eng                      # "crash"
+            eng2 = restore_engine(path, model, params)
+            out = eng2.drain()
+        for r in wl:
+            np.testing.assert_array_equal(
+                out[r["rid"]], ref[r["rid"]],
+                err_msg=f"kill_at={kill_at} rid {r['rid']}")
+        assert all(r.state == FINISHED for r in eng2.finished.values())
+
+
+def test_snapshot_restore_preserves_terminal_states(lm):
+    model, params = lm
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=40)
+    rid_done = eng.submit(np.arange(4, dtype=np.int32) % 7, 2)
+    rid_cancel = eng.submit(np.arange(4, dtype=np.int32) % 7, 9)
+    rid_live = eng.submit(np.arange(8, dtype=np.int32) % 7, 4)
+    eng.step()
+    eng.cancel(rid_cancel)
+    eng.step()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "engine.npz")
+        eng.snapshot(path)
+        eng2 = restore_engine(path, model, params)
+        assert eng2.requests[rid_done].state == FINISHED
+        assert eng2.requests[rid_cancel].state == CANCELLED
+        assert eng2.requests[rid_live].state == QUEUED
+        out = eng2.drain()
+        np.testing.assert_array_equal(out[rid_done],
+                                      eng.requests[rid_done].tokens)
+        assert eng2.requests[rid_live].state == FINISHED
+        assert len(out[rid_live]) == 4
+
+
+def test_snapshot_refuses_plan_fingerprint_mismatch(lm):
+    model, params = lm
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=40)
+    eng.submit(np.arange(4, dtype=np.int32) % 7, 3)
+    eng.plan_fingerprint = "deadbeef"
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "engine.npz")
+        eng.snapshot(path)
+        with pytest.raises(RuntimeError, match="sparsity plan"):
+            restore_engine(path, model, params, plan_fingerprint="cafef00d")
+        # matching or absent fingerprints restore fine
+        eng2 = restore_engine(path, model, params,
+                              plan_fingerprint="deadbeef")
+        assert len(eng2.requests) == 1
+        eng3 = restore_engine(path, model, params)
+        assert len(eng3.requests) == 1

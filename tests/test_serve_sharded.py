@@ -136,6 +136,37 @@ print("SHARDED-SERVE-OK")
 """)
 
 
+def test_sharded_preemption_parity_and_victim_trace():
+    """Preemption under pool pressure on the sharded engine: the tight
+    pool forces >= 2 mid-generation evictions, outputs still replay the
+    sequential oracle bit-for-bit, and the (clock, rid, kind) eviction
+    trace — victim choice is host-side, keyed (priority, arrival, rid) —
+    is identical across mesh shapes."""
+    _run_child(r"""
+model, params = build("tinyllama-1.1b")
+wl = workload([(4, 8), (12, 10), (8, 9), (16, 6), (6, 10)],
+              model.cfg.vocab_size)
+kw = dict(page_size=4, max_slots=4, max_request_len=40,
+          reserve="prompt", n_blocks=11)
+
+traces = {}
+for tag, axes in (("dp2-tp2", (2, 2)), ("tp4", (1, 4)), ("dp4", (4, 1))):
+    eng = ShardedContinuousEngine(model, params, make_serve_mesh(*axes),
+                                  **kw)
+    check_parity(eng, wl, model, f"preempt-{tag}")
+    assert eng.stats["preemptions"] >= 2, (tag, eng.stats)
+    assert eng.stats["resumed_prefills"] >= 2, (tag, eng.stats)
+    alloc = eng.kv.allocator
+    assert alloc.n_allocated == 0 and alloc.n_free == alloc.n_total, tag
+    traces[tag] = list(eng.preempt_log)
+
+# deterministic victim ordering: TP x EP preempts identically regardless
+# of how the mesh is carved up
+assert traces["dp2-tp2"] == traces["tp4"] == traces["dp4"], traces
+print("SHARDED-SERVE-OK")
+""")
+
+
 def test_disaggregated_engine_parity_and_handoff():
     """Prefill/decode roles on disjoint 2-device submeshes: every request
     crosses one explicit KV-page handoff and still replays the oracle."""
