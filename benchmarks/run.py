@@ -20,7 +20,8 @@ import json
 
 
 SECTIONS = ("table1", "table2", "plan", "table3", "kernels", "stacked",
-            "chain", "serve", "serve_sharded", "serve_faults", "roofline")
+            "chain", "serve", "serve_sharded", "serve_faults", "prefix",
+            "roofline")
 
 
 def main() -> None:
@@ -94,6 +95,11 @@ def main() -> None:
 
         print("\n# === Fault soak (seeded fault schedules, recompute parity) ===")
         rows += serve_faults.run(print)
+    if want("prefix"):
+        from . import serve_prefix
+
+        print("\n# === Prefix sharing (refcounted COW pages + radix index) ===")
+        rows += serve_prefix.run(print)
     if want("roofline"):
         from . import roofline
 

@@ -1,0 +1,181 @@
+"""Prefix-sharing benchmark: shared-system-prompt serving traffic.
+
+The production shape prefix sharing exists for: every request carries the
+same long system prompt plus a short private tail.  Two engines run the
+identical workload on the identical page pool — sharing off vs on — and
+the run gates on the capacity contract from serve/README.md:
+
+  * GREEDY PARITY — shared and unshared outputs are bit-identical per
+    request (sharing moves bits, never recomputes them);
+  * HIT RATE — with a warm radix index, >= 80% of the pages the shared
+    requests touch at admission come from the index (the system prompt
+    dominates each request's footprint by construction);
+  * CONCURRENCY — peak concurrently admitted requests at the fixed pool
+    is >= 2x the unshared engine's (hit-discounted reservations are what
+    turn resident-page reuse into admission headroom).
+
+CSV rows: name,us_per_call(=us per generated token),derived.
+Standalone:
+  PYTHONPATH=src python -m benchmarks.serve_prefix --json SERVE_PREFIX.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+PAGE = 4
+N_BLOCKS = 25          # 24 usable: two unshared requests block the third
+SLOTS = 12
+MAX_LEN = 48
+SYSTEM_TOKENS = 36     # 9 full pages of shared system prompt
+TAIL_TOKENS = 3        # private user tail (keeps the last page partial)
+MAX_NEW = 4
+N_REQUESTS = 10
+SEED = 0
+
+
+def _build(seed):
+    import jax
+
+    from repro.configs import apply_sparsity, get_config, reduce_config
+    from repro.models import LMModel
+
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    cfg = apply_sparsity(cfg, pattern="rbgp4", sparsity=0.5, backend="auto",
+                         min_dim=64)
+    model = LMModel(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _workload(cfg, seed):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, cfg.vocab_size, SYSTEM_TOKENS).astype(np.int32)
+    reqs = []
+    for i in range(N_REQUESTS):
+        tail = rng.integers(1, cfg.vocab_size, TAIL_TOKENS).astype(np.int32)
+        reqs.append({"rid": i,
+                     "prompt": np.concatenate([system, tail]),
+                     "max_new_tokens": MAX_NEW})
+    return system, reqs
+
+
+def _drain(model, params, workload, *, prefix_cache, warm=None):
+    from repro.serve import ContinuousEngine
+
+    eng = ContinuousEngine(model, params, page_size=PAGE, max_slots=SLOTS,
+                           max_request_len=MAX_LEN, n_blocks=N_BLOCKS,
+                           prefix_cache=prefix_cache)
+    if warm is not None:
+        # seed the index: one request over the bare system prompt, drained
+        # before the wave arrives (a served multi-turn system prompt)
+        eng.submit(warm.copy(), 1)
+        eng.drain()
+    for r in workload:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    peak = 0
+    t0 = time.perf_counter()
+    while not eng.idle:
+        eng.step()
+        peak = max(peak, eng.scheduler.n_running)
+    dt = time.perf_counter() - t0
+    out = {r.rid: r.generated for r in eng.requests.values()
+           if r.rid < N_REQUESTS}
+    return eng, out, peak, dt
+
+
+def run(print_fn=print, seed: int = SEED) -> list[tuple]:
+    os.environ["REPRO_SERVE_CHECKS"] = "1"
+
+    import numpy as np
+
+    from repro.serve.cache import blocks_for_tokens
+
+    model, params = _build(seed)
+    system, workload = _workload(model.cfg, seed)
+    n_gen = N_REQUESTS * MAX_NEW
+    per_req_blocks = blocks_for_tokens(SYSTEM_TOKENS + TAIL_TOKENS + MAX_NEW,
+                                       PAGE)
+    print_fn(f"# workload: {N_REQUESTS} requests sharing a "
+             f"{SYSTEM_TOKENS}-token system prompt (+{TAIL_TOKENS} private "
+             f"tail, {MAX_NEW} new); pool {N_BLOCKS} blocks x {PAGE} "
+             f"tokens, {per_req_blocks} blocks/request unshared")
+
+    eng_off, out_off, peak_off, dt_off = _drain(
+        model, params, workload, prefix_cache=False, warm=system)
+    eng_on, out_on, peak_on, dt_on = _drain(
+        model, params, workload, prefix_cache=True, warm=system)
+
+    # gate 1: greedy parity, shared vs unshared
+    for rid in sorted(out_off):
+        if list(out_on[rid]) != list(out_off[rid]):
+            raise AssertionError(
+                f"request {rid}: shared {out_on[rid]} != unshared "
+                f"{out_off[rid]} — sharing changed bits")
+    print_fn(f"# parity: {len(out_off)} requests bit-identical "
+             f"shared vs unshared")
+
+    # gate 2: page hit rate over the wave's admission-time footprint
+    s = eng_on.stats
+    touched = N_REQUESTS * blocks_for_tokens(SYSTEM_TOKENS + TAIL_TOKENS,
+                                             PAGE)
+    hit_rate = s["prefix_hits"] / touched
+    print_fn(f"# hit rate: {s['prefix_hits']}/{touched} prompt pages from "
+             f"the index ({hit_rate:.1%}); "
+             f"{int(s['prefix_hit_tokens'])} tokens never re-prefilled, "
+             f"{int(s['prefix_cow_copies'])} COW copies, "
+             f"{int(s['prefix_evictions'])} evictions")
+    if hit_rate < 0.8:
+        raise AssertionError(f"page hit rate {hit_rate:.1%} < 80%")
+
+    # gate 3: >= 2x concurrently admitted requests at the fixed pool
+    print_fn(f"# concurrency: peak {peak_on} admitted shared vs "
+             f"{peak_off} unshared at {N_BLOCKS - 1} usable blocks")
+    if peak_on < 2 * peak_off:
+        raise AssertionError(
+            f"peak concurrency {peak_on} < 2x unshared ({peak_off})")
+
+    alloc = eng_on.kv.allocator
+    alloc.check_invariants()
+    idx_blocks = len(eng_on.prefix.blocks())
+    assert alloc.n_allocated == idx_blocks, \
+        f"leak: {alloc.n_allocated} allocated vs {idx_blocks} indexed"
+
+    per_tok_off = dt_off / max(n_gen, 1) * 1e6
+    per_tok_on = dt_on / max(n_gen, 1) * 1e6
+    return [
+        ("serve_prefix/unshared_tok", per_tok_off, peak_off),
+        ("serve_prefix/shared_tok", per_tok_on, peak_on),
+        ("serve_prefix/hit_rate", 0.0, hit_rate),
+        ("serve_prefix/hit_tokens", 0.0, s["prefix_hit_tokens"]),
+        ("serve_prefix/cow_copies", 0.0, s["prefix_cow_copies"]),
+        ("serve_prefix/shared_prefills", 0.0, s["shared_prefills"]),
+        ("serve_prefix/peak_concurrency_gain", 0.0,
+         peak_on / max(peak_off, 1)),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = run(print, seed=args.seed)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived:.4f}")
+    if args.json:
+        payload = {
+            "us_per_call": {name: us for name, us, _ in rows},
+            "derived": {name: derived for name, _, derived in rows},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

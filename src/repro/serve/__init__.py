@@ -1,6 +1,7 @@
 """Serving subsystem: continuous batching + paged KV cache (see README.md)."""
 from .cache import PageAllocator, PagedKVCache, pack_prefill_pages
-from .chunked import ChunkedPrefillState, chunk_cache_len, trim_cache
+from .chunked import ChunkedPrefillState, chunk_cache_len, slice_cache, \
+    trim_cache
 from .distributed import DisaggregatedEngine, ShardedContinuousEngine
 from .engine import (
     ContinuousEngine,
@@ -25,14 +26,16 @@ from .lifecycle import (
     RequestError,
     transition,
 )
+from .prefix import PrefixIndex, PrefixPlan
 from .sampling import SamplingParams, greedy, sample_token
 from .scheduler import FCFSScheduler, plan_aware_live_tokens
 from .snapshot import SNAPSHOT_VERSION, restore_engine, save_engine
 
 __all__ = [
     "PageAllocator", "PagedKVCache", "pack_prefill_pages",
-    "ChunkedPrefillState", "chunk_cache_len", "trim_cache",
+    "ChunkedPrefillState", "chunk_cache_len", "slice_cache", "trim_cache",
     "FCFSScheduler", "plan_aware_live_tokens",
+    "PrefixIndex", "PrefixPlan",
     "SamplingParams", "greedy", "sample_token",
     "Request", "ServingEngine", "ContinuousEngine", "StaticEngine",
     "ShardedContinuousEngine", "DisaggregatedEngine",

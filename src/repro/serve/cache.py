@@ -55,23 +55,34 @@ def blocks_for_tokens(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list allocator over ``n_blocks`` fixed-size cache blocks.
+    """Refcounted free-list allocator over ``n_blocks`` fixed-size blocks.
 
     Block 0 is reserved (the trash block) and never allocated, so
     ``n_total == n_blocks - 1``.  Invariants (property-tested in
     tests/test_paged_cache.py):
 
-      * no block is ever handed out twice without an intervening free;
+      * no block is ever handed out twice without an intervening release;
       * ``n_free + n_allocated == n_total`` at all times;
-      * freeing returns exactly the blocks that were allocated.
+      * every allocated block has refcount >= 1, every other block 0;
+      * a block returns to the free list exactly when its refcount hits 0.
+
+    Prefix sharing (repro.serve.prefix) adds readers to resident blocks
+    via :meth:`share` and drops them via :meth:`release`; :meth:`free`
+    keeps the strict single-owner semantics (it raises on a block with
+    other live readers — the "no free while referenced" property).
 
     Fault injection (repro.serve.faults) can *quarantine* free blocks —
     a reversible capacity drop modelling a neighbouring tenant grabbing
-    HBM or a device loss.  Quarantined blocks leave ``n_total`` (so the
-    conservation invariant holds with the shrunken pool) and return via
-    :meth:`restore_quarantined`.  With ``REPRO_SERVE_CHECKS=1`` every
-    mutation re-verifies the whole invariant set via
-    :meth:`check_invariants`.
+    HBM or a device loss.  Only FREE blocks are taken, so a shared page
+    with live readers can never be yanked.  Quarantined blocks leave
+    ``n_total`` (so the conservation invariant holds with the shrunken
+    pool) and return via :meth:`restore_quarantined` in sorted order —
+    restore order decides every subsequently handed-out block id, so it
+    must be a function of the fault schedule, not of Python set iteration
+    order.  With ``REPRO_SERVE_CHECKS=1`` every mutation re-verifies the
+    whole invariant set via :meth:`check_invariants` and records the
+    handed-out block ids in :attr:`trace` (the fault-soak determinism
+    tests compare traces across runs).
     """
 
     def __init__(self, n_blocks: int):
@@ -86,6 +97,9 @@ class PageAllocator:
         self._free = list(range(n_blocks - 1, 0, -1))
         self._allocated: set[int] = set()
         self._quarantined: set[int] = set()
+        self._refs: dict[int, int] = {}
+        # block-id hand-out trace, recorded under REPRO_SERVE_CHECKS=1
+        self.trace: list[int] = []
 
     @property
     def n_total(self) -> int:
@@ -106,6 +120,10 @@ class PageAllocator:
     def can_alloc(self, n: int) -> bool:
         return n <= self.n_free
 
+    def refcount(self, block: int) -> int:
+        """Live readers of ``block`` (0 for free/quarantined blocks)."""
+        return self._refs.get(block, 0)
+
     def alloc(self, n: int) -> list[int]:
         if n < 0:
             raise ValueError(f"alloc({n})")
@@ -118,18 +136,67 @@ class PageAllocator:
             )
         blocks = [self._free.pop() for _ in range(n)]
         self._allocated.update(blocks)
+        for b in blocks:
+            self._refs[b] = 1
         if _checks_enabled():
+            self.trace.extend(blocks)
             self.check_invariants()
         return blocks
 
+    def share(self, blocks: Iterable[int]) -> None:
+        """Add one reader to each (already allocated) block."""
+        blocks = list(blocks)
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"share of non-allocated block {b}")
+        for b in blocks:
+            self._refs[b] += 1
+        if _checks_enabled():
+            self.check_invariants()
+
+    def release(self, blocks: Iterable[int]) -> list[int]:
+        """Drop one reader from each block; returns the blocks whose
+        refcount hit 0 (now back on the free list) so the caller can
+        reset exactly those blocks' position marks — blocks with
+        remaining readers must keep their data."""
+        blocks = list(blocks)
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate blocks in release({blocks})")
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"release of non-allocated block {b}")
+        freed = []
+        for b in blocks:
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._allocated.discard(b)
+                self._free.append(b)
+                freed.append(b)
+        if _checks_enabled():
+            self.check_invariants()
+        return freed
+
     def free(self, blocks: Iterable[int]) -> None:
+        """Strict single-owner free: every block must have refcount 1.
+
+        Freeing a block another reader still holds is a lifecycle bug
+        (the reader's attention would silently read recycled data), so it
+        raises instead of decrementing — callers that may hold shared
+        blocks go through :meth:`release`.
+        """
         blocks = list(blocks)
         if len(set(blocks)) != len(blocks):
             raise ValueError(f"duplicate blocks in free({blocks})")
         for b in blocks:
             if b not in self._allocated:
                 raise ValueError(f"double free / foreign block {b}")
+            if self._refs[b] != 1:
+                raise ValueError(
+                    f"free of block {b} with refcount {self._refs[b]} "
+                    f"(live readers remain; use release())")
         for b in blocks:
+            del self._refs[b]
             self._allocated.discard(b)
             self._free.append(b)
         if _checks_enabled():
@@ -151,11 +218,18 @@ class PageAllocator:
         return take
 
     def restore_quarantined(self, n: Optional[int] = None) -> int:
-        """Return up to ``n`` quarantined blocks (all when ``n`` is None)."""
+        """Return up to ``n`` quarantined blocks (all when ``n`` is None).
+
+        Restored in sorted block-id order: a ``set.pop()`` here would make
+        the free-list tail — and with it every block id handed out after
+        the restore — depend on Python set iteration order rather than on
+        the fault schedule, breaking run-to-run block-trace determinism.
+        """
         give = len(self._quarantined) if n is None \
             else min(max(n, 0), len(self._quarantined))
-        for _ in range(give):
-            self._free.append(self._quarantined.pop())
+        for b in sorted(self._quarantined)[:give]:
+            self._quarantined.discard(b)
+            self._free.append(b)
         if _checks_enabled():
             self.check_invariants()
         return give
@@ -165,8 +239,9 @@ class PageAllocator:
         """Verify the full allocator invariant set; raise on any violation.
 
         free ∪ allocated ∪ quarantined must exactly partition the non-trash
-        block ids, with no duplicates and block 0 never present.  Cheap at
-        pool sizes (sets over a few hundred ints); gated behind
+        block ids, with no duplicates and block 0 never present; refcounts
+        must cover exactly the allocated set, each >= 1.  Cheap at pool
+        sizes (sets over a few hundred ints); gated behind
         ``REPRO_SERVE_CHECKS=1`` on the hot paths, but always callable.
         """
         free = self._free
@@ -190,6 +265,13 @@ class PageAllocator:
             raise AssertionError(
                 f"lost/foreign blocks: missing {sorted(universe - union)}, "
                 f"extra {sorted(union - universe)}")
+        if set(self._refs) != self._allocated:
+            raise AssertionError(
+                f"refcount keys {sorted(self._refs)} != allocated "
+                f"{sorted(self._allocated)}")
+        bad = {b: c for b, c in self._refs.items() if c < 1}
+        if bad:
+            raise AssertionError(f"allocated blocks with refcount < 1: {bad}")
 
 
 def pack_prefill_pages(cache, n_blocks: int, page_size: int):
@@ -265,11 +347,24 @@ class PagedKVCache:
     # -- block tables ------------------------------------------------------------
     def block_table(self, block_lists: list[Optional[list[int]]],
                     max_blocks: int) -> np.ndarray:
-        """(B, max_blocks) int32, -1-padded; None rows are inactive slots."""
+        """(B, max_blocks) int32, -1-padded; None rows are inactive slots.
+
+        ``None`` and ``[]`` are distinct on purpose: ``None`` marks an
+        inactive slot (its row reads the trash block through the -1 pads),
+        while an *active* row with zero blocks is a bookkeeping bug — a
+        live decode row always holds at least the block its input position
+        lands in.  Raising here surfaces that bug at table build instead
+        of as a silent trash-block read.
+        """
         bt = np.full((len(block_lists), max_blocks), -1, np.int32)
         for i, blocks in enumerate(block_lists):
-            if blocks:
-                bt[i, : len(blocks)] = blocks
+            if blocks is None:
+                continue
+            if len(blocks) == 0:
+                raise ValueError(
+                    f"block table row {i} is active but holds no blocks "
+                    f"(inactive slots must be None, not [])")
+            bt[i, : len(blocks)] = blocks
         return bt
 
     # -- prefill scatter -----------------------------------------------------------
@@ -305,6 +400,45 @@ class PagedKVCache:
                        self.pools["scan"], paged["scan"]),
             "tail": [tm(lambda p, c: scatter(p, c, False), pl, cl)
                      for pl, cl in zip(self.pools["tail"], paged["tail"])],
+        }
+
+    # -- prefix gather ---------------------------------------------------------------
+    def read_pages(self, cache, blocks: list[int]):
+        """Fill the first ``len(blocks) * page`` slots of a batch-1
+        contiguous cache from the pools — the exact inverse of
+        :meth:`write_pages` over those blocks.
+
+        This is the shared-prefix gather: a request whose prompt head is
+        already resident copies the matched blocks into its temp prefill
+        cache and recomputes only the suffix.  Gather + scatter move bits
+        (``astype`` between identical dtypes is the identity), so the
+        suffix prefill sees exactly the cache state the full prefill
+        would have produced — the bit-exactness argument for sharing.
+        """
+        if not blocks:
+            return cache
+        idx = jnp.asarray(blocks, jnp.int32)
+        span = len(blocks) * self.page
+
+        def gather(leaf, pool, scan: bool):
+            # pool (nb, P, ...) -> (1, span, ...)  |  scanned likewise
+            if scan:
+                sel = pool[:, idx].astype(leaf.dtype)
+                sel = sel.reshape(sel.shape[0], 1, span, *sel.shape[3:])
+                return jax.lax.dynamic_update_slice_in_dim(
+                    leaf, sel, 0, axis=2)
+            sel = pool[idx].astype(leaf.dtype)
+            sel = sel.reshape(1, span, *sel.shape[2:])
+            return jax.lax.dynamic_update_slice_in_dim(leaf, sel, 0, axis=1)
+
+        tm = jax.tree_util.tree_map
+        return {
+            "head": [tm(lambda l, p: gather(l, p, False), cl, pl)
+                     for cl, pl in zip(cache["head"], self.pools["head"])],
+            "scan": tm(lambda l, p: gather(l, p, True),
+                       cache["scan"], self.pools["scan"]),
+            "tail": [tm(lambda l, p: gather(l, p, False), cl, pl)
+                     for cl, pl in zip(cache["tail"], self.pools["tail"])],
         }
 
     # -- recycle -------------------------------------------------------------------

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ChunkedPrefillState", "chunk_cache_len", "trim_cache"]
+__all__ = ["ChunkedPrefillState", "chunk_cache_len", "mask_cache_rows",
+           "slice_cache", "trim_cache"]
 
 
 def chunk_cache_len(max_request_len: int, page_size: int, chunk: int) -> int:
@@ -46,26 +47,73 @@ def chunk_cache_len(max_request_len: int, page_size: int, chunk: int) -> int:
     return max(blocks * page_size, -(-max_request_len // chunk) * chunk)
 
 
-def trim_cache(cache: Any, n: int) -> Any:
-    """Slice a contiguous prefill cache to its first ``n`` slots.
+def slice_cache(cache: Any, start: int, end: int) -> Any:
+    """Slice a contiguous prefill cache to slots ``[start, end)``.
 
     ``cache`` is the engine temp-cache tree ({"head": [...], "scan": {...},
     "tail": [...]}; leaves (1, L, ...), scanned leaves (T, 1, L, ...)).
-    Slots past the prompt hold position ``-1`` (ragged-chunk pads / never
-    written), so trimming them cannot drop live data.
+    The prefix-sharing scatter uses a non-zero ``start`` to extract only
+    the privately-written page span (the leading shared pages live in
+    blocks the request must never write).
     """
 
     def cut(leaf, scan: bool):
         ax = 2 if scan else 1
-        if leaf.shape[ax] <= n:
+        if start == 0 and leaf.shape[ax] <= end:
             return leaf
-        return jax.lax.slice_in_dim(leaf, 0, n, axis=ax)
+        return jax.lax.slice_in_dim(leaf, start, min(end, leaf.shape[ax]),
+                                    axis=ax)
 
     tm = jax.tree_util.tree_map
     return {
         "head": [tm(lambda l: cut(l, False), pl) for pl in cache["head"]],
         "scan": tm(lambda l: cut(l, True), cache["scan"]),
         "tail": [tm(lambda l: cut(l, False), pl) for pl in cache["tail"]],
+    }
+
+
+def trim_cache(cache: Any, n: int) -> Any:
+    """Slice a contiguous prefill cache to its first ``n`` slots.
+
+    Slots past the prompt hold position ``-1`` (ragged-chunk pads / never
+    written), so trimming them cannot drop live data.
+    """
+    return slice_cache(cache, 0, n)
+
+
+def mask_cache_rows(cache: Any, start: int, end: int) -> Any:
+    """Reset the position marks of cache slots ``[start, end)`` to ``-1``.
+
+    Needed by prefix-sharing prefill: a gathered prefix fills slots the
+    suffix chunks are about to REWRITE (the chunk-aligned resume point
+    rounds down past the shared span's edge).  ``prefill_chunk``'s S > 1
+    attention attends over (old cache ++ current chunk), so a rewrite-
+    window slot left with a valid position would contribute its key twice
+    — once from the stale cache copy, once in-chunk.  Masking the marks
+    reproduces exactly the pre-chunk state of a from-scratch chunked run
+    (those slots held ``-1`` there); the K/V payload rows need no
+    clearing, a ``-1`` position is an exact-zero softmax contribution.
+    Only integer leaves (the position marks) are touched.
+    """
+    if start >= end:
+        return cache
+
+    def mask(leaf, scan: bool):
+        if not jnp.issubdtype(leaf.dtype, jnp.integer):
+            return leaf
+        ax = 2 if scan else 1
+        hi = min(end, leaf.shape[ax])
+        if hi <= start:
+            return leaf
+        idx = [slice(None)] * leaf.ndim
+        idx[ax] = slice(start, hi)
+        return leaf.at[tuple(idx)].set(-1)
+
+    tm = jax.tree_util.tree_map
+    return {
+        "head": [tm(lambda l: mask(l, False), pl) for pl in cache["head"]],
+        "scan": tm(lambda l: mask(l, True), cache["scan"]),
+        "tail": [tm(lambda l: mask(l, False), pl) for pl in cache["tail"]],
     }
 
 

@@ -42,6 +42,8 @@ real meshes where throughput matters more than replaying the oracle.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.parallel.constrain import activation_mesh
 from repro.parallel.sharding import param_sharding_tree
@@ -165,3 +167,14 @@ class DisaggregatedEngine(ShardedContinuousEngine):
             return paged
         return jax.tree_util.tree_map(jax.device_put, paged,
                                       self.kv.shardings)
+
+    def _localize(self, cache):
+        """Reverse handoff for prefix sharing: a gathered prefix is read
+        from the *decode-role* pools, but the suffix chunk program runs on
+        the prefill mesh.  Round-trip through host memory so the leaves
+        arrive uncommitted and the prefill-mesh program places them freely
+        — bits move, nothing is recomputed, so the shared-prefill parity
+        argument is unchanged."""
+        return jax.tree_util.tree_map(
+            lambda leaf: jnp.asarray(np.asarray(leaf)), cache
+        )

@@ -48,12 +48,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cache import PagedKVCache, blocks_for_tokens, pack_prefill_pages
-from .chunked import ChunkedPrefillState, chunk_cache_len, run_one_chunk, \
-    trim_cache
+from .chunked import ChunkedPrefillState, chunk_cache_len, \
+    mask_cache_rows, run_one_chunk, slice_cache
 from .faults import FaultInjector, FaultSchedule
 from .lifecycle import (CANCELLED, DECODING, EXPIRED, FAILED, FINISHED,
                         PREFILLING, QUEUED, TERMINAL_STATES,
                         EngineStallError, RequestError, transition)
+from .prefix import PrefixIndex
 from .sampling import SamplingParams, sample_token
 from .scheduler import FCFSScheduler
 
@@ -73,6 +74,8 @@ class Request:
     # runtime state
     generated: list = dataclasses.field(default_factory=list)
     blocks: list = dataclasses.field(default_factory=list)
+    n_shared: int = 0                # leading blocks[:n_shared] are shared
+    cow_src: Optional[int] = None    # pinned copy-on-write source block
     slot: Optional[int] = None
     reserved_blocks: int = 0
     state: str = QUEUED              # lifecycle.py state machine
@@ -280,6 +283,19 @@ class ContinuousEngine(ServingEngine):
                       rids / pool occupancy / queue diagnostics) is raised.
     faults:           optional :class:`FaultSchedule` (or prepared
                       :class:`FaultInjector`) applied at each step.
+    prefix_cache:     enable prefix sharing (see repro.serve.prefix): a
+                      radix index over finished prompts' full pages lets a
+                      new request reuse every resident page its prompt
+                      head matches — prefill recomputes only the suffix,
+                      block tables mix shared (read-only) and private
+                      blocks, the partial tail page is copied-on-write,
+                      and cold cached prefixes are LRU-evicted under pool
+                      pressure.  Greedy outputs are bit-identical with
+                      sharing on or off (pinned in tests/
+                      test_prefix_cache.py).  Default off: the index
+                      intentionally keeps pages allocated after requests
+                      finish, which changes pool-occupancy accounting
+                      some callers assert on.
     """
 
     kind = "continuous"
@@ -291,7 +307,7 @@ class ContinuousEngine(ServingEngine):
                  cache_dtype=jnp.float32, plan=None,
                  reserve: str = "worst_case", max_retries: int = 32,
                  preempt_backoff: int = 1, max_idle_steps: int = 1000,
-                 faults=None):
+                 faults=None, prefix_cache: bool = False):
         super().__init__(model, params, cache_dtype=cache_dtype)
         self.page = page_size
         self.max_slots = max_slots
@@ -321,14 +337,18 @@ class ContinuousEngine(ServingEngine):
         self.plan = plan
         self.plan_fingerprint = plan.fingerprint() if plan is not None \
             else None
+        self.prefix = PrefixIndex(page_size) if prefix_cache else None
         # everything snapshot.restore_engine needs to rebuild this engine
+        # (the radix index itself restores EMPTY — snapshots carry no KV
+        # pages, so there is nothing resident to re-index; re-prefills
+        # repopulate it)
         self._init_kw = dict(
             page_size=page_size, max_slots=max_slots, n_blocks=n_blocks,
             max_live_tokens=max_live_tokens,
             max_request_len=self.max_request_len,
             prefill_chunk=prefill_chunk, reserve=reserve,
             max_retries=max_retries, preempt_backoff=preempt_backoff,
-            max_idle_steps=max_idle_steps,
+            max_idle_steps=max_idle_steps, prefix_cache=prefix_cache,
         )
         if plan is not None and max_live_tokens > 0:
             from repro.sparsity import model_matmul_shapes
@@ -354,12 +374,18 @@ class ContinuousEngine(ServingEngine):
             max_live_tokens=max_live_tokens,
             n_blocks_capacity=self.kv.allocator.n_total,
             reserve=reserve,
+            prefix_probe=self._prefix_probe if prefix_cache else None,
+            pinned_external=(self._prefix_pinned_external
+                             if prefix_cache else None),
         )
         self.prefill_params = self.params
         self._jit_fns()
         self.stats.update(block_steps=0, allocated_block_steps=0,
                           live_token_steps=0, peak_allocated_blocks=0,
-                          prefill_chunks=0, decode_row_steps=0)
+                          prefill_chunks=0, decode_row_steps=0,
+                          prefix_hits=0, prefix_hit_tokens=0,
+                          prefix_misses=0, prefix_evictions=0,
+                          prefix_cow_copies=0, shared_prefills=0)
 
     # -- hooks the sharded engines override ------------------------------------------
     def _make_kv(self, n_blocks: int) -> PagedKVCache:
@@ -386,6 +412,124 @@ class ContinuousEngine(ServingEngine):
         """Identity in the single-role engines; the disaggregated engine
         overrides this with the cross-mesh ``device_put`` KV-page handoff."""
         return paged
+
+    def _localize(self, cache):
+        """Identity in the single-role engines; the disaggregated engine
+        overrides this to move a prefix gather (read from the decode-role
+        pools) onto the prefill role before the suffix chunk runs."""
+        return cache
+
+    # -- prefix sharing ----------------------------------------------------------------
+    def _release_blocks(self, blocks: list) -> None:
+        """Drop this engine's reference on ``blocks``; blocks whose last
+        reader left go back to the free list with their position marks
+        reset.  Blocks other readers (the index, sharing requests) still
+        hold keep their data — the refcounted replacement for the old
+        unconditional reset + free."""
+        freed = self.kv.allocator.release(blocks)
+        self.kv.reset_blocks(freed)
+
+    def _release_request_blocks(self, req: Request) -> None:
+        """Release everything ``req`` holds: its block list (shared prefix
+        + private pages) and, mid-prefill, its pinned COW source."""
+        if req.cow_src is not None:
+            self._release_blocks([req.cow_src])
+            req.cow_src = None
+        if req.blocks:
+            self._release_blocks(req.blocks)
+            req.blocks = []
+        req.n_shared = 0
+
+    def _prefix_probe(self, req: Request) -> tuple:
+        """Scheduler admission probe: (reservation discount, new pins).
+
+        The discount counts only the read-only shared blocks (the COW
+        source still costs a private block, so it never discounts).
+        ``new_pins`` counts matched blocks currently held by the index
+        alone — claiming stops them being evictable, so admission must
+        charge them against pool capacity.  Read-only: no LRU stamping,
+        no refcounting (the claim after admission does both).
+        """
+        plan = self.prefix.plan(req.prefill_tokens, None)
+        matched = set(plan.blocks)
+        if plan.cow_src is not None:
+            matched.add(plan.cow_src)
+        alloc = self.kv.allocator
+        new_pins = sum(1 for b in matched if alloc.refcount(b) == 1)
+        return len(plan.blocks), new_pins
+
+    def _prefix_pinned_external(self) -> int:
+        """Index blocks with live readers that no running request's
+        private reservation covers.  The scheduler charges these against
+        capacity so worst-case reservations keep the 'lazy allocation
+        never fails' guarantee with sharing on: every other allocated
+        block is either inside some reservation or evictable on demand."""
+        priv: set = set()
+        for r in self.scheduler.running.values():
+            priv.update(r.blocks[r.n_shared:])
+        alloc = self.kv.allocator
+        return sum(1 for b in self.prefix.blocks()
+                   if alloc.refcount(b) > 1 and b not in priv)
+
+    def _claim_prefix(self, req: Request) -> None:
+        """Pin the request's resident prefix right after admission.
+
+        Every matched block takes an extra allocator reference before any
+        prefill (and with it any eviction pressure) runs this step, so
+        LRU eviction (refcount == 1 only) and quarantine (free blocks
+        only) can never touch a page this request is about to read.  The
+        claim matches at least what the admission probe saw: between the
+        two, nothing evicts — inserts can only add nodes.
+        """
+        plan = self.prefix.plan(req.prefill_tokens, self._clock)
+        if plan.hit_pages == 0:
+            self.stats["prefix_misses"] += 1
+            return
+        alloc = self.kv.allocator
+        alloc.share(plan.blocks)
+        req.blocks = list(plan.blocks)
+        req.n_shared = len(plan.blocks)
+        if plan.cow_src is not None:
+            alloc.share([plan.cow_src])
+            req.cow_src = plan.cow_src
+        self.stats["prefix_hits"] += plan.hit_pages
+        self.stats["prefix_hit_tokens"] += plan.hit_tokens
+
+    def _insert_prefix(self, req: Request) -> None:
+        """Index the request's full *prompt* pages after its prefill
+        scatter.  Never the partial tail page and never generated pages —
+        decode writes land at positions >= prefill_len, which is beyond
+        every indexed page, so indexed pages are write-free for life.
+        Pages already indexed keep the original block (the request's
+        duplicate stays private and recycles normally)."""
+        new = self.prefix.insert(req.prefill_tokens, req.blocks,
+                                 req.prompt_len, self._clock)
+        if new:
+            self.kv.allocator.share(new)
+
+    def _gather_prefix(self, req: Request, cache):
+        """Fill the temp prefill cache from the claimed blocks (shared
+        pages + the pinned COW source), then drop the COW pin — from here
+        the request only ever writes private blocks, so a shared page can
+        never be mutated by construction.  Returns (cache, suffix_start,
+        span) — ``span`` is the gathered slot count, the end of the window
+        the caller must re-mask before re-feeding slots below it
+        (:func:`mask_cache_rows`).
+        """
+        if req.cow_src is not None:
+            suffix_start = req.prefill_len - 1
+            gather = req.blocks[:req.n_shared] + [req.cow_src]
+        else:
+            suffix_start = req.n_shared * self.page
+            gather = req.blocks[:req.n_shared]
+        span = len(gather) * self.page
+        cache = self._localize(self.kv.read_pages(cache, gather))
+        if req.cow_src is not None:
+            self._release_blocks([req.cow_src])
+            req.cow_src = None
+            self.stats["prefix_cow_copies"] += 1
+        self.stats["shared_prefills"] += 1
+        return cache, suffix_start, span
 
     @property
     def gather_tokens(self) -> int:
@@ -432,9 +576,19 @@ class ContinuousEngine(ServingEngine):
         self._expire(finished)
         admitted = chunks = decoded = 0
         if not paused:
-            for req in self.scheduler.admit(self._clock):
+            batch = self.scheduler.admit(self._clock)
+            for req in batch:
+                # claim the whole batch BEFORE any prefill runs: pinned
+                # prefix blocks can't be evicted by an earlier admittee's
+                # allocation pressure, so every claim matches at least
+                # what the admission probe reserved against
                 admitted += 1
                 transition(req, PREFILLING)
+                if self.prefix is not None:
+                    self._claim_prefix(req)
+            for req in batch:
+                if req.slot is None:
+                    continue   # preempted by an earlier admittee's prefill
                 if self.prefill_chunk > 0:
                     self._begin_chunked(req)
                 else:
@@ -465,10 +619,7 @@ class ContinuousEngine(ServingEngine):
                    error: Optional[RequestError] = None) -> None:
         """Move a live request to a terminal state, releasing everything."""
         self._prefilling.pop(req.rid, None)
-        if req.blocks:
-            self.kv.reset_blocks(req.blocks)
-            self.kv.allocator.free(req.blocks)
-            req.blocks = []
+        self._release_request_blocks(req)
         if req.slot is not None:
             self.scheduler.finish(req)
         else:
@@ -506,10 +657,7 @@ class ContinuousEngine(ServingEngine):
         prefix unless ``restart``), re-queue with exponential backoff.
         Exhausting ``max_retries`` moves it to FAILED instead."""
         self._prefilling.pop(req.rid, None)
-        if req.blocks:
-            self.kv.reset_blocks(req.blocks)
-            self.kv.allocator.free(req.blocks)
-            req.blocks = []
+        self._release_request_blocks(req)
         self.scheduler.finish(req)
         self.preempt_log.append(
             (self._clock, req.rid, "restart" if restart else "preempt")
@@ -566,6 +714,15 @@ class ContinuousEngine(ServingEngine):
             return None
         alloc = self.kv.allocator
         while not alloc.can_alloc(n_new):
+            # cold cached prefixes go first: LRU-evict index blocks no
+            # request is reading before preempting any live request
+            if self.prefix is not None:
+                blk = self.prefix.evict_one(
+                    lambda b: alloc.refcount(b) == 1)
+                if blk is not None:
+                    self._release_blocks([blk])
+                    self.stats["prefix_evictions"] += 1
+                    continue
             victim = self._pick_victim()
             if victim is None:
                 self._preempt(req)
@@ -620,34 +777,66 @@ class ContinuousEngine(ServingEngine):
         For a fresh request that is the prompt; for a preempted one it is
         prompt ++ generated prefix (the bit-exact resume path — the next
         ``_sample`` call is keyed at ``step=len(generated)``, exactly the
-        step the uninterrupted run would be at)."""
+        step the uninterrupted run would be at).
+
+        With a claimed prefix the matched pages are gathered into the
+        temp cache instead of recomputed, and only the suffix runs
+        (through the chunk program, whose parity vs single-shot prefill
+        is already pinned); the scatter then covers only the privately
+        written page span."""
         L = req.prefill_len
-        blocks = self._ensure_blocks(req, self.kv.blocks_for(L))
-        if blocks is None:
+        nb = self.kv.blocks_for(L)
+        got = self._ensure_blocks(req, nb - req.n_shared)
+        if got is None:
             return   # req itself was preempted under pool pressure
-        req.blocks = blocks
-        cache = self.model.init_cache(1, L, self.cache_dtype,
-                                      full_length=True)
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(
-            self.prefill_params,
-            {"tokens": jnp.asarray(req.prefill_tokens[None])},
-            cache
-        )
-        logits = np.asarray(logits)
-        self.stats["prefill_time_s"] += time.perf_counter() - t0
-        self.kv.write_pages(
-            self._handoff(
-                pack_prefill_pages(cache, len(req.blocks), self.page)
-            ),
-            req.blocks,
-        )
+        req.blocks = req.blocks + got
+        fed = L
+        if req.n_shared == 0 and req.cow_src is None:
+            cache = self.model.init_cache(1, L, self.cache_dtype,
+                                          full_length=True)
+            t0 = time.perf_counter()
+            logits, cache = self._prefill(
+                self.prefill_params,
+                {"tokens": jnp.asarray(req.prefill_tokens[None])},
+                cache
+            )
+            logits = np.asarray(logits)
+            self.stats["prefill_time_s"] += time.perf_counter() - t0
+            self.kv.write_pages(
+                self._handoff(pack_prefill_pages(cache, nb, self.page)),
+                req.blocks,
+            )
+        else:
+            cache = self.model.init_cache(1, nb * self.page,
+                                          self.cache_dtype,
+                                          full_length=True)
+            cache, start, span = self._gather_prefix(req, cache)
+            cache = mask_cache_rows(cache, start, span)
+            suffix = np.asarray(req.prefill_tokens)[start:]
+            fed = L - start
+            t0 = time.perf_counter()
+            logits, cache = self._chunk(
+                self.prefill_params, {"tokens": jnp.asarray(suffix[None])},
+                cache, jnp.int32(start), jnp.int32(fed),
+            )
+            logits = np.asarray(logits)
+            self.stats["prefill_time_s"] += time.perf_counter() - t0
+            self.kv.write_pages(
+                self._handoff(pack_prefill_pages(
+                    slice_cache(cache, req.n_shared * self.page,
+                                nb * self.page),
+                    nb - req.n_shared, self.page,
+                )),
+                req.blocks[req.n_shared:],
+            )
+        if self.prefix is not None:
+            self._insert_prefix(req)
         if req.generated:
             self.stats["resumed_prefills"] += 1
         self._sample(req, logits[0])
         transition(req, DECODING)
         self.stats["prefill_calls"] += 1
-        self.stats["prompt_tokens"] += L
+        self.stats["prompt_tokens"] += fed
 
     # -- chunked prefill ---------------------------------------------------------------
     def _begin_chunked(self, req: Request) -> None:
@@ -658,15 +847,26 @@ class ContinuousEngine(ServingEngine):
         Resumed requests chunk prompt ++ generated prefix (never longer
         than ``max_request_len``, so the shared cache always fits).
         """
-        blocks = self._ensure_blocks(req, self.kv.blocks_for(req.prefill_len))
-        if blocks is None:
+        nb = self.kv.blocks_for(req.prefill_len)
+        got = self._ensure_blocks(req, nb - req.n_shared)
+        if got is None:
             return   # req itself was preempted under pool pressure
-        req.blocks = blocks
+        req.blocks = req.blocks + got
         cache = self.model.init_cache(1, self.chunk_cache, self.cache_dtype,
                                       full_length=True)
+        pos0 = 0
+        if req.n_shared > 0 or req.cow_src is not None:
+            cache, start, span = self._gather_prefix(req, cache)
+            # chunk starts must stay multiples of ``prefill_chunk`` (the
+            # chunk_cache_len clamp-guard argument assumes it), so round
+            # the resume point down: the re-fed rows recompute over the
+            # gathered prefix and land bit-identical, and only the
+            # private page span is scattered at the end anyway
+            pos0 = start - start % self.prefill_chunk
+            cache = mask_cache_rows(cache, pos0, span)
         self._prefilling[req.rid] = ChunkedPrefillState(
             req=req, cache=cache, chunk=self.prefill_chunk,
-            tokens=req.prefill_tokens,
+            tokens=req.prefill_tokens, pos=pos0,
         )
         if req.generated:
             self.stats["resumed_prefills"] += 1
@@ -690,12 +890,17 @@ class ContinuousEngine(ServingEngine):
             del self._prefilling[rid]
             req = state.req
             nb = len(req.blocks)
+            n_sh = req.n_shared
             self.kv.write_pages(
                 self._handoff(pack_prefill_pages(
-                    trim_cache(state.cache, nb * self.page), nb, self.page
+                    slice_cache(state.cache, n_sh * self.page,
+                                nb * self.page),
+                    nb - n_sh, self.page
                 )),
-                req.blocks,
+                req.blocks[n_sh:],
             )
+            if self.prefix is not None:
+                self._insert_prefix(req)
             self._sample(req, state.logits[0])
             transition(req, DECODING)
             self.stats["prefill_calls"] += 1
@@ -754,10 +959,9 @@ class ContinuousEngine(ServingEngine):
         return len(active)
 
     def _finish(self, req: Request, finished: list[Request]) -> None:
-        """Evict: reset + free every block the request held."""
-        self.kv.reset_blocks(req.blocks)
-        self.kv.allocator.free(req.blocks)
-        req.blocks = []
+        """Evict: release every block the request held (pages the index
+        or another reader still references stay resident)."""
+        self._release_request_blocks(req)
         self.scheduler.finish(req)
         transition(req, FINISHED)
         self._mark_finished(req)

@@ -42,8 +42,15 @@ def sample_token(logits, params: SamplingParams, *, request_salt: int = 0,
         return greedy(logits)
     logits = jnp.asarray(logits, jnp.float32)
     if params.top_k > 0 and params.top_k < logits.shape[-1]:
-        kth = jnp.sort(logits, axis=-1)[..., -params.top_k][..., None]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
+        # Exact-k mask.  Thresholding against the k-th value
+        # (``logits < kth``) keeps EVERY token tied at the threshold, so a
+        # tie at the k-th value leaves more than top_k candidates alive.
+        # Rank instead: a stable descending argsort puts ties in
+        # lowest-index-first order, so exactly k tokens survive and the
+        # tie-break is deterministic.
+        order = jnp.argsort(-logits, axis=-1, stable=True)
+        ranks = jnp.argsort(order, axis=-1, stable=True)
+        logits = jnp.where(ranks < params.top_k, logits, -jnp.inf)
     key = jax.random.fold_in(
         jax.random.fold_in(jax.random.PRNGKey(params.seed), request_salt), step
     )

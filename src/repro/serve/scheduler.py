@@ -84,7 +84,8 @@ class FCFSScheduler:
 
     def __init__(self, *, page_size: int, max_slots: int,
                  max_live_tokens: int, n_blocks_capacity: int,
-                 reserve: str = "worst_case"):
+                 reserve: str = "worst_case",
+                 prefix_probe=None, pinned_external=None):
         if max_slots < 1:
             raise ValueError(f"max_slots={max_slots}")
         if reserve not in ("worst_case", "prompt"):
@@ -112,6 +113,20 @@ class FCFSScheduler:
             # reservation in _fits is the physical gate.  An explicit
             # max_live_tokens still bounds admission as usual.
             self.max_live_tokens = max_live_tokens or (1 << 62)
+        # prefix-sharing hooks (both None without a prefix cache).
+        # ``prefix_probe(req) -> (hits, new_pins)``: ``hits`` = resident
+        # blocks the request would reuse read-only (discounted from its
+        # reservation — this is where admission headroom actually grows),
+        # ``new_pins`` = matched blocks currently held only by the index
+        # that the claim would pin (they stop being evictable, so they
+        # must be charged against capacity).  ``pinned_external() -> int``:
+        # index blocks with live readers that no running request's private
+        # reservation covers.  Together they keep the worst-case
+        # guarantee: reserved + pinned_external never exceeds capacity,
+        # so private growth can always be satisfied by free + evictable
+        # blocks (see the capacity argument in serve/README.md).
+        self.prefix_probe = prefix_probe
+        self.pinned_external = pinned_external
         self.waiting: deque = deque()
         self.running: dict = {}
         self._free_slots = list(range(max_slots - 1, -1, -1))
@@ -201,21 +216,51 @@ class FCFSScheduler:
             i -= 1
         self.waiting.insert(i, req)
 
-    def _reserve_blocks_for(self, req) -> int:
+    def _probe(self, req) -> tuple:
+        """(hits, new_pins) from the prefix cache; (0, 0) without one."""
+        if self.prefix_probe is None:
+            return 0, 0
+        return self.prefix_probe(req)
+
+    def _reserve_blocks_for(self, req, hits: int = 0) -> int:
+        """Blocks to reserve at admission, net of prefix-cache ``hits``.
+
+        ``hits`` is the number of resident blocks the request reuses
+        read-only — they are covered by the index's own accounting
+        (``pinned_external``), never allocated privately, so discounting
+        them is what turns page sharing into real admission headroom.
+        """
         total = req.prompt_len + req.max_new_tokens
         if self.reserve == "worst_case":
-            return _blocks_for(total, self.page)
-        # prompt mode: reserve only what the (resume-aware) prefill writes;
-        # decode growth is accounted incrementally via grow()
-        return _blocks_for(getattr(req, "prefill_len", req.prompt_len),
-                           self.page)
+            base = _blocks_for(total, self.page)
+        else:
+            # prompt mode: reserve only what the (resume-aware) prefill
+            # writes; decode growth is accounted incrementally via grow()
+            base = _blocks_for(getattr(req, "prefill_len", req.prompt_len),
+                               self.page)
+        return max(base - hits, 0)
 
-    def _fits(self, req) -> bool:
+    def _live_charge_for(self, req, hits: int = 0) -> int:
+        """Live tokens to charge at admission, net of prefix hits.
+
+        Shared pages hold tokens the request never stores privately, so
+        the token budget (sized to pool tokens under worst-case reserve)
+        discounts them just like the block reservation does — otherwise
+        block sharing frees pool space the token clamp then refuses to
+        spend.  The charge is stamped on the request (``live_charge``)
+        so finish() releases exactly what admission took.
+        """
         total = req.prompt_len + req.max_new_tokens
+        return max(total - hits * self.page, 0)
+
+    def _fits(self, req, hits: int = 0, new_pins: int = 0) -> bool:
+        pinned = self.pinned_external() if self.pinned_external else 0
         return (
             bool(self._free_slots)
-            and self._live_tokens + total <= self.max_live_tokens
-            and self._reserved_blocks + self._reserve_blocks_for(req)
+            and self._live_tokens + self._live_charge_for(req, hits)
+            <= self.max_live_tokens
+            and self._reserved_blocks + pinned + new_pins
+            + self._reserve_blocks_for(req, hits)
             <= self.capacity_blocks
         )
 
@@ -233,13 +278,14 @@ class FCFSScheduler:
             if getattr(req, "not_before", 0) > now_step:
                 i += 1  # backing off — skip, keep queue position
                 continue
-            if not self._fits(req):
+            hits, new_pins = self._probe(req)
+            if not self._fits(req, hits, new_pins):
                 break  # head-of-line blocking among eligible requests
             del self.waiting[i]
-            total = req.prompt_len + req.max_new_tokens
             req.slot = self._free_slots.pop()
-            req.reserved_blocks = self._reserve_blocks_for(req)
-            self._live_tokens += total
+            req.reserved_blocks = self._reserve_blocks_for(req, hits)
+            req.live_charge = self._live_charge_for(req, hits)
+            self._live_tokens += req.live_charge
             self._reserved_blocks += req.reserved_blocks
             self.running[req.slot] = req
             admitted.append(req)
@@ -267,6 +313,7 @@ class FCFSScheduler:
             raise ValueError(f"request in slot {req.slot} is not running")
         del self.running[req.slot]
         self._free_slots.append(req.slot)
-        self._live_tokens -= req.prompt_len + req.max_new_tokens
+        self._live_tokens -= getattr(req, "live_charge",
+                                     req.prompt_len + req.max_new_tokens)
         self._reserved_blocks -= req.reserved_blocks
         req.slot = None

@@ -265,3 +265,144 @@ def test_lazy_allocation_never_exhausts_reserved_pool(page, n_blocks, reqs,
         sched.finish(req)
     assert alloc.n_allocated == 0
     assert alloc.n_free == alloc.n_total
+
+
+# -- refcounted sharing (prefix cache) ----------------------------------------------
+
+
+def test_share_release_refcount_basics():
+    a = PageAllocator(8)
+    got = a.alloc(2)
+    assert [a.refcount(b) for b in got] == [1, 1]
+    a.share(got)
+    assert [a.refcount(b) for b in got] == [2, 2]
+    # a block with live readers cannot be free()d outright
+    with pytest.raises(ValueError):
+        a.free([got[0]])
+    assert a.release([got[0]]) == []          # 2 -> 1: stays allocated
+    assert a.refcount(got[0]) == 1
+    assert a.release(got) == [got[0]]         # 1 -> 0: actually freed
+    assert a.refcount(got[1]) == 1
+    a.free([got[1]])                          # refcount 1: plain free works
+    assert a.n_allocated == 0 and a.n_free == a.n_total
+    a.check_invariants()
+
+
+def test_share_rejects_unallocated_and_release_rejects_duplicates():
+    a = PageAllocator(8)
+    got = a.alloc(1)
+    with pytest.raises(ValueError):
+        a.share([99])
+    with pytest.raises(ValueError):
+        a.release([got[0], got[0]])
+    a.free(got)
+    with pytest.raises(ValueError):
+        a.release(got)    # no longer allocated
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_blocks=st.integers(2, 32),
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["alloc", "share", "release", "free",
+                             "quarantine", "restore"]),
+            st.integers(0, 12),
+        ),
+        max_size=100,
+    ),
+)
+def test_allocator_invariants_under_sharing(n_blocks, ops, monkeypatch):
+    """share/release interleaved with alloc/free/quarantine/restore:
+    conservation holds, a block is never freed while referenced, and the
+    armed check_invariants() (the refcount partition included) passes
+    after every operation — the bookkeeping contract the prefix cache
+    (engine + radix index) is built on."""
+    monkeypatch.setenv("REPRO_SERVE_CHECKS", "1")
+    a = PageAllocator(n_blocks)
+    refs: dict[int, int] = {}    # mirror of expected refcounts
+    for kind, n in ops:
+        live = sorted(refs)
+        if kind == "alloc":
+            if a.can_alloc(n):
+                for b in a.alloc(n):
+                    assert b not in refs, "double-allocated block"
+                    refs[b] = 1
+            else:
+                with pytest.raises(RuntimeError):
+                    a.alloc(n)
+        elif kind == "share" and live:
+            b = live[n % len(live)]
+            a.share([b])
+            refs[b] += 1
+        elif kind == "release" and live:
+            b = live[n % len(live)]
+            freed = a.release([b])
+            refs[b] -= 1
+            if refs[b] == 0:
+                assert freed == [b]
+                del refs[b]
+            else:
+                assert freed == []
+        elif kind == "free" and live:
+            b = live[n % len(live)]
+            if refs[b] == 1:
+                a.free([b])
+                del refs[b]
+            else:
+                # free-while-referenced must be refused (and change nothing)
+                with pytest.raises(ValueError):
+                    a.free([b])
+                assert a.refcount(b) == refs[b]
+        elif kind == "quarantine":
+            taken = a.quarantine(n)
+            assert taken <= n
+        elif kind == "restore":
+            a.restore_quarantined(n if n else None)
+        a.check_invariants()
+        assert a.n_allocated == len(refs)
+        assert a.n_free + a.n_allocated == a.n_total
+        for b, r in refs.items():
+            assert a.refcount(b) == r
+    a.restore_quarantined()
+    for b in sorted(refs):
+        while refs[b] > 1:
+            a.release([b])
+            refs[b] -= 1
+        a.free([b])
+    a.check_invariants()
+    assert a.n_free == a.n_total == n_blocks - 1
+
+
+def test_restore_quarantined_is_sorted_deterministic():
+    """restore_quarantined must hand blocks back in sorted id order: the
+    free list's order decides every later alloc, so an unordered (set
+    iteration) restore makes post-fault block placement — and with it
+    the REPRO_SERVE_CHECKS block-id trace — run-dependent."""
+    a = PageAllocator(16)
+    held = a.alloc(6)
+    a.free(held)
+    assert a.quarantine(8) == 8
+    quarantined = sorted(a._quarantined)
+    assert a.restore_quarantined(5) == 5
+    # the restored suffix of the free list is exactly the 5 smallest ids
+    assert list(a._free)[-5:] == quarantined[:5]
+    assert a.restore_quarantined() == 3
+    assert list(a._free)[-3:] == quarantined[5:]
+
+
+def test_block_table_none_vs_empty_rows():
+    """None marks an inactive slot (row of -1 pads, reads the trash
+    block); an *active* row with zero blocks is a bookkeeping bug and
+    must raise at table build, not surface as a silent trash read."""
+    import numpy as np
+
+    from repro.serve.cache import PagedKVCache
+
+    bt = PagedKVCache.block_table(None, [None, [3, 1], None], 4)
+    assert bt.dtype == np.int32 and bt.shape == (3, 4)
+    assert list(bt[0]) == [-1, -1, -1, -1]
+    assert list(bt[1]) == [3, 1, -1, -1]
+    assert list(bt[2]) == [-1, -1, -1, -1]
+    with pytest.raises(ValueError, match="active but holds no blocks"):
+        PagedKVCache.block_table(None, [[2], []], 2)

@@ -1,0 +1,343 @@
+"""Prefix-sharing paged KV cache: radix index, COW, parity, accounting.
+
+The acceptance anchor mirrors the rest of the serving stack: greedy
+outputs are BIT-IDENTICAL with prefix sharing on vs off vs the
+``run_sequential`` oracle — single-shot and chunked prefill, and under
+preemption pressure (``reserve="prompt"``).  On top of that, the tests
+pin the sharing machinery itself:
+
+  * the radix index: page-granular matching, COW planning on full
+    coverage, first-writer-wins insertion, deterministic LRU eviction;
+  * shared-page immutability: a COW hit never writes the donor block
+    (pool bytes compared before/after);
+  * capacity accounting: hit-discounted reservations really admit more
+    concurrent requests at a fixed pool, while the allocator invariants
+    (including the refcount partition) stay armed.
+
+Sharded/disaggregated-engine parity with prefix sharing lives in
+tests/test_serve_sharded.py (it needs the forced 4-device subprocess).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import apply_sparsity, get_config, reduce_config
+from repro.models import LMModel
+from repro.serve import (
+    ContinuousEngine,
+    PageAllocator,
+    PrefixIndex,
+    restore_engine,
+    run_sequential,
+    save_engine,
+)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    cfg = apply_sparsity(cfg, pattern="rbgp4", sparsity=0.5,
+                         backend="xla_masked", min_dim=64)
+    model = LMModel(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def shared_prefix_workload(vocab, seed=0):
+    """Prompts engineered around page_size=4: exact-multiple repeats (COW
+    on the second), a fully covered shorter prompt (COW mid-stream), a
+    partial hit with a private tail, and a cold miss."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(1, vocab, size=16).astype(np.int32)
+    cold = rng.integers(1, vocab, size=10).astype(np.int32)
+    tail = rng.integers(1, vocab, size=9).astype(np.int32)
+    return [
+        {"rid": 0, "prompt": base.copy(), "max_new_tokens": 4},
+        {"rid": 1, "prompt": base.copy(), "max_new_tokens": 4},        # COW
+        {"rid": 2, "prompt": base[:8].copy(), "max_new_tokens": 4},   # COW
+        {"rid": 3, "prompt": np.concatenate([base[:12], tail]),       # hit
+         "max_new_tokens": 4},
+        {"rid": 4, "prompt": cold, "max_new_tokens": 4},              # miss
+    ]
+
+
+def drain_engine(model, params, wl, **kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_request_len", 32)
+    eng = ContinuousEngine(model, params, **kw)
+    for r in wl:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    return eng, eng.drain()
+
+
+# -- parity (the acceptance gate) ---------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [0, 5])
+def test_greedy_parity_sharing_on_off_sequential(lm, chunk):
+    model, params = lm
+    wl = shared_prefix_workload(model.cfg.vocab_size)
+    os.environ["REPRO_SERVE_CHECKS"] = "1"
+    try:
+        eng_off, off = drain_engine(model, params, wl, max_slots=1,
+                                    prefill_chunk=chunk, prefix_cache=False)
+        eng_on, on = drain_engine(model, params, wl, max_slots=1,
+                                  prefill_chunk=chunk, prefix_cache=True)
+        ref = run_sequential(model, params, wl,
+                             cache_len=eng_on.gather_tokens)
+        for r in wl:
+            np.testing.assert_array_equal(
+                on[r["rid"]], ref[r["rid"]],
+                err_msg=f"chunk={chunk} rid={r['rid']} sharing-on vs oracle")
+            np.testing.assert_array_equal(
+                on[r["rid"]], off[r["rid"]],
+                err_msg=f"chunk={chunk} rid={r['rid']} sharing on vs off")
+        # the workload actually exercises sharing: hits, COW copies, and
+        # a suffix-only prefill all occurred (max_slots=1 serializes
+        # prefills so every later request sees the earlier inserts)
+        s = eng_on.stats
+        assert s["prefix_hits"] > 0
+        assert s["prefix_cow_copies"] >= 2
+        assert s["shared_prefills"] >= 3
+        assert s["prefix_misses"] >= 1
+        assert eng_off.stats["prefix_hits"] == 0
+        eng_on.kv.allocator.check_invariants()
+    finally:
+        os.environ.pop("REPRO_SERVE_CHECKS", None)
+
+
+@pytest.mark.parametrize("chunk", [0, 5])
+def test_greedy_parity_sharing_under_preemption(lm, chunk):
+    """Tiny pool + reserve="prompt": decode growth preempts, prefix
+    eviction pressure triggers, and the outputs still replay the oracle
+    bit-for-bit (a preempted request may lose its shared claim and
+    re-match on resume — both paths must land on identical tokens)."""
+    model, params = lm
+    rng = np.random.default_rng(1)
+    V = model.cfg.vocab_size
+    base = rng.integers(1, V, size=12).astype(np.int32)
+    wl = [{"rid": 0, "prompt": base.copy(), "max_new_tokens": 8}]
+    for i in range(1, 6):
+        tail = rng.integers(1, V, size=4 + i).astype(np.int32)
+        wl.append({"rid": i,
+                   "prompt": np.concatenate([base[:4 * (i % 3 + 1)], tail]),
+                   "max_new_tokens": 6})
+    os.environ["REPRO_SERVE_CHECKS"] = "1"
+    try:
+        eng, out = drain_engine(model, params, wl, n_blocks=14, max_slots=3,
+                                prefill_chunk=chunk, reserve="prompt",
+                                prefix_cache=True)
+        ref = run_sequential(model, params, wl, cache_len=eng.gather_tokens)
+        for r in wl:
+            np.testing.assert_array_equal(
+                out[r["rid"]], ref[r["rid"]],
+                err_msg=f"chunk={chunk} rid={r['rid']} under preemption")
+        assert eng.stats["preemptions"] > 0, "pool never pressured"
+        assert eng.stats["prefix_hits"] > 0
+        eng.kv.allocator.check_invariants()
+    finally:
+        os.environ.pop("REPRO_SERVE_CHECKS", None)
+
+
+def test_cow_never_mutates_shared_page(lm):
+    """The copy-on-write contract, checked at the pool-byte level: a
+    request whose prompt is fully covered gathers the donor page and
+    writes only private blocks — every indexed block's bytes are
+    unchanged after the COW request runs to completion."""
+    model, params = lm
+    rng = np.random.default_rng(2)
+    V = model.cfg.vocab_size
+    base = rng.integers(1, V, size=8).astype(np.int32)
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=1,
+                           max_request_len=24, prefix_cache=True)
+    eng.submit(base.copy(), 3)
+    eng.drain()
+    indexed = eng.prefix.blocks()
+    assert indexed, "first request indexed nothing"
+
+    def pool_bytes(blocks):
+        idx = np.asarray(blocks, np.int32)
+        pools = eng.kv.pools
+        tm = jax.tree_util.tree_map
+        out = []
+        for pl in pools["head"] + pools["tail"]:
+            tm(lambda l: out.append(np.asarray(l[idx]).copy()), pl)
+        tm(lambda l: out.append(np.asarray(l[:, idx]).copy()), pools["scan"])
+        return out
+
+    before = pool_bytes(indexed)
+    eng.submit(base.copy(), 3)       # fully covered -> COW path
+    eng.drain()
+    assert eng.stats["prefix_cow_copies"] == 1
+    after = pool_bytes(indexed)
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a,
+                                      err_msg="shared page bytes changed")
+
+
+def test_snapshot_restore_with_sharing(lm, tmp_path):
+    """Kill mid-flight with sharing active; the restored engine (index
+    rebuilt empty — snapshots carry no KV, terminal requests cannot
+    re-seed it) finishes every request byte-identically and re-grows the
+    index from the re-prefills of the restored live requests."""
+    model, params = lm
+    wl = shared_prefix_workload(model.cfg.vocab_size, seed=3)
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=32, prefix_cache=True)
+    ref = run_sequential(model, params, wl, cache_len=eng.gather_tokens)
+    for r in wl:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    for _ in range(5):
+        eng.step()
+    path = str(tmp_path / "snap.npz")
+    save_engine(eng, path)
+    eng2 = restore_engine(path, model, params)
+    assert eng2.prefix is not None, "prefix_cache flag lost in snapshot"
+    assert eng2.prefix.n_nodes == 0, "restored index must start empty"
+    out = eng2.drain()
+    for r in wl:
+        np.testing.assert_array_equal(
+            out[r["rid"]], ref[r["rid"]],
+            err_msg=f"rid={r['rid']} after snapshot restore")
+    assert eng2.prefix.n_nodes > 0, "re-prefills never re-seeded the index"
+    eng2.kv.allocator.check_invariants()
+
+
+# -- capacity accounting ------------------------------------------------------------
+
+
+def test_hit_discounted_reservations_admit_more(lm):
+    """The point of the whole exercise: at a fixed pool, identical
+    prompts admit MORE concurrent requests with sharing on, because a
+    matched request's reservation is discounted by its read-only hits.
+    Outputs stay bit-identical while concurrency rises."""
+    model, params = lm
+    rng = np.random.default_rng(4)
+    V = model.cfg.vocab_size
+    base = rng.integers(1, V, size=16).astype(np.int32)
+    wl = [{"rid": i, "prompt": base.copy(), "max_new_tokens": 4}
+          for i in range(6)]
+    # 12 usable blocks: two unshared requests reserve 2 x 5 and block the
+    # third (15 > 12); a prefix hit discounts the third to 2 (12 <= 12)
+    kw = dict(n_blocks=13, max_slots=6, page_size=4, max_request_len=32)
+
+    def run(prefix_cache):
+        eng = ContinuousEngine(model, params, prefix_cache=prefix_cache,
+                               **kw)
+        for r in wl:
+            eng.submit(r["prompt"], r["max_new_tokens"])
+        peak = 0
+        while not eng.idle:
+            eng.step()
+            peak = max(peak, eng.scheduler.n_running)
+        return eng, {r.rid: r.generated for r in eng.requests.values()}, peak
+
+    eng_off, off, peak_off = run(False)
+    eng_on, on, peak_on = run(True)
+    for r in wl:
+        np.testing.assert_array_equal(on[r["rid"]], off[r["rid"]],
+                                      err_msg=f"rid={r['rid']}")
+    assert peak_on > peak_off, (peak_on, peak_off)
+    eng_on.kv.allocator.check_invariants()
+
+
+# -- radix index (model-free) -------------------------------------------------------
+
+
+def test_prefix_index_match_and_cow_plan():
+    ix = PrefixIndex(4)
+    toks = np.arange(12, dtype=np.int32)
+    assert ix.plan(toks, now=0).hit_pages == 0
+    new = ix.insert(toks, [7, 8, 9], 12, now=0)
+    assert new == [7, 8, 9] and ix.n_nodes == 3
+    # partial coverage: full pages matched, suffix from the page edge
+    p = ix.plan(np.concatenate([toks[:8], np.int32([99, 98, 97])]), now=1)
+    assert p.blocks == [7, 8] and p.cow_src is None and p.suffix_start == 8
+    # full coverage: last page becomes the COW source, 1-token suffix
+    p = ix.plan(toks, now=2)
+    assert p.blocks == [7, 8] and p.cow_src == 9 and p.suffix_start == 11
+    assert p.hit_pages == 3 and p.hit_tokens == 11
+    # non-page-multiple fully-matched prompt is NOT "fully covered"
+    p = ix.plan(toks[:10], now=3)
+    assert p.blocks == [7, 8] and p.cow_src is None and p.suffix_start == 8
+    # a diverging page stops the walk
+    bad = toks.copy()
+    bad[5] = 99
+    assert ix.plan(bad, now=4).blocks == [7]
+
+
+def test_prefix_index_first_writer_wins():
+    ix = PrefixIndex(4)
+    toks = np.arange(8, dtype=np.int32)
+    assert ix.insert(toks, [3, 4], 8, now=0) == [3, 4]
+    # duplicate insert keeps the original blocks; nothing new referenced
+    assert ix.insert(toks, [5, 6], 8, now=1) == []
+    assert ix.plan(np.concatenate([toks, np.int32([1, 2, 3])]),
+                   now=2).blocks == [3, 4]
+    # partial-page tail never indexed: 11 tokens -> 2 pages only
+    toks2 = np.concatenate([toks, np.int32([9, 9, 9])])
+    assert ix.insert(toks2, [5, 6, 7], 11, now=3) == []
+    assert ix.n_nodes == 2
+
+
+def test_prefix_index_lru_eviction_deterministic():
+    ix = PrefixIndex(2)
+    a = np.int32([1, 1, 2, 2])        # pages (1,1) (2,2)
+    b = np.int32([1, 1, 3, 3])        # shares page (1,1), leaf (3,3)
+    ix.insert(a, [10, 11], 4, now=0)
+    ix.insert(b, [10, 12], 4, now=0)
+    assert ix.n_nodes == 3
+    # leaves only: the shared root page (block 10) must never be picked
+    # while children remain; equal last_used falls back to insertion seq
+    assert ix.evict_one(lambda blk: True) == 11
+    assert ix.evict_one(lambda blk: True) == 12
+    assert ix.evict_one(lambda blk: True) == 10
+    assert ix.evict_one(lambda blk: True) is None
+    assert ix.n_nodes == 0
+    # refreshed leaf outlives a stale one regardless of insertion order
+    ix.insert(a, [10, 11], 4, now=5)
+    ix.insert(b, [10, 12], 4, now=5)
+    ix.plan(a, now=9)                 # touches blocks 10, 11
+    assert ix.evict_one(lambda blk: True) == 12
+    # the evictable gate (the engine's refcount screen) skips pinned
+    # leaves, and the inner node 10 is not a leaf: nothing qualifies
+    assert ix.evict_one(lambda blk: blk != 11) is None
+    ix.drop_all()
+    assert ix.n_nodes == 0 and ix.blocks() == []
+
+
+def test_prefix_index_model_free_engine_shaped_lifecycle():
+    """Allocator + index driven the way the engine drives them (insert ->
+    share, claim -> share, finish -> release, evict at refcount 1):
+    conservation and the no-free-while-referenced guarantee hold through
+    a full share/evict cycle with no model in the loop."""
+    alloc = PageAllocator(10)
+    ix = PrefixIndex(4)
+    toks = np.arange(8, dtype=np.int32)
+
+    first = alloc.alloc(2)                      # request A prefills
+    alloc.share(ix.insert(toks, first, 8, now=0))   # index takes its ref
+    alloc.release(first)                        # A finishes
+    assert all(alloc.refcount(b) == 1 for b in first), \
+        "indexed blocks must survive their writer"
+
+    plan = ix.plan(toks, now=1)                 # request B: fully covered
+    assert plan.cow_src == first[1]
+    claimed = list(plan.blocks) + [plan.cow_src]
+    alloc.share(claimed)                        # B pins its claim
+    with pytest.raises(ValueError):
+        alloc.free([first[0]])                  # never under a live reader
+    assert ix.evict_one(lambda b: alloc.refcount(b) == 1) is None, \
+        "eviction must not yank pinned blocks"
+    alloc.release([plan.cow_src])               # COW gather done, pin drops
+    alloc.release(plan.blocks)                  # B finishes
+    blk = ix.evict_one(lambda b: alloc.refcount(b) == 1)
+    assert blk == first[1]                      # LRU leaf, now evictable
+    alloc.release([blk])
+    blk = ix.evict_one(lambda b: alloc.refcount(b) == 1)
+    assert blk == first[0]
+    alloc.release([blk])
+    assert alloc.n_allocated == 0 and alloc.n_free == alloc.n_total
+    alloc.check_invariants()

@@ -330,3 +330,55 @@ def test_scheduler_deterministic_under_equal_arrival_ticks():
         if baseline is None:
             baseline = trace
         assert trace == baseline, perm
+
+
+# -- top-k sampling regression (exact-k mask, deterministic tie-break) --------------
+
+
+def test_top_k_keeps_exactly_k_with_ties_at_threshold():
+    """A tie AT the k-th value used to leave more than k candidates alive
+    (thresholding with ``logits < kth`` keeps every tied token).  The rank
+    mask must keep exactly k, tied survivors chosen lowest-index-first."""
+    from repro.serve.sampling import SamplingParams, sample_token
+
+    # vocab of 8: top-2 are clear, then FOUR tokens tied at the k=3 edge
+    logits = np.array([5.0, 4.0, 3.0, 3.0, 3.0, 3.0, 1.0, 0.0], np.float32)
+    sp = SamplingParams(temperature=1.0, top_k=3, seed=0)
+    seen = set()
+    for step in range(200):
+        seen.add(int(sample_token(logits, sp, request_salt=1, step=step)))
+    # exactly k=3 distinct tokens can ever be sampled, and the tied
+    # survivor is index 2 (lowest index among the tie), never 3/4/5
+    assert seen <= {0, 1, 2}, seen
+    assert 2 in seen and not seen & {3, 4, 5}
+
+
+def test_top_k_tie_break_is_permutation_stable():
+    """Moving a tied token to a lower index must deterministically swap it
+    into the survivor set — pins lowest-index-first, not argsort whim."""
+    from repro.serve.sampling import SamplingParams, sample_token
+
+    sp = SamplingParams(temperature=1.0, top_k=2, seed=3)
+    a = np.array([2.0, 1.0, 1.0, 0.0], np.float32)   # tie at indices 1, 2
+    seen = set()
+    for step in range(100):
+        seen.add(int(sample_token(a, sp, request_salt=0, step=step)))
+    assert seen <= {0, 1}, seen   # index 1 survives, index 2 masked
+
+
+def test_top_k_sample_stream_pinned():
+    """The (request, step)-keyed stream through the exact-k mask is
+    reproducible bit-for-bit call to call."""
+    from repro.serve.sampling import SamplingParams, sample_token
+
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=64).astype(np.float32)
+    sp = SamplingParams(temperature=0.7, top_k=5, seed=11)
+    s1 = [int(sample_token(logits, sp, request_salt=4, step=i))
+          for i in range(20)]
+    s2 = [int(sample_token(logits, sp, request_salt=4, step=i))
+          for i in range(20)]
+    assert s1 == s2
+    # every sampled token is inside the true top-5 set
+    top5 = set(np.argsort(-logits, kind="stable")[:5].tolist())
+    assert set(s1) <= top5

@@ -363,3 +363,30 @@ def test_snapshot_refuses_plan_fingerprint_mismatch(lm):
         assert len(eng2.requests) == 1
         eng3 = restore_engine(path, model, params)
         assert len(eng3.requests) == 1
+
+
+def test_fault_soak_block_trace_deterministic(lm):
+    """Same workload + same fault schedule => the allocator hands out the
+    exact same block-id sequence, run after run.  This pins the two
+    allocator determinism fixes: restore_quarantined returning blocks in
+    sorted id order (a set-iteration restore reorders the free list and
+    with it every later placement), and the REPRO_SERVE_CHECKS trace
+    recording every handed-out id."""
+    model, params = lm
+    wl = make_workload(model)
+    os.environ["REPRO_SERVE_CHECKS"] = "1"
+    try:
+        for seed in range(3):
+            faults = FaultSchedule.random(seed, horizon=24, n_events=4,
+                                          max_drop=3)
+            traces = []
+            for _ in range(2):
+                eng, _ = run_engine(model, params, wl, reserve="prompt",
+                                    n_blocks=13, faults=faults,
+                                    preempt_backoff=0)
+                assert eng.kv.allocator.trace, "armed trace stayed empty"
+                traces.append(list(eng.kv.allocator.trace))
+            assert traces[0] == traces[1], f"seed {seed}: block-id trace " \
+                                           f"diverged across identical runs"
+    finally:
+        os.environ.pop("REPRO_SERVE_CHECKS", None)

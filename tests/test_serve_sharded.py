@@ -194,3 +194,50 @@ assert eng2.stats["handoffs"] == len(wl)
 assert all(t["prefill_chunks"] <= 1 for t in eng2.step_trace)
 print("SHARDED-SERVE-OK")
 """)
+
+
+def test_sharded_prefix_sharing_parity():
+    """Prefix sharing on the mesh engines: shared-prefix workload (COW +
+    partial hits) replays the oracle bit-for-bit on the TP-sharded engine
+    and across the disaggregation boundary — the gathered prefix is read
+    from decode-role pools, localized (host round-trip, bits only), and
+    the suffix chunk runs on the prefill mesh."""
+    _run_child(r"""
+import os
+os.environ["REPRO_SERVE_CHECKS"] = "1"
+model, params = build("tinyllama-1.1b")
+rng = np.random.default_rng(0)
+V = model.cfg.vocab_size
+base = rng.integers(1, V, size=16).astype(np.int32)
+tail = rng.integers(1, V, size=9).astype(np.int32)
+wl = [
+    {"rid": 0, "prompt": base.copy(), "max_new_tokens": 4},
+    {"rid": 1, "prompt": base.copy(), "max_new_tokens": 4},
+    {"rid": 2, "prompt": base[:8].copy(), "max_new_tokens": 4},
+    {"rid": 3, "prompt": np.concatenate([base[:12], tail]),
+     "max_new_tokens": 4},
+]
+
+mesh = make_serve_mesh(2, 2)
+for chunk in (0, 5):
+    eng = ShardedContinuousEngine(model, params, mesh, page_size=4,
+                                  max_slots=1, max_request_len=32,
+                                  prefill_chunk=chunk, prefix_cache=True)
+    check_parity(eng, wl, model, f"sharded-prefix-chunk{chunk}")
+    assert eng.stats["prefix_hits"] > 0, eng.stats
+    assert eng.stats["prefix_cow_copies"] >= 2, eng.stats
+    eng.kv.allocator.check_invariants()
+
+devs = jax.devices()
+prefill_mesh = make_serve_mesh(1, 2, devices=devs[:2])
+decode_mesh = make_serve_mesh(1, 2, devices=devs[2:])
+for chunk in (0, 5):
+    eng = DisaggregatedEngine(model, params, decode_mesh, prefill_mesh,
+                              page_size=4, max_slots=1, max_request_len=32,
+                              prefill_chunk=chunk, prefix_cache=True)
+    check_parity(eng, wl, model, f"disagg-prefix-chunk{chunk}")
+    assert eng.stats["prefix_hits"] > 0, eng.stats
+    assert eng.stats["shared_prefills"] > 0, eng.stats
+    eng.kv.allocator.check_invariants()
+print("SHARDED-SERVE-OK")
+""")
