@@ -445,17 +445,22 @@ class ContinuousEngine(ServingEngine):
 
         The discount counts only the read-only shared blocks (the COW
         source still costs a private block, so it never discounts).
-        ``new_pins`` counts matched blocks currently held by the index
-        alone — claiming stops them being evictable, so admission must
-        charge them against pool capacity.  Read-only: no LRU stamping,
-        no refcounting (the claim after admission does both).
+        ``new_pins`` is the *set* of matched block ids currently held by
+        the index alone — claiming stops them being evictable, so
+        admission must charge them against pool capacity; the scheduler
+        accumulates the sets across one admit pass so two same-batch
+        requests pinning disjoint prefixes are charged jointly (their
+        claims land only after admit returns, so refcounts alone cannot
+        see the earlier admittee's pins).  Read-only: ``plan(…, None)``
+        does no LRU stamping, and no refcounting happens here (the claim
+        after admission does both).
         """
         plan = self.prefix.plan(req.prefill_tokens, None)
         matched = set(plan.blocks)
         if plan.cow_src is not None:
             matched.add(plan.cow_src)
         alloc = self.kv.allocator
-        new_pins = sum(1 for b in matched if alloc.refcount(b) == 1)
+        new_pins = frozenset(b for b in matched if alloc.refcount(b) == 1)
         return len(plan.blocks), new_pins
 
     def _prefix_pinned_external(self) -> int:
@@ -463,7 +468,11 @@ class ContinuousEngine(ServingEngine):
         private reservation covers.  The scheduler charges these against
         capacity so worst-case reservations keep the 'lazy allocation
         never fails' guarantee with sharing on: every other allocated
-        block is either inside some reservation or evictable on demand."""
+        block is either inside some reservation or evictable on demand.
+        O(index + running blocks); the scheduler calls it once per admit
+        pass — refcounts and private spans only change after admit
+        returns (claims, prefills), so the count is invariant within one
+        pass and need not be recomputed per candidate."""
         priv: set = set()
         for r in self.scheduler.running.values():
             priv.update(r.blocks[r.n_shared:])
@@ -715,13 +724,16 @@ class ContinuousEngine(ServingEngine):
         alloc = self.kv.allocator
         while not alloc.can_alloc(n_new):
             # cold cached prefixes go first: LRU-evict index blocks no
-            # request is reading before preempting any live request
+            # request is reading before preempting any live request; the
+            # whole deficit goes in one tree scan (evict_lru) so sustained
+            # pressure costs O(index) per event, not per evicted block
             if self.prefix is not None:
-                blk = self.prefix.evict_one(
-                    lambda b: alloc.refcount(b) == 1)
-                if blk is not None:
-                    self._release_blocks([blk])
-                    self.stats["prefix_evictions"] += 1
+                blks = self.prefix.evict_lru(
+                    lambda b: alloc.refcount(b) == 1,
+                    n_new - alloc.n_free)
+                if blks:
+                    self._release_blocks(blks)
+                    self.stats["prefix_evictions"] += len(blks)
                     continue
             victim = self._pick_victim()
             if victim is None:

@@ -38,6 +38,7 @@ Lifecycle contract (the engine side lives in serve/engine.py):
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Optional
 
 import numpy as np
@@ -131,7 +132,7 @@ class PrefixIndex:
             cur = child
         return nodes
 
-    def plan(self, tokens: np.ndarray, now: int) -> PrefixPlan:
+    def plan(self, tokens: np.ndarray, now: Optional[int]) -> PrefixPlan:
         """Match ``tokens`` against the index and stamp LRU clocks.
 
         Full pages that match are reused; if the whole prompt is covered,
@@ -139,11 +140,17 @@ class PrefixIndex:
         the final token alone (recomputed so there are logits to sample).
         Does NOT take allocator references — the caller pins via
         ``share`` while the plan is still fresh (same host step).
+
+        ``now=None`` is a read-only probe: the match runs without
+        touching ``last_used``, so admission probes for requests that end
+        up rejected neither refresh LRU recency nor poison the
+        ``(last_used, seq)`` eviction order with non-integer stamps.
         """
         S = int(tokens.shape[0])
         nodes = self._match(tokens)
-        for node in nodes:
-            node.last_used = now
+        if now is not None:
+            for node in nodes:
+                node.last_used = now
         m = len(nodes)
         if m == 0:
             return PrefixPlan(blocks=[], cow_src=None, suffix_start=0)
@@ -182,31 +189,49 @@ class PrefixIndex:
         return new_blocks
 
     # -- eviction ------------------------------------------------------------------
-    def evict_one(self, evictable: Callable[[int], bool]) -> Optional[int]:
-        """Remove the least-recently-used evictable *leaf* and return its
-        block id (None if nothing qualifies).
+    def evict_lru(self, evictable: Callable[[int], bool],
+                  n: int = 1) -> list[int]:
+        """Remove up to ``n`` least-recently-used evictable *leaves* and
+        return their block ids, in eviction order.
 
         ``evictable(block)`` is the engine's refcount gate — only blocks
         with no readers beyond the index itself may go.  Leaves only:
         an inner node's page is the prefix of a live cached path, and
-        evicting it would orphan descendants that remain matchable.
+        evicting it would orphan descendants that remain matchable.  A
+        node whose last child is evicted becomes a leaf and joins the
+        candidate heap, so the sequence is identical to ``n`` repeated
+        single evictions — one tree scan instead of one per block.
+        ``seq`` is unique per node, so the ``(last_used, seq)`` heap key
+        never ties and ordering stays a pure function of the request
+        stream.
         """
-        victim: Optional[_Node] = None
+        if n <= 0:
+            return []
+        heap: list[tuple[int, int, _Node]] = []
         stack = [self._root]
         while stack:
             node = stack.pop()
-            if (node is not self._root and not node.children
-                    and evictable(node.block)):
-                if victim is None or \
-                        (node.last_used, node.seq) < \
-                        (victim.last_used, victim.seq):
-                    victim = node
+            if node is not self._root and not node.children:
+                heapq.heappush(heap, (node.last_used, node.seq, node))
             stack.extend(node.children.values())
-        if victim is None:
-            return None
-        del victim.parent.children[victim.key]
-        self._n_nodes -= 1
-        return victim.block
+        out: list[int] = []
+        while heap and len(out) < n:
+            _, _, node = heapq.heappop(heap)
+            if not evictable(node.block):
+                continue
+            parent = node.parent
+            del parent.children[node.key]
+            self._n_nodes -= 1
+            out.append(node.block)
+            if parent is not self._root and not parent.children:
+                heapq.heappush(heap, (parent.last_used, parent.seq, parent))
+        return out
+
+    def evict_one(self, evictable: Callable[[int], bool]) -> Optional[int]:
+        """Remove the least-recently-used evictable leaf and return its
+        block id (None if nothing qualifies).  See :meth:`evict_lru`."""
+        out = self.evict_lru(evictable, 1)
+        return out[0] if out else None
 
     def drop_all(self) -> list[int]:
         """Empty the index; returns every previously indexed block id so

@@ -114,17 +114,23 @@ class FCFSScheduler:
             # max_live_tokens still bounds admission as usual.
             self.max_live_tokens = max_live_tokens or (1 << 62)
         # prefix-sharing hooks (both None without a prefix cache).
-        # ``prefix_probe(req) -> (hits, new_pins)``: ``hits`` = resident
+        # ``prefix_probe(req) -> (hits, pin_blocks)``: ``hits`` = resident
         # blocks the request would reuse read-only (discounted from its
         # reservation — this is where admission headroom actually grows),
-        # ``new_pins`` = matched blocks currently held only by the index
-        # that the claim would pin (they stop being evictable, so they
-        # must be charged against capacity).  ``pinned_external() -> int``:
-        # index blocks with live readers that no running request's private
-        # reservation covers.  Together they keep the worst-case
-        # guarantee: reserved + pinned_external never exceeds capacity,
-        # so private growth can always be satisfied by free + evictable
-        # blocks (see the capacity argument in serve/README.md).
+        # ``pin_blocks`` = the *ids* of matched blocks currently held only
+        # by the index, which the claim would pin (they stop being
+        # evictable, so they must be charged against capacity).  admit()
+        # accumulates these sets across one pass: claims land only after
+        # admit returns, so an earlier same-batch admittee's pins are
+        # invisible to refcounts and must be carried forward explicitly —
+        # ids (not counts) so overlapping prefixes charge once, disjoint
+        # ones add up.  ``pinned_external() -> int``: index blocks with
+        # live readers that no running request's private reservation
+        # covers; invariant within one admit pass, so it is sampled once
+        # per pass.  Together they keep the worst-case guarantee:
+        # reserved + pinned_external + pending pins never exceeds
+        # capacity, so private growth can always be satisfied by free +
+        # evictable blocks (see the capacity argument in serve/README.md).
         self.prefix_probe = prefix_probe
         self.pinned_external = pinned_external
         self.waiting: deque = deque()
@@ -217,9 +223,10 @@ class FCFSScheduler:
         self.waiting.insert(i, req)
 
     def _probe(self, req) -> tuple:
-        """(hits, new_pins) from the prefix cache; (0, 0) without one."""
+        """(hits, pin block-id set) from the prefix cache; empty without
+        one."""
         if self.prefix_probe is None:
-            return 0, 0
+            return 0, frozenset()
         return self.prefix_probe(req)
 
     def _reserve_blocks_for(self, req, hits: int = 0) -> int:
@@ -253,13 +260,16 @@ class FCFSScheduler:
         total = req.prompt_len + req.max_new_tokens
         return max(total - hits * self.page, 0)
 
-    def _fits(self, req, hits: int = 0, new_pins: int = 0) -> bool:
-        pinned = self.pinned_external() if self.pinned_external else 0
+    def _fits(self, req, hits: int = 0, n_pins: int = 0,
+              pinned: int = 0) -> bool:
+        """``n_pins`` is the total pending pin charge for this admit pass
+        (the union of every prior admittee's pin blocks with this
+        candidate's); ``pinned`` the pass's pinned_external sample."""
         return (
             bool(self._free_slots)
             and self._live_tokens + self._live_charge_for(req, hits)
             <= self.max_live_tokens
-            and self._reserved_blocks + pinned + new_pins
+            and self._reserved_blocks + pinned + n_pins
             + self._reserve_blocks_for(req, hits)
             <= self.capacity_blocks
         )
@@ -270,17 +280,30 @@ class FCFSScheduler:
         Requests whose ``not_before`` backoff stamp is in the future are
         skipped (not popped); among the eligible remainder admission is
         head-of-line blocking, preserving strict FCFS determinism.
+
+        Pin accounting is cumulative across the pass: each admittee's
+        probe pin blocks join ``pending``, and the next candidate is
+        charged ``len(pending | its own pins)`` — ids, not counts, so a
+        prefix two same-batch requests share is charged once while
+        disjoint prefixes add up.  Without this, admitted-but-not-yet-
+        claimed pins (refcount still 1 until the engine claims after
+        admit returns) would be invisible and two requests could be
+        admitted against the same capacity.
         """
         admitted = []
+        pending: frozenset = frozenset()   # pin ids charged so far
+        pinned = self.pinned_external() if self.pinned_external else 0
         i = 0
         while i < len(self.waiting):
             req = self.waiting[i]
             if getattr(req, "not_before", 0) > now_step:
                 i += 1  # backing off — skip, keep queue position
                 continue
-            hits, new_pins = self._probe(req)
-            if not self._fits(req, hits, new_pins):
+            hits, pins = self._probe(req)
+            pins = pending | pins
+            if not self._fits(req, hits, len(pins), pinned):
                 break  # head-of-line blocking among eligible requests
+            pending = pins
             del self.waiting[i]
             req.slot = self._free_slots.pop()
             req.reserved_blocks = self._reserve_blocks_for(req, hits)

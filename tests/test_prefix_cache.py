@@ -28,6 +28,7 @@ from repro.configs import apply_sparsity, get_config, reduce_config
 from repro.models import LMModel
 from repro.serve import (
     ContinuousEngine,
+    FCFSScheduler,
     PageAllocator,
     PrefixIndex,
     restore_engine,
@@ -205,7 +206,96 @@ def test_snapshot_restore_with_sharing(lm, tmp_path):
     eng2.kv.allocator.check_invariants()
 
 
+def test_probe_under_pool_pressure_then_eviction(lm):
+    """Regression: the admission probe runs even for requests that do
+    not fit.  It used to stamp matched nodes' ``last_used`` with its
+    ``now=None`` sentinel, so a later LRU eviction compared None against
+    int stamps and raised TypeError — exactly under pool pressure, where
+    both the rejected probe and the eviction occur.  Pin the scenario:
+    a waiting request keeps probing a cached prefix while two running
+    requests exhaust the pool and force index evictions; everything must
+    drain to oracle-identical outputs."""
+    model, params = lm
+    rng = np.random.default_rng(5)
+    V = model.cfg.vocab_size
+    base = rng.integers(1, V, size=8).astype(np.int32)
+    cold = [rng.integers(1, V, size=4).astype(np.int32) for _ in range(3)]
+    tail = rng.integers(1, V, size=4).astype(np.int32)
+    wl = [
+        {"rid": 0, "prompt": base.copy(), "max_new_tokens": 4},
+        {"rid": 1, "prompt": cold[0], "max_new_tokens": 4},
+        {"rid": 2, "prompt": cold[1], "max_new_tokens": 16},
+        {"rid": 3, "prompt": cold[2], "max_new_tokens": 8},
+        {"rid": 4, "prompt": np.concatenate([base, tail]),
+         "max_new_tokens": 8},
+    ]
+    # capacity 8 blocks: rid 0/1 drain first and leave 3 index-held
+    # blocks; rid 2+3 reserve all 8, so rid 4 (a 2-page prefix hit) sits
+    # in the queue, probed every step, while 2/3's decode growth evicts
+    # the cached pages one by one
+    eng = ContinuousEngine(model, params, page_size=4, n_blocks=9,
+                           max_slots=3, max_request_len=24,
+                           prefix_cache=True)
+    ref = run_sequential(model, params, wl, cache_len=eng.gather_tokens)
+    eng.submit(wl[0]["prompt"], wl[0]["max_new_tokens"])
+    eng.drain()
+    eng.submit(wl[1]["prompt"], wl[1]["max_new_tokens"])
+    eng.drain()
+    assert eng.prefix.n_nodes == 3
+    for r in wl[2:]:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    eng.drain()
+    out = {r.rid: list(r.generated) for r in eng.requests.values()}
+    assert eng.stats["prefix_evictions"] >= 1, "pool never pressured"
+    for r in wl:
+        np.testing.assert_array_equal(out[r["rid"]], ref[r["rid"]],
+                                      err_msg=f"rid={r['rid']}")
+    eng.kv.allocator.check_invariants()
+
+
 # -- capacity accounting ------------------------------------------------------------
+
+
+class _FakeReq:
+    """Duck-typed request for driving FCFSScheduler without an engine."""
+
+    def __init__(self, rid, prompt_len, max_new):
+        self.rid = rid
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new
+        self.arrival_step = 0
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_same_batch_pins_accumulate_across_admit(overlap):
+    """Regression: two same-batch admittees' pin charges must combine.
+    Claims land only after admit() returns, so refcounts cannot reveal an
+    earlier admittee's pins to the next candidate; the scheduler must
+    carry the pin block-ids forward itself.  Disjoint cached prefixes
+    add up (the second request no longer fits); a shared prefix is
+    charged once (both still admitted)."""
+    pins = {0: frozenset({10, 11}),
+            1: frozenset({10, 11}) if overlap else frozenset({12, 13})}
+    sched = FCFSScheduler(
+        page_size=4, max_slots=4, max_live_tokens=0, n_blocks_capacity=5,
+        reserve="worst_case",
+        prefix_probe=lambda r: (2, pins[r.rid]),
+        pinned_external=lambda: 0,
+    )
+    # each: 12 total tokens -> 3 blocks, 2 hit-discounted to 1 reserved,
+    # plus 2 pins.  Disjoint: 1 + 4 pins + 1 = 6 > 5 blocks the second;
+    # overlapping: 1 + 2 pins + 1 = 4 <= 5 admits both.
+    sched.submit(_FakeReq(0, 8, 4))
+    sched.submit(_FakeReq(1, 8, 4))
+    admitted = [r.rid for r in sched.admit()]
+    if overlap:
+        assert admitted == [0, 1]
+    else:
+        assert admitted == [0]
+        assert sched.n_waiting == 1
+
+
+# -- capacity accounting (engine) ---------------------------------------------------
 
 
 def test_hit_discounted_reservations_admit_more(lm):
@@ -306,6 +396,52 @@ def test_prefix_index_lru_eviction_deterministic():
     assert ix.evict_one(lambda blk: blk != 11) is None
     ix.drop_all()
     assert ix.n_nodes == 0 and ix.blocks() == []
+
+
+def test_prefix_index_probe_is_read_only():
+    """``plan(tokens, None)`` (the admission probe) must not touch LRU
+    state: recency is unchanged (the stale leaf still evicts first) and
+    eviction never has to compare a None stamp against an int one (the
+    old behaviour raised TypeError exactly under pool pressure)."""
+    ix = PrefixIndex(2)
+    a = np.int32([1, 1, 2, 2])
+    ix.insert(a, [10, 11], 4, now=0)
+    ix.insert(np.int32([5, 5]), [12], 2, now=1)
+    ix.plan(a, now=None)              # probe: must not refresh 10/11
+    assert ix.plan(a, now=None).blocks == [10]
+    assert ix.evict_one(lambda blk: True) == 11   # still the LRU leaf
+    assert ix.evict_one(lambda blk: True) == 10   # now a leaf, older
+    assert ix.evict_one(lambda blk: True) == 12
+
+
+def test_prefix_index_evict_lru_batch_matches_sequential():
+    """Batch eviction (one tree scan) must reproduce the exact sequence
+    of repeated single evictions, including parents that become leaves
+    mid-batch and leaves the evictable gate refuses."""
+    def build():
+        ix = PrefixIndex(2)
+        ix.insert(np.int32([1, 1, 2, 2, 3, 3]), [10, 11, 12], 6, now=0)
+        ix.insert(np.int32([1, 1, 4, 4]), [10, 13], 4, now=2)
+        ix.insert(np.int32([5, 5]), [14], 2, now=1)
+        return ix
+
+    def gate(blk):
+        return blk != 13
+
+    seq, ix = [], build()
+    while True:
+        blk = ix.evict_one(gate)
+        if blk is None:
+            break
+        seq.append(blk)
+    assert seq == [12, 11, 14]        # LRU leaves; 13 pinned keeps 10 alive
+    ix = build()
+    assert ix.evict_lru(gate, 10) == seq
+    assert ix.evict_lru(gate, 10) == []
+    assert ix.n_nodes == 2            # 10 -> 13 chain survives
+    ix2 = build()
+    assert ix2.evict_lru(gate, 2) == seq[:2]
+    assert ix2.evict_lru(gate, 0) == []
 
 
 def test_prefix_index_model_free_engine_shaped_lifecycle():
