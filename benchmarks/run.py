@@ -20,8 +20,8 @@ import json
 
 
 SECTIONS = ("table1", "table2", "plan", "table3", "kernels", "stacked",
-            "chain", "serve", "serve_sharded", "serve_faults", "prefix",
-            "roofline")
+            "chain", "quant", "serve", "serve_sharded", "serve_faults",
+            "prefix", "roofline")
 
 
 def main() -> None:
@@ -80,6 +80,11 @@ def main() -> None:
 
         print("\n# === Chain executor (masked emulation vs blocked-CSR) ===")
         rows += chain_executor.run(print)
+    if want("quant"):
+        from . import quant_kernels
+
+        print("\n# === Quantized storage (int8 leaf blocks + block scales) ===")
+        rows += quant_kernels.run(print)
     if want("serve"):
         from . import serve_engine
 

@@ -4,7 +4,10 @@ Every kernel wrapper in :mod:`repro.kernels.rbgp4mm` accepts
 ``block_n="auto"`` (the default used by :class:`repro.kernels.ops.RBGP4Op`)
 which resolves here.  The tuner searches the token-tile width ``block_n``
 and the parallel-grid ordering of the RHS kernel per
-``(KernelDims, dtype, platform)`` key and memoizes the winner in
+``(KernelDims, dtype, value_dtype, platform)`` key — ``value_dtype`` is
+the stored-value dtype, which differs from the activation dtype under
+int8 quantized storage and changes the W-side byte traffic — and
+memoizes the winner in
 
   * an in-process dict (hit on every subsequent trace of the same layer),
   * a persistent JSON cache on disk (hit across processes / restarts),
@@ -61,7 +64,13 @@ GRID_ORDERS = ("nm", "mn")
 VMEM_BUDGET_BYTES = 16 * 2 ** 20
 MEASURE_REPS = 5
 
-_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8,
+                "int8": 1, "uint8": 1}
+
+# Persistent-cache layout version: bump whenever the key format or the
+# entry semantics change so stale files re-search instead of mis-hitting
+# (v1: flat {key: entry} without value_dtype in the key).
+CACHE_SCHEMA = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,9 +165,11 @@ def _load_disk_locked() -> None:
     try:
         with open(cache_path()) as f:
             data = json.load(f)
-        for key, entry in data.items():
+        if data.get("schema") != CACHE_SCHEMA:
+            return  # stale layout (e.g. v1 flat dict): re-search everything
+        for key, entry in data.get("entries", {}).items():
             _mem_cache.setdefault(key, TuneResult.from_json(entry))
-    except (OSError, ValueError, KeyError, TypeError):
+    except (OSError, ValueError, KeyError, TypeError, AttributeError):
         pass  # missing / unreadable cache degrades to a fresh search
 
 
@@ -172,7 +183,10 @@ def _store(key: str, result: TuneResult) -> None:
                     data = json.load(f)
             except (OSError, ValueError):
                 data = {}
-            data[key] = result.to_json()
+            if (not isinstance(data, dict)
+                    or data.get("schema") != CACHE_SCHEMA):
+                data = {"schema": CACHE_SCHEMA, "entries": {}}
+            data["entries"][key] = result.to_json()
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
             tmp = f"{path}.tmp.{os.getpid()}"
             with open(tmp, "w") as f:
@@ -194,18 +208,22 @@ def _n_bucket(n: int) -> int:
     return b
 
 
-def _key(kind: str, dims, n_bucket: int, dtype: str, platform: str) -> str:
+def _key(kind: str, dims, n_bucket: int, dtype: str, platform: str,
+         value_dtype: Optional[str] = None) -> str:
     plan = f"plan{_plan_fingerprint}|" if _plan_fingerprint else ""
     return (
-        f"{plan}{kind}|{platform}|{dtype}|m{dims.m}k{dims.k}"
+        f"{plan}{kind}|{platform}|{dtype}|w{value_dtype or dtype}"
+        f"|m{dims.m}k{dims.k}"
         f"tm{dims.tile_m}tk{dims.tile_k}G{dims.group_rows}C{dims.chunk_cols}"
         f"do{dims.d_o}di{dims.d_i}|n{n_bucket}"
     )
 
 
-def candidate_block_ns(dims, n: int, dtype: str) -> list[int]:
+def candidate_block_ns(dims, n: int, dtype: str,
+                       value_dtype: Optional[str] = None) -> list[int]:
     """Feasible block_n values: <= padded n, within the VMEM budget."""
     el = _DTYPE_BYTES.get(dtype, 4)
+    w_el = _DTYPE_BYTES.get(value_dtype or dtype, 4)
     dcols = dims.d_i * dims.chunk_cols
     out = []
     for bn in BLOCK_N_CANDIDATES:
@@ -214,7 +232,7 @@ def candidate_block_ns(dims, n: int, dtype: str) -> list[int]:
         working_set = (
             bn * dims.tile_m * 4                      # f32 accumulator
             + 2 * bn * dims.tile_k * el               # x block, double-buffered
-            + 2 * dims.tile_m * dims.d_o * dcols * el  # w row strip
+            + 2 * dims.tile_m * dims.d_o * dcols * w_el  # w row strip
             + 2 * bn * dims.tile_m * el               # out block
         )
         if working_set <= VMEM_BUDGET_BYTES:
@@ -224,7 +242,8 @@ def candidate_block_ns(dims, n: int, dtype: str) -> list[int]:
     return out
 
 
-def _search_model(dims, n: int, dtype: str, kind: str) -> TuneResult:
+def _search_model(dims, n: int, dtype: str, kind: str,
+                  value_dtype: Optional[str] = None) -> TuneResult:
     """Pick (block_n, grid_order) by the analytic roofline model.
 
     The first-order traffic model cannot separate the two grid orders (both
@@ -233,23 +252,26 @@ def _search_model(dims, n: int, dtype: str, kind: str) -> TuneResult:
     ``"nm"`` order and lets measured mode (TPU) split the tie.
     """
     el = _DTYPE_BYTES.get(dtype, 4)
-    cands = candidate_block_ns(dims, n, dtype)
+    w_el = _DTYPE_BYTES.get(value_dtype or dtype, 4)
+    cands = candidate_block_ns(dims, n, dtype, value_dtype)
     if "sddmm" in kind:
         # the reduction runs over n: per-candidate traffic is bn-invariant,
         # so take the largest feasible tile (fewest grid steps)
         bn = cands[-1]
-        est = estimate_rbgp4mm_dims(dims, n, bytes_per_el=el, block_n=bn)
+        est = estimate_rbgp4mm_dims(dims, n, bytes_per_el=el, block_n=bn,
+                                    w_bytes_per_el=w_el)
         return TuneResult(bn, "nm", est.t_total_s * 1e6, "model")
     best = None
     for bn in cands:
-        est = estimate_rbgp4mm_dims(dims, n, bytes_per_el=el, block_n=bn)
+        est = estimate_rbgp4mm_dims(dims, n, bytes_per_el=el, block_n=bn,
+                                    w_bytes_per_el=w_el)
         if best is None or est.t_total_s < best[0]:
             best = (est.t_total_s, bn)
     return TuneResult(best[1], "nm", best[0] * 1e6, "model")
 
 
 def _search_measured(dims, n: int, dtype: str, kind: str,
-                     adj_o) -> TuneResult:
+                     adj_o, value_dtype: Optional[str] = None) -> TuneResult:
     """Time real kernels on the current device (TPU); falls back to the
     model when the kernels cannot be built (e.g. no adjacency supplied)."""
     import time
@@ -265,23 +287,36 @@ def _search_measured(dims, n: int, dtype: str, kind: str,
     K = importlib.import_module(f"{__package__}.rbgp4mm")
 
     if adj_o is None:
-        return _search_model(dims, n, dtype, kind)
+        return _search_model(dims, n, dtype, kind, value_dtype)
     key = jax.random.PRNGKey(0)
     kw, kx = jax.random.split(key)
-    w = jax.random.normal(kw, (dims.m, dims.data_cols)).astype(dtype)
+    # int8 quantized storage: time the dequant-in-register kernel variant
+    # (unit scales — the memory traffic, not the values, is what's timed)
+    quant = value_dtype is not None and value_dtype != dtype \
+        and kind in ("rhs", "chain_rhs")
+    if quant:
+        w = jax.random.randint(
+            kw, (dims.m, dims.data_cols), -127, 128, dtype=jnp.int8)
+        scales = jnp.ones(
+            (dims.m // dims.group_rows,
+             dims.data_cols // dims.chunk_cols), jnp.float32)
+    else:
+        w = jax.random.normal(kw, (dims.m, dims.data_cols)).astype(dtype)
+        scales = None
     x = jax.random.normal(kx, (n, dims.k)).astype(dtype)
     adj = jnp.asarray(adj_o)
     best = None
     for order in (GRID_ORDERS if kind == "rhs" else ("nm",)):
-        for bn in candidate_block_ns(dims, n, dtype):
+        for bn in candidate_block_ns(dims, n, dtype, value_dtype):
             if kind == "rhs":
                 fn = jax.jit(lambda x, w, _bn=bn, _o=order: K.rbgp4mm_rhs(
-                    dims, adj, x, w, block_n=_bn, grid_order=_o))
+                    dims, adj, x, w, scales=scales, block_n=_bn,
+                    grid_order=_o))
             elif kind == "chain_rhs":
                 KC = importlib.import_module(f"{__package__}.chainmm")
 
                 fn = jax.jit(lambda x, w, _bn=bn: KC.chainmm_rhs(
-                    dims, adj, x, w, block_n=_bn))
+                    dims, adj, x, w, scales=scales, block_n=_bn))
             elif kind == "chain_sddmm":
                 KC = importlib.import_module(f"{__package__}.chainmm")
 
@@ -311,11 +346,13 @@ def _search_measured(dims, n: int, dtype: str, kind: str,
                 continue
             if best is None or us < best.us_estimate:
                 best = TuneResult(bn, order, us, "measured")
-    return best if best is not None else _search_model(dims, n, dtype, kind)
+    return best if best is not None else _search_model(dims, n, dtype, kind,
+                                                       value_dtype)
 
 
 def autotune(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
              platform: Optional[str] = None, adj_o=None,
+             value_dtype: Optional[str] = None,
              search_fn: Optional[Callable[..., TuneResult]] = None
              ) -> TuneResult:
     """Resolve the launch configuration for one kernel shape, cached.
@@ -330,15 +367,18 @@ def autotune(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
         cache entries.
       platform: jax backend name; default ``jax.default_backend()``.
       adj_o: optional concrete outer adjacency — required for measured mode.
+      value_dtype: stored-value dtype when it differs from ``dtype`` (int8
+        quantized storage) — part of the cache key and the W-traffic model,
+        so int8 and f32 variants of the same dims never collide.
       search_fn: test hook replacing the search (same signature as
-        ``_search_model``).
+        ``_search_model`` minus ``value_dtype``).
     """
     if platform is None:
         import jax
 
         platform = jax.default_backend()
     nb = _n_bucket(n)
-    key = _key(kind, dims, nb, dtype, platform)
+    key = _key(kind, dims, nb, dtype, platform, value_dtype)
     with _lock:
         hit = _mem_cache.get(key)
         if hit is None:
@@ -349,7 +389,8 @@ def autotune(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
         # corrupt / cross-version disk entry must trigger a re-search, not
         # a bad launch (block_n=0 would divide-by-zero deep in a forward)
         if (hit.grid_order in GRID_ORDERS
-                and hit.block_n in candidate_block_ns(dims, nb, dtype)):
+                and hit.block_n in candidate_block_ns(dims, nb, dtype,
+                                                      value_dtype)):
             return hit
         with _lock:
             _mem_cache.pop(key, None)
@@ -357,25 +398,26 @@ def autotune(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
         result = search_fn(dims, nb, dtype, kind)
     elif (platform == "tpu"
           and os.environ.get("REPRO_AUTOTUNE_MODE") == "measure"):
-        result = _search_measured(dims, nb, dtype, kind, adj_o)
+        result = _search_measured(dims, nb, dtype, kind, adj_o, value_dtype)
     else:
-        result = _search_model(dims, nb, dtype, kind)
+        result = _search_model(dims, nb, dtype, kind, value_dtype)
     _store(key, result)
     return result
 
 
 def resolve(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
             interpret: bool = False, platform: Optional[str] = None,
-            adj_o=None) -> TuneResult:
+            adj_o=None, value_dtype: Optional[str] = None) -> TuneResult:
     """The entry point ``block_n="auto"`` goes through (see rbgp4mm.py).
 
     Interpret-mode launches key the cache under platform "interpret": the
     VMEM bound still applies (the config must be valid when the same trace
     later compiles natively) but results never pollute real-device entries.
     The kernel wrappers thread their concrete ``adj_o`` through so measured
-    mode can build real kernels.
+    mode can build real kernels, and the stored-value dtype so quantized
+    variants key separately.
     """
     if interpret:
         platform = "interpret"
     return autotune(dims, n, dtype=dtype, kind=kind, platform=platform,
-                    adj_o=adj_o)
+                    adj_o=adj_o, value_dtype=value_dtype)

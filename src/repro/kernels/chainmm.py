@@ -227,7 +227,8 @@ def chain_dims(layout) -> ChainDims:
 
 
 def _resolve_block_n(block_n, dims: ChainDims, n: int, dtype, kind: str,
-                     interpret: bool, adj_head=None) -> int:
+                     interpret: bool, adj_head=None,
+                     value_dtype=None) -> int:
     if block_n != "auto":
         return int(block_n)
     from . import autotune
@@ -235,6 +236,7 @@ def _resolve_block_n(block_n, dims: ChainDims, n: int, dtype, kind: str,
     res = autotune.resolve(
         dims, n, dtype=jnp.dtype(dtype).name, kind=kind, interpret=interpret,
         adj_o=adj_head,
+        value_dtype=jnp.dtype(value_dtype or dtype).name,
     )
     return res.block_n
 
@@ -243,15 +245,27 @@ def _resolve_block_n(block_n, dims: ChainDims, n: int, dtype, kind: str,
 # Forward: Y = X @ W_s^T (token-major)
 # ---------------------------------------------------------------------------
 
-def _chain_rhs_accumulate(dims: ChainDims, x, w, acc_ref) -> None:
+def _chain_rhs_accumulate(dims: ChainDims, x, w, acc_ref, scales=None) -> None:
     """acc[:, group] += x_blocks(BN, inner) @ w_group(G, inner)^T per mid
     combination.  All slicing is static (mid adjacency is a trace-time
     constant); each step is a packed dense (BN, inner) x (G, inner)
-    contraction on the MXU."""
+    contraction on the MXU.
+
+    ``scales`` (tile_m/G, inner/C), present iff ``w`` holds int8 leaf
+    blocks: each (G, C) leaf block is dequantized in-register against its
+    per-leaf-block scale before the contraction, so the f32 accumulator
+    sees the full-precision operand.
+    """
     G, C = dims.leaf_rows, dims.leaf_cols
     full = dims.full_col_starts
     for row_off, col_starts in dims.row_groups:
         w_u = w[row_off:row_off + G, :]  # (G, inner)
+        if scales is not None:
+            s_u = scales[row_off // G, :]  # (inner/C,) leaf-block scales
+            w_u = (
+                w_u.astype(jnp.float32).reshape(G, dims.inner // C, C)
+                * s_u[None, :, None]
+            ).reshape(G, dims.inner)
         if col_starts == full:
             # dense mid structure: the whole X tile, no concat
             x_u = x
@@ -266,15 +280,26 @@ def _chain_rhs_accumulate(dims: ChainDims, x, w, acc_ref) -> None:
         )
 
 
-def _chain_rhs_kernel(dims: ChainDims, adj_ref, x_ref, w_ref, y_ref, acc_ref):
-    """One (i, j, kk) grid cell: Y[i, j] += X(i, adj[j, kk]) @ W(j, kk)^T."""
+def _chain_rhs_kernel(dims: ChainDims, has_scales: bool, adj_ref, *refs):
+    """One (i, j, kk) grid cell: Y[i, j] += X(i, adj[j, kk]) @ W(j, kk)^T.
+
+    ``has_scales``: W tiles are int8 leaf blocks; their per-leaf-block
+    scales ride as one extra (tile_m/G, inner/C) operand and the dequant
+    happens in-register inside ``_chain_rhs_accumulate``.
+    """
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    s_ref = next(it) if has_scales else None
+    y_ref, acc_ref = next(it), next(it)
+
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    _chain_rhs_accumulate(dims, x_ref[...], w_ref[...], acc_ref)
+    _chain_rhs_accumulate(dims, x_ref[...], w_ref[...], acc_ref,
+                          scales=s_ref[...] if has_scales else None)
 
     @pl.when(kk == dims.d_head - 1)
     def _write():
@@ -287,6 +312,7 @@ def chainmm_rhs(
     x: jax.Array,
     w_data: jax.Array,
     *,
+    scales: Optional[jax.Array] = None,
     block_n="auto",
     interpret: bool = False,
     out_dtype=None,
@@ -298,18 +324,26 @@ def chainmm_rhs(
       adj_head: (n_left(G_1), d_1) int32 head adjacency (scalar-prefetched).
       x: (N, K) token-major input.
       w_data: (M, prod d_j) compact values (ChainLayout slot order).
+      scales: optional (M/G, data_cols/C) per-leaf-block scales — int8
+        ``w_data`` is dequantized in-register against the f32 accumulator
+        (scale columns follow the value slots' head-major order, so the
+        scale operand shares the W block-index map).
     Returns:
       (N, M).
     """
     m, k = dims.m, dims.k
+    G, C = dims.leaf_rows, dims.leaf_cols
     if w_data.shape != (m, dims.data_cols):
         raise ValueError(f"w_data {w_data.shape} != {(m, dims.data_cols)}")
     if x.shape[1] != k:
         raise ValueError(f"x cols {x.shape[1]} != K {k}")
+    if scales is not None and scales.shape != (m // G, dims.data_cols // C):
+        raise ValueError(
+            f"scales {scales.shape} != {(m // G, dims.data_cols // C)}")
     n = x.shape[0]
     out_dtype = out_dtype or x.dtype
     bn = _resolve_block_n(block_n, dims, n, x.dtype, "chain_rhs",
-                          interpret, adj_head)
+                          interpret, adj_head, value_dtype=w_data.dtype)
 
     bn = min(bn, _round_up(n, 16 if not interpret else 8))
     n_pad = _round_up(n, bn)
@@ -318,17 +352,26 @@ def chainmm_rhs(
 
     grid = (n_pad // bn, dims.n_row_tiles, dims.d_head)
 
+    in_specs = [
+        pl.BlockSpec((bn, dims.tile_k),
+                     lambda i, j, kk, adj: (i, adj[j, kk])),
+        pl.BlockSpec((dims.tile_m, dims.inner),
+                     lambda i, j, kk, adj: (j, kk)),
+    ]
+    operands = [x, w_data.reshape(m, dims.data_cols)]
+    if scales is not None:
+        in_specs.append(
+            pl.BlockSpec((dims.tile_m // G, dims.inner // C),
+                         lambda i, j, kk, adj: (j, kk))
+        )
+        operands.append(scales.astype(jnp.float32))
+
     out = pl.pallas_call(
-        functools.partial(_chain_rhs_kernel, dims),
+        functools.partial(_chain_rhs_kernel, dims, scales is not None),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((bn, dims.tile_k),
-                             lambda i, j, kk, adj: (i, adj[j, kk])),
-                pl.BlockSpec((dims.tile_m, dims.inner),
-                             lambda i, j, kk, adj: (j, kk)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (bn, dims.tile_m), lambda i, j, kk, adj: (i, j)
             ),
@@ -339,7 +382,7 @@ def chainmm_rhs(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(adj_head, x, w_data.reshape(m, dims.data_cols))
+    )(adj_head, *operands)
     return out[:n] if n_pad != n else out
 
 

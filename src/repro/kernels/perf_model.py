@@ -72,7 +72,15 @@ class KernelEstimate:
 
 def _estimate(m_dim: int, tile_m: int, tile_k: int, group_rows: int,
               chunk_cols: int, d_o: int, d_i: int, n: int,
-              bytes_per_el: int, block_n: int) -> KernelEstimate:
+              bytes_per_el: int, block_n: int,
+              w_bytes_per_el=None) -> KernelEstimate:
+    # w_bytes_per_el: stored-value width when it differs from the
+    # activation width (int8 quantized storage: 1 + the per-leaf-block f32
+    # scales, 4/(G*C) bytes amortized per value)
+    if w_bytes_per_el is None:
+        w_bytes_per_el = bytes_per_el
+    elif w_bytes_per_el < bytes_per_el:
+        w_bytes_per_el = w_bytes_per_el + 4.0 / (group_rows * chunk_cols)
     nnz_per_row = d_o * d_i * chunk_cols
     nnz = m_dim * nnz_per_row
     flops = 2.0 * m_dim * n * nnz_per_row
@@ -81,7 +89,7 @@ def _estimate(m_dim: int, tile_m: int, tile_k: int, group_rows: int,
     n_tiles_m = max(m_dim // tile_m, 1)
     n_tiles_n = max(n // bn, 1)
     # W: compact values streamed once per N pass
-    bytes_w = nnz * bytes_per_el * n_tiles_n
+    bytes_w = nnz * w_bytes_per_el * n_tiles_n
     # I: per output tile, d_o gathered input tiles (zero tiles skipped)
     bytes_i = n_tiles_m * n_tiles_n * d_o * (tile_k * bn) * bytes_per_el
     bytes_o = m_dim * n * bytes_per_el
@@ -96,16 +104,23 @@ def _estimate(m_dim: int, tile_m: int, tile_k: int, group_rows: int,
 
 
 def estimate_rbgp4mm(
-    spec, n: int, *, bytes_per_el: int = 2, block_n: int = 512
+    spec, n: int, *, bytes_per_el: int = 2, block_n: int = 512,
+    w_bytes_per_el=None,
 ) -> KernelEstimate:
-    """Cost of O = W_s @ I for W_s (M, K) with RBGP4Spec `spec`, I (K, n)."""
+    """Cost of O = W_s @ I for W_s (M, K) with RBGP4Spec `spec`, I (K, n).
+
+    ``w_bytes_per_el`` prices the stored values separately from the
+    activations (int8 quantized storage: pass 1); scale-read overhead is
+    folded in automatically.
+    """
     return _estimate(spec.m, spec.tile_m, spec.tile_k, spec.group_rows,
                      spec.chunk_cols, spec.d_o, spec.d_i, n,
-                     bytes_per_el, block_n)
+                     bytes_per_el, block_n, w_bytes_per_el)
 
 
 def estimate_rbgp4mm_dims(
-    dims, n: int, *, bytes_per_el: int = 2, block_n: int = 512
+    dims, n: int, *, bytes_per_el: int = 2, block_n: int = 512,
+    w_bytes_per_el=None,
 ) -> KernelEstimate:
     """Same model parameterized by ``KernelDims`` (the autotuner's view).
 
@@ -115,11 +130,12 @@ def estimate_rbgp4mm_dims(
     """
     return _estimate(dims.m, dims.tile_m, dims.tile_k, dims.group_rows,
                      dims.chunk_cols, dims.d_o, dims.d_i, n,
-                     bytes_per_el, block_n)
+                     bytes_per_el, block_n, w_bytes_per_el)
 
 
 def estimate_chainmm(
-    dims, n: int, *, bytes_per_el: int = 2, block_n: int = 512
+    dims, n: int, *, bytes_per_el: int = 2, block_n: int = 512,
+    w_bytes_per_el=None,
 ) -> KernelEstimate:
     """Cost of the blocked-CSR chain executor (``kernels.chainmm``).
 
@@ -134,11 +150,12 @@ def estimate_chainmm(
     """
     return _estimate(dims.m, dims.tile_m, dims.tile_k, dims.group_rows,
                      dims.chunk_cols, dims.d_o, dims.d_i, n,
-                     bytes_per_el, block_n)
+                     bytes_per_el, block_n, w_bytes_per_el)
 
 
 def estimate_chain_spec(
-    spec, n: int, *, bytes_per_el: int = 2, block_n: int = 512
+    spec, n: int, *, bytes_per_el: int = 2, block_n: int = 512,
+    w_bytes_per_el=None,
 ) -> KernelEstimate:
     """Chain estimate straight from an ``RBGPSpec`` (no graph sampling).
 
@@ -163,7 +180,7 @@ def estimate_chain_spec(
         inner *= f.d_left
     return _estimate(spec.m, spec.m // fs[0].n_left, spec.k // fs[0].n_right,
                      g_rows, c_cols, d_head, inner // c_cols, n,
-                     bytes_per_el, block_n)
+                     bytes_per_el, block_n, w_bytes_per_el)
 
 
 def estimate_dense(m_dim: int, k_dim: int, n: int, *, bytes_per_el: int = 2,

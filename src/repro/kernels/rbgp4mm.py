@@ -185,11 +185,15 @@ def kernel_dims(layout) -> KernelDims:
 
 
 def _resolve_block_n(block_n, dims: KernelDims, n: int, dtype, kind: str,
-                     interpret: bool, adj_o=None) -> tuple[int, str]:
+                     interpret: bool, adj_o=None,
+                     value_dtype=None) -> tuple[int, str]:
     """Resolve ``block_n="auto"`` (and the grid order) via the autotuner.
 
     ``adj_o`` is threaded through so measured mode (TPU,
     ``REPRO_AUTOTUNE_MODE=measure``) can build and time real kernels.
+    ``value_dtype`` is the stored-value dtype when it differs from the
+    activation dtype (int8 quantized storage) — it changes the kernel's
+    W-side byte traffic, so it is part of the autotuner cache key.
     """
     if block_n != "auto":
         return int(block_n), "nm"
@@ -198,6 +202,7 @@ def _resolve_block_n(block_n, dims: KernelDims, n: int, dtype, kind: str,
     res = autotune.resolve(
         dims, n, dtype=jnp.dtype(dtype).name, kind=kind, interpret=interpret,
         adj_o=adj_o,
+        value_dtype=jnp.dtype(value_dtype or dtype).name,
     )
     return res.block_n, res.grid_order
 
@@ -398,16 +403,26 @@ def rbgp4_sddmm(
 # ``_rhs_accumulate`` is the inner contraction, ``_rhs_writeback`` the
 # epilogue; the ``_..._kernel`` functions are thin ref-plumbing shims.
 
-def _rhs_accumulate(dims: KernelDims, x, w, acc_ref) -> None:
+def _rhs_accumulate(dims: KernelDims, x, w, acc_ref, scales=None) -> None:
     """acc[:, group] += x_blk(BN, TK) @ w_blk(TM, d_i*C)^T per inner group.
 
     Contracts over W's compact column dim directly (dot_general
     ((1,), (1,))), writing (BN, G)-wide accumulator slices per inner group
     — the token-major twin of ``_mm_kernel``'s loop.
+
+    ``scales`` (u_i, d_i), present iff ``w`` holds int8 leaf blocks:
+    each (G, C) leaf block is dequantized in-register (f32 upcast * its
+    per-leaf-block scale) before feeding the MXU, so the f32 accumulator
+    sees the same operand the full-precision kernel would.
     """
     G, C = dims.group_rows, dims.chunk_cols
     for ui in range(dims.u_i):
         w_u = w[ui * G:(ui + 1) * G, :]  # (G, d_i*C)
+        if scales is not None:
+            w_u = (
+                w_u.astype(jnp.float32).reshape(G, dims.d_i, C)
+                * scales[ui, :][None, :, None]
+            ).reshape(G, dims.d_i * C)
         cols = dims.adj_i[ui]
         if len(cols) == dims.v_i:
             x_u = x
@@ -436,12 +451,17 @@ def _rhs_writeback(act: Optional[str], acc, b):
 
 
 def _mm_rhs_kernel(dims: KernelDims, act: Optional[str], has_bias: bool,
-                   has_residual: bool, save_preact: bool, adj_ref, *refs):
+                   has_residual: bool, save_preact: bool, has_scales: bool,
+                   adj_ref, *refs):
     """One (i, j, k) grid cell: Y[i, j] += Xtile(i, adj[j,k]) @ Wtile(j, k)^T.
 
     Beyond-paper variant: the paper's SDMM computes O = W_s @ I with
     feature-major activations; model code is token-major, so the LHS form
     costs two full activation transposes per layer.
+
+    ``has_scales``: W tiles are int8 leaf blocks; their per-leaf-block
+    scales ride as one extra (u_i, d_i) operand and the dequant happens
+    in-register inside ``_rhs_accumulate``, upstream of the epilogue.
 
     Epilogue (all static flags, applied on the f32 accumulator in the final
     reduction step, before the single write-back):
@@ -450,6 +470,7 @@ def _mm_rhs_kernel(dims: KernelDims, act: Optional[str], has_bias: bool,
     """
     it = iter(refs)
     x_ref, w_ref = next(it), next(it)
+    s_ref = next(it) if has_scales else None
     b_ref = next(it) if has_bias else None
     r_ref = next(it) if has_residual else None
     y_ref = next(it)
@@ -462,7 +483,8 @@ def _mm_rhs_kernel(dims: KernelDims, act: Optional[str], has_bias: bool,
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    _rhs_accumulate(dims, x_ref[...], w_ref[...], acc_ref)
+    _rhs_accumulate(dims, x_ref[...], w_ref[...], acc_ref,
+                    scales=s_ref[...] if has_scales else None)
 
     @pl.when(kk == dims.d_o - 1)
     def _write():
@@ -481,6 +503,7 @@ def rbgp4mm_rhs(
     x: jax.Array,
     w_data: jax.Array,
     *,
+    scales: Optional[jax.Array] = None,
     block_n="auto",
     grid_order: Optional[str] = None,
     bias: Optional[jax.Array] = None,
@@ -494,6 +517,12 @@ def rbgp4mm_rhs(
 
     See the module docstring for the epilogue contract.  Returns ``Y`` or
     ``(Y, Z)`` when ``save_preact`` (``Z`` the pre-activation).
+
+    ``scales`` (M/G, d_o*d_i) switches on the quantized path: ``w_data``
+    holds int8 leaf-block values and each (G, C) leaf block is dequantized
+    in-register against its scale before the f32-accumulator contraction
+    (the epilogue is unchanged).  Scale columns follow the value tiles'
+    outer-slot order, so the scale operand shares the W block-index map.
     """
     m, k = dims.m, dims.k
     if w_data.shape != (m, dims.data_cols):
@@ -502,11 +531,17 @@ def rbgp4mm_rhs(
         raise ValueError(f"x cols {x.shape[1]} != K {k}")
     if act is not None and act not in EPILOGUE_ACTS:
         raise ValueError(f"act {act!r} not in {sorted(EPILOGUE_ACTS)}")
+    n_scale_cols = dims.d_o * dims.d_i
+    if scales is not None and scales.shape != (m // dims.group_rows,
+                                               n_scale_cols):
+        raise ValueError(
+            f"scales {scales.shape} != "
+            f"{(m // dims.group_rows, n_scale_cols)}")
     n = x.shape[0]
     out_dtype = out_dtype or x.dtype
     auto_bn, auto_order = _resolve_block_n(
         block_n if block_n is not None else "auto", dims, n, x.dtype, "rhs",
-        interpret, adj_o)
+        interpret, adj_o, value_dtype=w_data.dtype)
     grid_order = grid_order or auto_order
     if grid_order not in ("nm", "mn"):
         raise ValueError(f"grid_order {grid_order!r} not in ('nm', 'mn')")
@@ -551,6 +586,11 @@ def rbgp4mm_rhs(
         pl.BlockSpec((dims.tile_m, dcols), w_map),
     ]
     operands = [x, w_data.reshape(m, dims.d_o * dcols)]
+    if scales is not None:
+        # one f32 scale per (G, C) leaf block; the (j, kk) tile owns the
+        # (u_i, d_i) scale sub-block matching its value tile
+        in_specs.append(pl.BlockSpec((dims.u_i, dims.d_i), w_map))
+        operands.append(scales.astype(jnp.float32))
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, dims.tile_m), b_map))
         operands.append(bias.reshape(1, m))
@@ -569,7 +609,7 @@ def rbgp4mm_rhs(
     out = pl.pallas_call(
         functools.partial(
             _mm_rhs_kernel, dims, act, bias is not None,
-            residual is not None, save_preact,
+            residual is not None, save_preact, scales is not None,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -695,15 +735,18 @@ def rbgp4_sddmm_rhs(
 # ---------------------------------------------------------------------------
 
 def _mm_rhs_stacked_kernel(dims: KernelDims, act: Optional[str],
-                           has_bias: bool, save_preact: bool, adj_ref, *refs):
+                           has_bias: bool, save_preact: bool,
+                           has_scales: bool, adj_ref, *refs):
     """One (e, i, j, k) grid cell: Y[e, i, j] += X[e](i, adj[j,k]) @ W[e](j, k)^T.
 
     Identical math to ``_mm_rhs_kernel`` (shared ``_rhs_accumulate`` /
-    ``_rhs_writeback``) with a leading expert grid dim; blocks carry a unit
+    ``_rhs_writeback``, including the int8 in-register dequant when
+    ``has_scales``) with a leading expert grid dim; blocks carry a unit
     expert dim which is dropped with ``[0]``.
     """
     it = iter(refs)
     x_ref, w_ref = next(it), next(it)
+    s_ref = next(it) if has_scales else None
     b_ref = next(it) if has_bias else None
     y_ref = next(it)
     z_ref = next(it) if save_preact else None
@@ -715,7 +758,8 @@ def _mm_rhs_stacked_kernel(dims: KernelDims, act: Optional[str],
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    _rhs_accumulate(dims, x_ref[0], w_ref[0], acc_ref)
+    _rhs_accumulate(dims, x_ref[0], w_ref[0], acc_ref,
+                    scales=s_ref[0] if has_scales else None)
 
     @pl.when(kk == dims.d_o - 1)
     def _write():
@@ -732,6 +776,7 @@ def rbgp4mm_rhs_stacked(
     x: jax.Array,
     w_data: jax.Array,
     *,
+    scales: Optional[jax.Array] = None,
     block_n="auto",
     bias: Optional[jax.Array] = None,
     act: Optional[str] = None,
@@ -747,6 +792,8 @@ def rbgp4mm_rhs_stacked(
     Args:
       x: (E, N, K) token-major per-expert inputs.
       w_data: (E, M, d_o * d_i * C) stacked compact values.
+      scales: optional (E, M/G, d_o*d_i) per-leaf-block scales — int8
+        ``w_data`` dequantized in-register (see ``rbgp4mm_rhs``).
       bias: optional (E, M).
     Returns:
       (E, N, M), or ``((E, N, M), (E, N, M))`` pre-activations when
@@ -760,10 +807,16 @@ def rbgp4mm_rhs_stacked(
         raise ValueError(f"x {x.shape} != (E, N, {k})")
     if act is not None and act not in EPILOGUE_ACTS:
         raise ValueError(f"act {act!r} not in {sorted(EPILOGUE_ACTS)}")
+    if scales is not None and scales.shape != (
+            e, m // dims.group_rows, dims.d_o * dims.d_i):
+        raise ValueError(
+            f"scales {scales.shape} != "
+            f"{(e, m // dims.group_rows, dims.d_o * dims.d_i)}")
     n = x.shape[1]
     out_dtype = out_dtype or x.dtype
     block_n, _ = _resolve_block_n(block_n, dims, n, x.dtype, "rhs",
-                                  interpret, adj_o)
+                                  interpret, adj_o,
+                                  value_dtype=w_data.dtype)
 
     bn = min(block_n, _round_up(n, 16 if not interpret else 8))
     n_pad = _round_up(n, bn)
@@ -780,6 +833,12 @@ def rbgp4mm_rhs_stacked(
                      lambda ee, i, j, kk, adj: (ee, j, kk)),
     ]
     operands = [x, w_data.reshape(e, m, dims.d_o * dcols)]
+    if scales is not None:
+        in_specs.append(
+            pl.BlockSpec((1, dims.u_i, dims.d_i),
+                         lambda ee, i, j, kk, adj: (ee, j, kk))
+        )
+        operands.append(scales.astype(jnp.float32))
     if bias is not None:
         in_specs.append(
             pl.BlockSpec((1, dims.tile_m), lambda ee, i, j, kk, adj: (ee, j))
@@ -798,7 +857,8 @@ def rbgp4mm_rhs_stacked(
 
     out = pl.pallas_call(
         functools.partial(
-            _mm_rhs_stacked_kernel, dims, act, bias is not None, save_preact
+            _mm_rhs_stacked_kernel, dims, act, bias is not None, save_preact,
+            scales is not None,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,

@@ -93,6 +93,14 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["auto"] + available_backends(),
                     help="execution backend from the sparsity registry "
                          "('auto': compact storage, pallas-on-TPU)")
+    ap.add_argument("--quant", default="", choices=["", "int8"],
+                    help="weight-only PTQ of the served params: every "
+                         "compact/chain container stores int8 leaf blocks "
+                         "+ per-leaf-block f32 scales (the 'quant' "
+                         "backend), the plan's succinct rules are stamped "
+                         "quant=int8 (checkpoint fingerprints refuse "
+                         "f32<->int8), and plan-aware admission credits "
+                         "the freed value bytes as KV headroom")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--autotune-cache", default="",
@@ -157,8 +165,20 @@ def main():
         cfg = apply_sparsity(cfg, pattern=args.pattern,
                              sparsity=args.sparsity, backend=args.backend,
                              min_dim=64)
+    if args.quant:
+        # stamp quant on the succinct rules *before* the model resolves the
+        # plan: the fingerprint (and plan-aware admission) must describe
+        # the int8 storage actually served
+        cfg = apply_sparsity(cfg, plan=cfg.sparsity_rules.with_quant(
+            args.quant))
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    if args.quant:
+        from repro.sparsity import quantize_weights
+
+        params = quantize_weights(params)
+        print(f"weight-only PTQ: compact/chain values -> {args.quant} "
+              f"leaf blocks + per-leaf-block f32 scales")
     sp_desc = (f"plan={cfg.sparsity_rules.fingerprint()} "
                f"({len(cfg.sparsity_rules.rules)} rules)"
                if cfg.plan is not None else

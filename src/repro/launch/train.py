@@ -120,6 +120,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--min-dim", type=int, default=64)
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8"])
+    ap.add_argument("--quant", default="", choices=["", "int8"],
+                    help="after training, export a weight-only PTQ snapshot "
+                         "(compact/chain values -> int8 leaf blocks + per-"
+                         "leaf-block f32 scales) to <checkpoint-dir>/"
+                         "ptq_<quant>, stamped with the quant-marked plan "
+                         "fingerprint so f32<->int8 restores refuse")
     ap.add_argument("--checkpoint-every", type=int, default=25)
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--simulate-failure", type=int, default=None)
@@ -183,6 +189,17 @@ def main():
               f"slow steps: {trainer.straggler_events[:5]}")
     print(f"done: steps={int(trainer.state.step)} "
           f"first-loss={losses[0]:.4f} last-loss={losses[-1]:.4f}")
+    if args.quant:
+        from repro.sparsity import quantize_weights
+        from repro.train.checkpoint import CheckpointManager
+
+        qplan = plan.with_quant(args.quant)
+        qdir = os.path.join(tcfg.checkpoint_dir, f"ptq_{args.quant}")
+        mgr = CheckpointManager(qdir, plan_fingerprint=qplan.fingerprint())
+        step = int(trainer.state.step)
+        mgr.save(step, quantize_weights(trainer.state.full_params()))
+        print(f"PTQ export: {args.quant} leaf-block weights -> "
+              f"{mgr.path(step)} (plan {qplan.fingerprint()})", flush=True)
 
 
 if __name__ == "__main__":

@@ -57,7 +57,16 @@ def plan_aware_live_tokens(base_tokens: int, *, plan, shapes: dict,
     dense, and the freed bytes are exactly KV headroom the admission
     control may spend on more live tokens:
 
-        budget = base + (1 - density) * dense_weight_bytes / kv_per_token
+        budget = base + (dense_weight_bytes - resident_bytes) / kv_per_token
+
+    ``resident_bytes`` prices each layer by what the plan actually keeps
+    in HBM: ``nnz * value_bytes`` for full-precision sparse layers — so
+    with no quantization this reduces exactly to the historical
+    ``(1 - density) * dense_bytes`` credit — and, for succinct rules
+    stamped ``quant='int8'``, one int8 byte per value plus the f32
+    per-leaf-block scales (``4 / (G*C)`` bytes per value amortized):
+    weight-only quantization frees ~3/4 of the remaining value bytes and
+    that headroom, too, is KV tokens the admission control may spend.
 
     ``shapes`` is the model's projection shape table
     (:func:`repro.sparsity.model_matmul_shapes`); ``kv_bytes_per_token``
@@ -66,15 +75,26 @@ def plan_aware_live_tokens(base_tokens: int, *, plan, shapes: dict,
     caps admission — ``FCFSScheduler`` clamps any budget to the physical
     block pool, so this can never over-admit.
     """
-    from repro.sparsity import plan_density
-
-    dens = plan_density(plan, shapes)
     dense_bytes = 0.0
-    for shp in shapes.values():
+    resident = 0.0
+    for path, shp in shapes.items():
         m, k = int(shp[0]), int(shp[1])
         c = int(shp[2]) if len(shp) > 2 else 1
         dense_bytes += float(m) * k * c * value_bytes
-    freed = dense_bytes * (1.0 - dens)
+        spec = plan.resolve(path, m, k)
+        inst = plan.pattern_for(path, m, k)
+        nnz = float(inst.nnz) * c
+        lay = inst.layout if inst.layout is not None else inst.chain_layout
+        if (lay is not None and spec.is_sparse
+                and getattr(spec, "quant", None) == "int8"
+                and spec.storage() in ("compact", "chain")):
+            from repro.sparsity.quant import leaf_block_dims
+
+            g_rows, c_cols = leaf_block_dims(lay)
+            resident += nnz * (1.0 + 4.0 / (g_rows * c_cols))
+        else:
+            resident += nnz * value_bytes
+    freed = dense_bytes - resident
     return int(base_tokens + freed // max(kv_bytes_per_token, 1.0))
 
 

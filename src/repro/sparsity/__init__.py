@@ -20,6 +20,13 @@ from .api import (
     expand_rbgp4_mask,
 )
 from .chain import chain_weight, chain_storage_bytes
+from .quant import (
+    QuantizedWeight,
+    quantize_weight,
+    quantize_weights,
+    dequantize_weights,
+    quant_storage_bytes,
+)
 from .plan import (
     PatternSpec,
     PlanRule,
@@ -44,6 +51,8 @@ __all__ = [
     "available_backends", "resolve_backend", "storage_kind",
     "SparseWeight", "DenseWeight", "MaskedWeight", "CompactWeight",
     "ChainWeight", "chain_weight", "chain_storage_bytes",
+    "QuantizedWeight", "quantize_weight", "quantize_weights",
+    "dequantize_weights", "quant_storage_bytes",
     "sparse_linear", "sparse_linear_batched", "sparse_matmul", "dense_weight",
     "SparseLinear", "expand_rbgp4_mask",
 ]

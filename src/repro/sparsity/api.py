@@ -98,6 +98,7 @@ __all__ = [
     "MaskedWeight",
     "CompactWeight",
     "ChainWeight",
+    "QuantizedWeight",
     "sparse_linear",
     "sparse_linear_batched",
     "sparse_matmul",
@@ -254,6 +255,11 @@ class CompactWeight(SparseWeight):
 # only needs SparseWeight, which is already bound at this point.
 from .chain import ChainWeight  # noqa: E402
 
+# QuantizedWeight (int8 leaf-block values + per-leaf-block scales over a
+# compact/chain layout) lives in .quant with the PTQ passes; same
+# late-import contract as .chain above.
+from .quant import QuantizedWeight  # noqa: E402
+
 
 # ---------------------------------------------------------------------------
 # backend protocol + registry
@@ -275,6 +281,9 @@ class BackendCapabilities:
                      dispatchers apply the epilogue as separate ops.
     batched:         executes stacked expert weights (leading E dim) in
                      one launch (implements ``linear_batched``).
+    quant:           consumes QuantizedWeight (int8 leaf-block values +
+                     per-leaf-block scales, dequantized in-register or
+                     on delegation — see ``sparsity/quant.py``).
     """
 
     needs_layout: bool = False
@@ -284,6 +293,7 @@ class BackendCapabilities:
     platforms: tuple[str, ...] = ("cpu", "gpu", "tpu")
     epilogue: bool = False
     batched: bool = False
+    quant: bool = False
 
     def supports_platform(self, platform: str) -> bool:
         return platform in self.platforms
@@ -353,6 +363,7 @@ def available_backends(
     grad_support: Optional[bool] = None,
     epilogue: Optional[bool] = None,
     batched: Optional[bool] = None,
+    quant: Optional[bool] = None,
 ) -> list[str]:
     """Backend names filtered by capability / platform / weight type."""
     out = []
@@ -371,6 +382,8 @@ def available_backends(
         if epilogue is not None and caps.epilogue != epilogue:
             continue
         if batched is not None and caps.batched != batched:
+            continue
+        if quant is not None and caps.quant != quant:
             continue
         if weight is not None:
             wtype = weight if isinstance(weight, type) else type(weight)
@@ -420,10 +433,17 @@ def resolve_backend(weight: SparseWeight, backend: str = "auto") -> SparseBacken
     ``auto``: DenseWeight -> ref; MaskedWeight -> xla_masked;
     CompactWeight -> pallas on TPU, xla_compact elsewhere;
     ChainWeight -> chain (which itself picks Pallas on TPU, the bit-exact
-    masked-reference twin elsewhere).
-    An explicitly named backend is validated against the weight type.
+    masked-reference twin elsewhere); QuantizedWeight -> quant (int8
+    Pallas on TPU, dequantize-and-delegate elsewhere).
+    An explicitly named backend is validated against the weight type —
+    except that a QuantizedWeight handed to a backend that doesn't accept
+    it reroutes to ``quant``: plans written before quantization name the
+    f32 executor (pallas / xla_compact / chain), and PTQ changes the
+    container type without editing the plan.
     """
     if backend == "auto":
+        if isinstance(weight, QuantizedWeight):
+            return get_backend("quant")
         if isinstance(weight, ChainWeight):
             return get_backend("chain")
         if isinstance(weight, CompactWeight):
@@ -438,6 +458,8 @@ def resolve_backend(weight: SparseWeight, backend: str = "auto") -> SparseBacken
         return get_backend("ref")
     be = get_backend(backend)
     if not isinstance(weight, be.accepts):
+        if isinstance(weight, QuantizedWeight) and "quant" in _REGISTRY:
+            return get_backend("quant")
         raise TypeError(
             f"backend {be.name!r} accepts "
             f"{tuple(t.__name__ for t in be.accepts)}, got "
@@ -553,6 +575,8 @@ def dense_weight(weight: SparseWeight, dtype=None) -> jax.Array:
         if dtype is not None:
             w_data = w_data.astype(dtype)
         return chain_unpack_dense(weight.layout, w_data)
+    if isinstance(weight, QuantizedWeight):
+        return dense_weight(weight.dequantize(), dtype)
     raise TypeError(f"not a SparseWeight: {type(weight).__name__}")
 
 
@@ -708,8 +732,90 @@ class ChainBackend:
         return dense_weight(weight, x.dtype) @ x
 
 
+class QuantBackend:
+    """int8 leaf-block executor for :class:`QuantizedWeight` (weight-only PTQ).
+
+    On TPU: the RBGP4MM / chainmm RHS Pallas kernels stream the int8
+    values and dequantize in-register against the f32 accumulator (one
+    per-leaf-block scale multiply before each MXU dot) — value traffic
+    drops ~4x while the matmul numerics stay f32.
+
+    Off TPU (and for any op the quantized kernels don't cover): the
+    container is dequantized back to its wrapped compact/chain form and
+    delegated to that type's auto-resolved backend, which makes the
+    fallback *bit-identical* to serving the dequantized weights directly
+    — the end-to-end parity anchor the serving tests pin.
+
+    Deliberately declares no ``epilogue``: bias / activation / residual
+    are applied by the dispatchers exactly as on the dequantized
+    reference path, so greedy-decoding parity holds by construction.
+    ``grad_support`` is False — PTQ storage is inference-only.
+    """
+
+    name = "quant"
+    capabilities = BackendCapabilities(
+        needs_layout=True, grad_support=False, batched=True, quant=True,
+    )
+    accepts = (QuantizedWeight,)
+
+    @staticmethod
+    def _delegate(weight):
+        inner = weight.dequantize()
+        return inner, resolve_backend(inner, "auto")
+
+    def linear(self, weight, x):
+        if jax.default_backend() == "tpu":
+            lay = weight.layout
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, lay.k)
+            if weight.kind == "chain":
+                from repro.kernels import chainmm
+
+                y = chainmm.chainmm_rhs(
+                    chainmm.chain_dims(lay),
+                    jnp.asarray(lay.adjs[0], jnp.int32),
+                    x2, weight.q_data, scales=weight.scales,
+                )
+            else:
+                from repro.kernels import rbgp4mm
+
+                y = rbgp4mm.rbgp4mm_rhs(
+                    rbgp4mm.kernel_dims(lay),
+                    jnp.asarray(lay.adj_o, jnp.int32),
+                    x2, weight.q_data, scales=weight.scales,
+                    out_dtype=x.dtype,
+                )
+            return y.reshape(*lead, lay.m)
+        inner, be = self._delegate(weight)
+        return be.linear(inner, x)
+
+    def linear_batched(self, weight, x):
+        if weight.kind == "chain":
+            raise NotImplementedError(
+                "stacked-expert execution is compact-storage only "
+                "(chain layers are not expert-stacked)"
+            )
+        if jax.default_backend() == "tpu":
+            from repro.kernels import rbgp4mm
+
+            lay = weight.layout
+            return rbgp4mm.rbgp4mm_rhs_stacked(
+                rbgp4mm.kernel_dims(lay),
+                jnp.asarray(lay.adj_o, jnp.int32),
+                x, weight.q_data, scales=weight.scales,
+                out_dtype=x.dtype,
+            )
+        inner, be = self._delegate(weight)
+        return be.linear_batched(inner, x)
+
+    def matmul(self, weight, x):
+        inner, be = self._delegate(weight)
+        return be.matmul(inner, x)
+
+
 register_backend(RefBackend())
 register_backend(XlaMaskedBackend())
 register_backend(XlaCompactBackend())
 register_backend(PallasBackend())
 register_backend(ChainBackend())
+register_backend(QuantBackend())

@@ -47,6 +47,11 @@ class SparsityConfig:
     min_dim: skip sparsification for matrices with any dim below this
              (embeddings/heads/tiny projections stay dense, as in the paper
              which keeps first & classifier layers dense).
+    quant: value storage dtype for the layer's sparse weights — None
+             (full precision, the default) or 'int8' (weight-only PTQ:
+             int8 leaf-block values + per-leaf-block f32 scales, see
+             ``repro.sparsity.quant``).  Part of the plan fingerprint, so
+             f32 and int8 checkpoints never restore into each other.
     """
 
     pattern: str = "dense"
@@ -58,6 +63,12 @@ class SparsityConfig:
     # 'rbgp' pattern only: canonical factor-chain template (see
     # repro.core.canonicalize_factors); None = the default RBGP4 chain.
     factors: Optional[tuple] = None
+    quant: Optional[str] = None
+
+    def __post_init__(self):
+        if self.quant not in (None, "int8"):
+            raise ValueError(
+                f"quant={self.quant!r} (supported: None, 'int8')")
 
     def applies_to(self, m: int, k: int) -> bool:
         if self.pattern == "dense" or self.sparsity <= 0.0:

@@ -160,6 +160,7 @@ class PatternSpec(SparsityConfig):
             seed=int(d.get("seed", 0)),
             min_dim=int(d.get("min_dim", 256)),
             factors=factors,
+            quant=d.get("quant"),
         )
 
 
@@ -311,18 +312,22 @@ class SparsityPlan:
             return cls.loads(f.read())
 
     def fingerprint(self) -> str:
-        """Content hash of the plan's *mask-determining* content: rule
-        order, match regexes, the pattern/sparsity/block/seed/min_dim/
-        factors of each spec — and each spec's *storage kind* rather than
-        its backend name.  The backend matters to masks only through
-        storage: masked-storage rules get per-layer seed offsets while
-        compact rules share one graph sample (``offset_masked_seeds``), so
-        a masked<->compact switch re-seeds every scanned layer's mask and
-        must be refused on restore, while switching among compact backends
-        (``xla_compact``/``pallas``/``auto``) or editing ``note`` strings
-        realizes identical masks and fingerprints identically.  Saved
-        beside checkpoints; restores under a different fingerprint are
-        refused."""
+        """Content hash of the plan's *mask- and storage-determining*
+        content: rule order, match regexes, the pattern/sparsity/block/
+        seed/min_dim/factors/quant of each spec — and each spec's *storage
+        kind* rather than its backend name.  The backend matters to masks
+        only through storage: masked-storage rules get per-layer seed
+        offsets while compact rules share one graph sample
+        (``offset_masked_seeds``), so a masked<->compact switch re-seeds
+        every scanned layer's mask and must be refused on restore, while
+        switching among compact backends (``xla_compact``/``pallas``/
+        ``auto``) or editing ``note`` strings realizes identical masks and
+        fingerprints identically.  ``quant`` is hashed because it changes
+        what the checkpoint *stores* (int8 leaf blocks + scales vs full-
+        precision values), so f32<->int8 restores refuse, mirroring the
+        masked<->chain rule; ``quant=None`` is omitted from the hash so
+        pre-quant plans keep their historical fingerprints.  Saved beside
+        checkpoints; restores under a different fingerprint are refused."""
         canon = json.dumps(
             {
                 "version": self.version,
@@ -330,7 +335,8 @@ class SparsityPlan:
                     {"match": r.match,
                      "spec": dict(
                          {k: v for k, v in r.spec.to_json().items()
-                          if k not in ("backend",)},
+                          if k != "backend"
+                          and not (k == "quant" and v is None)},
                          storage=r.spec.storage())}
                     for r in self.rules
                 ],
@@ -338,6 +344,28 @@ class SparsityPlan:
             sort_keys=True, separators=(",", ":"),
         )
         return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+    def with_quant(self, quant: Optional[str]) -> "SparsityPlan":
+        """A copy whose compact-/chain-storage rules store values as
+        ``quant``.
+
+        Dense rules are untouched, and so are masked-storage rules:
+        quantization is a property of the succinct storage containers
+        (``CompactWeight``/``ChainWeight`` leaf blocks — a masked layer's
+        dense trainable array has no leaf-block structure to scale).  This
+        is what ``--quant int8`` applies to a loaded/derived plan, and —
+        because ``quant`` participates in :meth:`fingerprint` — what makes
+        a quantized serving stack refuse full-precision checkpoints and
+        vice versa.
+        """
+        new = []
+        for r in self.rules:
+            if r.spec.is_sparse and r.spec.storage() in ("compact", "chain"):
+                new.append(dataclasses.replace(
+                    r, spec=dataclasses.replace(r.spec, quant=quant)))
+            else:
+                new.append(r)
+        return dataclasses.replace(self, rules=tuple(new))
 
     # -- construction shims -------------------------------------------------
     @classmethod

@@ -1,0 +1,245 @@
+"""QuantizedWeight: int8 leaf-block values + per-leaf-block f32 scales.
+
+The fourth storage axis (after dense, masked/compact, and chain): once
+indices are succinct, *value bytes* are the remaining memory lever of a
+bandwidth-bound sparse matmul, and both succinct containers store their
+values as dense ``(G, C)`` leaf blocks —
+
+  * ``CompactWeight``  ``w_data`` (M, d_o*d_i*C): each row group of G rows
+    holds d_o*d_i leaf blocks of C contiguous columns;
+  * ``ChainWeight``    ``w_data`` (M, d_head*inner): each row group of
+    ``leaf_rows`` rows holds ``d_head*inner/leaf_cols`` leaf blocks of
+    ``leaf_cols`` contiguous columns
+
+— so one symmetric int8 scheme covers both: quantize each (G, C) leaf
+block against its own max-abs scale (``train/compress.py``'s Q/DQ with a
+block-shaped ``axis=`` reduction) and store
+
+  * ``q_data``   int8, same shape as the wrapped ``w_data``;
+  * ``scales``   f32 (..., M/G, S) with S = stored-cols / C — one scale
+                 per leaf block, ~1/(G*C) of the value count;
+  * ``b``        the bias, untouched (full precision).
+
+All three are pytree *data* leaves (they checkpoint, shard, and stack
+like parameters) but the container is typed fully non-trainable — this is
+weight-only post-training quantization, not QAT — so
+``utils.split_trainable`` routes the whole container to the static half
+and optimizers never see it.
+
+Execution is the ``quant`` backend (``repro.sparsity.api``): on TPU the
+RBGP4MM / chainmm Pallas kernels load the int8 tiles and dequantize
+in-register against the f32 accumulator; elsewhere the container is
+dequantized back to its wrapped type and delegated to that type's own
+executor — which makes the off-TPU path *bit-identical* to serving the
+dequantized weights directly (the end-to-end parity anchor).
+
+The per-leaf-block scale layout matches the kernels' W tile order:
+``scales[rg, s]`` scales ``w_data[rg*G:(rg+1)*G, s*C:(s+1)*C]``, and the
+kernel grid's outer slot ``kk`` owns the scale columns
+``kk*d_i:(kk+1)*d_i`` — the same (j, kk) block-index map as the value
+tiles, so the scale operand needs no gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ChainLayout, RBGP4Layout
+
+from .api import ChainWeight, CompactWeight, SparseWeight
+
+__all__ = [
+    "QuantizedWeight",
+    "leaf_block_dims",
+    "quantize_block_values",
+    "dequantize_block_values",
+    "quantize_weight",
+    "quantize_weights",
+    "dequantize_weights",
+    "quant_storage_bytes",
+]
+
+
+def _qdq():
+    # Lazy: repro.train pulls in repro.configs, which imports repro.sparsity
+    # — importing at module scope would cycle through a partially
+    # initialized package.
+    from repro.train.compress import dequantize_int8, quantize_int8
+
+    return quantize_int8, dequantize_int8
+
+
+def leaf_block_dims(layout) -> tuple[int, int]:
+    """(G, C) dense leaf-block shape of a succinct layout.
+
+    RBGP4: (group_rows, chunk_cols); chain: (leaf_rows, leaf_cols) of the
+    blocked-CSR leaf (the trailing complete-bipartite factor product).
+    """
+    if isinstance(layout, RBGP4Layout):
+        return layout.spec.group_rows, layout.spec.chunk_cols
+    if isinstance(layout, ChainLayout):
+        from repro.kernels.chainmm import chain_dims
+
+        cd = chain_dims(layout)
+        return cd.leaf_rows, cd.leaf_cols
+    raise TypeError(f"no leaf blocks on {type(layout).__name__}")
+
+
+def quantize_block_values(w_data: jax.Array, G: int, C: int
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Per-leaf-block symmetric int8 quantization of compact/chain values.
+
+    ``w_data`` (..., M, S*C) -> (``q_data`` int8 same shape,
+    ``scales`` f32 (..., M/G, S)): each (G, C) leaf block gets its own
+    max-abs scale.  Leading dims (stacked experts) quantize independently.
+    """
+    quantize_int8, _ = _qdq()
+    *lead, m, nc = w_data.shape
+    if m % G or nc % C:
+        raise ValueError(
+            f"values {w_data.shape} not tiled by leaf blocks ({G}, {C})")
+    s = nc // C
+    wr = w_data.reshape(*lead, m // G, G, s, C)
+    q, scales = quantize_int8(wr, axis=(-3, -1))
+    return q.reshape(w_data.shape), scales
+
+
+def dequantize_block_values(q_data: jax.Array, scales: jax.Array,
+                            G: int, C: int, dtype=None) -> jax.Array:
+    """Invert :func:`quantize_block_values` (``dtype`` defaults to f32)."""
+    _, dequantize_int8 = _qdq()
+    *lead, m, nc = q_data.shape
+    s = nc // C
+    qr = q_data.reshape(*lead, m // G, G, s, C)
+    out = dequantize_int8(qr, scales, axis=(-3, -1), dtype=dtype)
+    return out.reshape(*lead, m, nc)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("q_data", "scales", "b"),
+    meta_fields=("layout", "kind", "orig_dtype"),
+)
+@dataclasses.dataclass
+class QuantizedWeight(SparseWeight):
+    """int8 leaf-block storage wrapping a compact or chain layout.
+
+    ``kind`` ('compact' | 'chain') names the wrapped container type and
+    ``orig_dtype`` the value dtype it dequantizes back to; both are static
+    aux data alongside the layout, so treedef equality — and therefore
+    jit caching — is by (layout spec, kind, dtype), never by values.
+    """
+
+    q_data: jax.Array
+    scales: jax.Array
+    b: Optional[jax.Array] = None
+    layout: Any = None
+    kind: str = "compact"
+    orig_dtype: str = "float32"
+
+    _DATA = ("q_data", "scales", "b")
+    _TRAINABLE = ()  # weight-only PTQ: nothing here is optimizer-visible
+
+    def dequantize(self, dtype=None) -> SparseWeight:
+        """The wrapped full-precision container (CompactWeight/ChainWeight)."""
+        G, C = leaf_block_dims(self.layout)
+        w_data = dequantize_block_values(
+            self.q_data, self.scales, G, C,
+            dtype=dtype or jnp.dtype(self.orig_dtype),
+        )
+        cls = ChainWeight if self.kind == "chain" else CompactWeight
+        return cls(w_data=w_data, b=self.b, layout=self.layout)
+
+
+def quantize_weight(weight: SparseWeight) -> QuantizedWeight:
+    """PTQ one compact/chain container (idempotent on QuantizedWeight)."""
+    if isinstance(weight, QuantizedWeight):
+        return weight
+    if isinstance(weight, ChainWeight):
+        kind = "chain"
+    elif isinstance(weight, CompactWeight):
+        kind = "compact"
+    else:
+        raise TypeError(
+            f"only compact/chain storage quantizes (leaf-block structure); "
+            f"got {type(weight).__name__}")
+    G, C = leaf_block_dims(weight.layout)
+    q_data, scales = quantize_block_values(weight.w_data, G, C)
+    return QuantizedWeight(
+        q_data=q_data, scales=scales, b=weight.b, layout=weight.layout,
+        kind=kind, orig_dtype=jnp.dtype(weight.w_data.dtype).name,
+    )
+
+
+def _is_container(x) -> bool:
+    return isinstance(x, SparseWeight)
+
+
+def _plan_path(path) -> str:
+    """Pytree path -> plan-rule path (module-dot convention)."""
+    from repro.utils import path_str
+
+    return path_str(path).replace("/", ".")
+
+
+def quantize_weights(tree, plan=None):
+    """Weight-only PTQ pass over a params tree.
+
+    Every ``CompactWeight``/``ChainWeight`` in ``tree`` becomes a
+    :class:`QuantizedWeight`; other leaves (dense, masked, norms, biases)
+    pass through untouched.  With a ``plan``, only containers whose
+    pytree path resolves to a rule with ``quant='int8'`` are converted
+    (paths are matched under the plan's module-dot convention) — the
+    no-plan form is what ``--quant int8`` uses after
+    :meth:`SparsityPlan.with_quant` stamps every succinct rule.
+    """
+    def one(path, x):
+        if not isinstance(x, (CompactWeight, ChainWeight)):
+            return x
+        if plan is not None and plan.resolve(_plan_path(path)).quant != "int8":
+            return x
+        return quantize_weight(x)
+
+    return jax.tree_util.tree_map_with_path(
+        one, tree, is_leaf=lambda x: x is None or _is_container(x))
+
+
+def dequantize_weights(tree, dtype=None):
+    """Invert :func:`quantize_weights`: QuantizedWeight -> wrapped container."""
+    return jax.tree_util.tree_map(
+        lambda x: x.dequantize(dtype) if isinstance(x, QuantizedWeight) else x,
+        tree, is_leaf=lambda x: x is None or _is_container(x))
+
+
+def quant_storage_bytes(layout, *, scale_bytes: int = 4,
+                        index_bytes: int = 4,
+                        f32_value_bytes: int = 4) -> dict:
+    """Byte accounting of one quantized layer vs its f32 succinct form.
+
+    values: nnz int8 (1 byte each); scales: one f32 per (G, C) leaf block
+    = nnz / (G*C) of them; index: unchanged (quantization only touches
+    values).  ``ratio_values`` is the acceptance-gate quantity of the
+    quant benchmark (int8 values + scales vs f32 values).
+    """
+    G, C = leaf_block_dims(layout)
+    cols = layout.data_shape[1]  # stored columns per row (both layouts)
+    nnz = layout.m * cols
+    n_scales = (layout.m // G) * (cols // C)
+    mem = layout.memory_bytes(value_bytes=1, index_bytes=index_bytes)
+    index = mem.get("index_succinct", mem.get("index", 0))
+    values = nnz  # int8
+    scales = n_scales * scale_bytes
+    f32_values = nnz * f32_value_bytes
+    return {
+        "values": values,
+        "scales": scales,
+        "index": index,
+        "total": values + scales + index,
+        "f32_values": f32_values,
+        "f32_total": f32_values + index,
+        "ratio_values": (values + scales) / f32_values,
+    }

@@ -25,14 +25,37 @@ def _tmap(f, *trees):
     )
 
 
-def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+def quantize_int8(x: jax.Array, axis=None,
+                  keepdims: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization with a max-abs scale.
+
+    ``axis=None`` (the default) reduces over the whole tensor — one scalar
+    scale, the gradient-compression wire format.  With ``axis`` the scale
+    is per-slice along the kept dimensions (per-leaf-block scales for
+    quantized weight storage); pass ``keepdims=True`` when the caller wants
+    the scale to broadcast against ``q`` directly.
+    """
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=axis, keepdims=keepdims) / 127.0 + 1e-12
+    s_b = scale if (axis is None or keepdims) else \
+        jnp.expand_dims(scale, axis)
+    q = jnp.clip(jnp.round(x32 / s_b), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 
 
-def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+def dequantize_int8(q: jax.Array, scale: jax.Array, axis=None,
+                    dtype=None) -> jax.Array:
+    """Invert :func:`quantize_int8`.
+
+    ``axis`` must match the quantize call when its scales were produced
+    without ``keepdims``.  The result dtype follows ``scale`` (f32 for the
+    gradient path — bit-identical to the historical behavior) unless
+    ``dtype`` overrides it, so bf16 weight trees round-trip to bf16.
+    """
+    s_b = scale if axis is None or scale.ndim == q.ndim else \
+        jnp.expand_dims(scale, axis)
+    out = q.astype(jnp.float32) * s_b
+    return out.astype(dtype) if dtype is not None else out
 
 
 def init_error_feedback(grads_like) -> Any:

@@ -56,10 +56,11 @@ def test_cache_roundtrip_and_no_research():
     r2 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
                            platform="testplat", search_fn=counting_search)
     assert len(calls) == 1 and r2 == r1
-    # the entry is on disk
+    # the entry is on disk under the versioned schema
     with open(autotune.cache_path()) as f:
         disk = json.load(f)
-    assert any(v["block_n"] == 256 for v in disk.values())
+    assert disk["schema"] == autotune.CACHE_SCHEMA
+    assert any(v["block_n"] == 256 for v in disk["entries"].values())
     # "new process": memory dropped, disk consulted, still no re-search
     autotune.clear_memory_cache()
     r3 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
@@ -103,7 +104,7 @@ def test_block_n_auto_resolves_through_kernel(monkeypatch):
                                rtol=1e-5, atol=1e-5)
     # the resolve landed in the interpret-platform cache
     autotune_key_hits = [
-        k for k in json.load(open(autotune.cache_path()))
+        k for k in json.load(open(autotune.cache_path()))["entries"]
         if "|interpret|" in k
     ]
     assert autotune_key_hits
@@ -210,7 +211,7 @@ def test_measured_mode_rhs_stubbed_timer(monkeypatch, fake_timer):
     assert sorted(set(seen)) == sorted(
         {(bn, o) for bn in cands for o in autotune.GRID_ORDERS})
     # persisted under the tpu key; survives a "new process"
-    disk = json.load(open(autotune.cache_path()))
+    disk = json.load(open(autotune.cache_path()))["entries"]
     (key,) = [k for k in disk if "|tpu|" in k]
     assert key.startswith("rhs|tpu|float32|")
     assert disk[key]["source"] == "measured"
@@ -245,7 +246,7 @@ def test_measured_mode_chain_rhs(monkeypatch, fake_timer):
     assert res.source == "measured"
     assert res.grid_order == "nm"  # chain kinds never explore "mn"
     assert res.block_n == seen[0]
-    disk = json.load(open(autotune.cache_path()))
+    disk = json.load(open(autotune.cache_path()))["entries"]
     assert any(k.startswith("chain_rhs|tpu|") for k in disk)
 
 
@@ -311,7 +312,7 @@ def test_plan_fingerprint_scopes_measured_entries(monkeypatch, fake_timer):
         # scoped key is distinct: the search ran again, not a cache hit
         assert len(searches) == 2 * n_plain
         disk = json.load(open(autotune.cache_path()))
-        keys = sorted(disk)
+        keys = sorted(disk["entries"])
         assert any(k.startswith("planfp123|rhs|tpu|") for k in keys)
         assert any(k.startswith("rhs|tpu|") for k in keys)
         # within the scope, the entry is a stable hit across "processes"
@@ -322,3 +323,64 @@ def test_plan_fingerprint_scopes_measured_entries(monkeypatch, fake_timer):
         assert r_plain.source == r_fp.source == "measured"
     finally:
         autotune.set_plan_fingerprint(None)
+
+
+def test_value_dtype_keys_search_separately():
+    """int8 and f32 value storage over the same dims never share a cache
+    entry: the key embeds the stored-value dtype (w{dtype} segment)."""
+    lay = make_dims(seed=11)
+    dims = KernelDims.from_layout(lay)
+    calls = []
+
+    def counting_search(d, n, dtype, kind):
+        calls.append(len(calls))
+        return autotune.TuneResult(256 if len(calls) == 1 else 128,
+                                   "nm", 1.0, "model")
+
+    r_f32 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                              platform="testplat", search_fn=counting_search)
+    r_int8 = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                               platform="testplat", value_dtype="int8",
+                               search_fn=counting_search)
+    assert len(calls) == 2
+    assert r_f32.block_n != r_int8.block_n
+    # both are stable hits afterwards
+    assert autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                             platform="testplat",
+                             search_fn=counting_search) == r_f32
+    assert autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                             platform="testplat", value_dtype="int8",
+                             search_fn=counting_search) == r_int8
+    assert len(calls) == 2
+    # matching value_dtype == dtype keys identically to omitting it
+    assert autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                             platform="testplat", value_dtype="float32",
+                             search_fn=counting_search) == r_f32
+    assert len(calls) == 2
+
+
+def test_stale_v1_cache_discarded():
+    """A pre-schema (v1 flat dict) cache file is ignored on load — its
+    entries predate value-dtype keying — and the next store rewrites the
+    file under the current schema."""
+    path = autotune.cache_path()
+    with open(path, "w") as f:
+        json.dump({"rhs|testplat|whatever": {
+            "block_n": 512, "grid_order": "nm", "score": 1.0,
+            "source": "model"}}, f)
+    autotune.clear_memory_cache()
+    lay = make_dims(seed=12)
+    dims = KernelDims.from_layout(lay)
+    calls = []
+
+    def counting_search(d, n, dtype, kind):
+        calls.append(0)
+        return autotune.TuneResult(128, "nm", 1.0, "model")
+
+    r = autotune.autotune(dims, 512, dtype="float32", kind="rhs",
+                          platform="testplat", search_fn=counting_search)
+    assert len(calls) == 1 and r.block_n == 128  # v1 entry not consulted
+    with open(path) as f:
+        disk = json.load(f)
+    assert disk["schema"] == autotune.CACHE_SCHEMA
+    assert "rhs|testplat|whatever" not in disk["entries"]

@@ -1,0 +1,180 @@
+"""Gradient compression Q/DQ + error feedback (train/compress.py).
+
+PR 9 generalized ``quantize_int8``/``dequantize_int8`` with an ``axis=``
+block reduction for the weight-storage path; the gradient wire format
+(scalar per-tensor scale) must stay *bit-identical* to the historical
+behavior, and the error-feedback recursion must keep its telescoping
+guarantee — the long-run mean of dequantized gradients converges to the
+true gradient even though each step quantizes coarsely.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.compress import (
+    compress_decompress,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+)
+
+
+def _legacy_qdq(x):
+    """The pre-axis= formula, inlined: the regression oracle."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale, (q.astype(jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# Q/DQ primitives
+# ---------------------------------------------------------------------------
+
+def test_scalar_qdq_bit_identical_to_legacy():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 48)) * 3.0
+    q, scale = quantize_int8(x)
+    lq, lscale, ldeq = _legacy_qdq(x)
+    assert q.dtype == jnp.int8 and scale.shape == ()
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(lq))
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(lscale))
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, scale)),
+                                  np.asarray(ldeq))
+
+
+def test_compress_decompress_bit_identical_to_legacy():
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (32, 16)),
+             "b": jax.random.normal(jax.random.PRNGKey(2), (16,)),
+             "none": None}
+    out, err = compress_decompress(grads)
+    for k in ("w", "b"):
+        _, _, ldeq = _legacy_qdq(grads[k])
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ldeq))
+        np.testing.assert_array_equal(
+            np.asarray(err[k]),
+            np.asarray(grads[k].astype(jnp.float32) - ldeq))
+    assert out["none"] is None and err["none"] is None
+
+
+@pytest.mark.parametrize("axis,scale_shape", [
+    (-1, (6, 4)), ((0, 2), (4,)), (None, ())])
+def test_axis_reduction_scale_shapes_and_roundtrip(axis, scale_shape):
+    x = jax.random.normal(jax.random.PRNGKey(3), (6, 4, 8))
+    q, scale = quantize_int8(x, axis=axis)
+    assert scale.shape == scale_shape
+    deq = dequantize_int8(q, scale, axis=axis)
+    # per-slice max-abs scale: elementwise error <= scale/2 of the slice
+    err = jnp.abs(deq - x)
+    s_b = scale if axis is None else jnp.expand_dims(scale, axis)
+    assert bool(jnp.all(err <= s_b / 2 + 1e-6))
+
+
+def test_keepdims_broadcasts_directly():
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 8))
+    q, scale = quantize_int8(x, axis=-1, keepdims=True)
+    assert scale.shape == (8, 1)
+    got = q.astype(jnp.float32) * scale
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(dequantize_int8(q, scale, axis=-1)))
+
+
+def test_dequantize_dtype_override():
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 16)).astype(jnp.bfloat16)
+    q, scale = quantize_int8(x, axis=-1)
+    assert dequantize_int8(q, scale, axis=-1).dtype == jnp.float32
+    assert dequantize_int8(q, scale, axis=-1,
+                           dtype=jnp.bfloat16).dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# error feedback: single device
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_recursion_exact():
+    """e_{t+1} = (g + e_t) - DQ(Q(g + e_t)), exactly."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(6), (32, 32))}
+    e = init_error_feedback(g)
+    assert float(jnp.abs(e["w"]).max()) == 0.0
+    out, e1 = compress_decompress(g, e)
+    g32 = g["w"].astype(jnp.float32)
+    want = g32 - dequantize_int8(*quantize_int8(g32))
+    np.testing.assert_array_equal(np.asarray(e1["w"]), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(out["w"] + e1["w"]),
+                                  np.asarray(g32))
+
+
+def test_error_feedback_telescopes_to_true_gradient():
+    """Constant gradient g over T steps: sum_t DQ_t = T*g + e_1 - e_{T+1},
+    so the running mean converges at O(1/T) — the convergence contract of
+    compressed training."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(7), (24, 24)) * 0.1}
+    e = init_error_feedback(g)
+    total = jnp.zeros_like(g["w"])
+    T = 32
+    for _ in range(T):
+        out, e = compress_decompress(g, e)
+        total = total + out["w"]
+    # the telescoping identity holds to fp32 summation error
+    np.testing.assert_allclose(
+        np.asarray(total + e["w"]), np.asarray(T * g["w"]),
+        rtol=0, atol=1e-4)
+    # and the mean beats a single quantization step by a wide margin
+    one_step_err = float(jnp.abs(
+        dequantize_int8(*quantize_int8(g["w"])) - g["w"]).max())
+    mean_err = float(jnp.abs(total / T - g["w"]).max())
+    assert mean_err < one_step_err / 4
+
+
+# ---------------------------------------------------------------------------
+# error feedback: psum path (shard_map wire format)
+# ---------------------------------------------------------------------------
+
+def test_psum_path_matches_single_device_qdq():
+    """With identical per-device gradients, the int8-psum + pmean-scale
+    mean reduction must equal the single-device Q/DQ round trip exactly
+    (q summed as int32 over D devices, divided back by D)."""
+    n_dev = 4
+    g = jax.random.normal(jax.random.PRNGKey(8), (16, 16))
+    stacked = {"w": jnp.broadcast_to(g, (n_dev, *g.shape))}
+    e0 = {"w": jnp.zeros((n_dev, *g.shape), jnp.float32)}
+
+    def step(grads, err):
+        return compress_decompress(grads, err, axis_name="dp")
+
+    out, e1 = jax.vmap(step, axis_name="dp")(stacked, e0)
+    ref_deq = dequantize_int8(*quantize_int8(g))
+    for d in range(n_dev):
+        np.testing.assert_array_equal(np.asarray(out["w"][d]),
+                                      np.asarray(ref_deq))
+        np.testing.assert_array_equal(
+            np.asarray(e1["w"][d]),
+            np.asarray(g.astype(jnp.float32) - ref_deq))
+
+
+def test_psum_path_averages_heterogeneous_gradients():
+    """Different per-device gradients: the wire format is int8 payloads
+    psum'd as int32, scales pmean'd, divided back by D — pin that math
+    exactly, and check error feedback tracks the *local* residual."""
+    n_dev = 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    g0 = jax.random.normal(k1, (16, 16))
+    g1 = jax.random.normal(k2, (16, 16))
+    stacked = {"w": jnp.stack([g0, g1])}
+
+    out, err = jax.vmap(
+        lambda g: compress_decompress(g, None, axis_name="dp"),
+        axis_name="dp")(stacked)
+    # every device sees the same reduced gradient, and it is exactly the
+    # dequantized int32 sum under the mean scale
+    np.testing.assert_array_equal(np.asarray(out["w"][0]),
+                                  np.asarray(out["w"][1]))
+    q0, s0 = quantize_int8(g0)
+    q1, s1 = quantize_int8(g1)
+    want = (q0.astype(jnp.int32) + q1.astype(jnp.int32)).astype(jnp.float32) \
+        * ((s0 + s1) / 2) / n_dev
+    np.testing.assert_array_equal(np.asarray(out["w"][0]), np.asarray(want))
+    for d, g in enumerate((g0, g1)):
+        want = g - dequantize_int8(*quantize_int8(g))
+        np.testing.assert_array_equal(np.asarray(err["w"][d]),
+                                      np.asarray(want))

@@ -1,0 +1,514 @@
+"""Quantized sparse storage: int8 leaf blocks + per-leaf-block scales.
+
+The acceptance anchors of the PTQ storage axis:
+
+  * the interpret-mode Pallas kernels (``rbgp4mm_rhs``, the stacked-expert
+    launch, ``chainmm_rhs``) fed int8 values + scales match the XLA
+    dequant oracle within 1e-5 (pinned — native TPU compiles the same
+    trace);
+  * off TPU the ``quant`` backend is *bit-identical* to executing the
+    dequantized container, container-level and through the serving
+    engines (continuous + sharded) for greedy decoding;
+  * ``SparsityPlan.fingerprint`` distinguishes quantized from
+    full-precision plans, so ``CheckpointManager`` refuses f32<->int8
+    restores, while ``quant=None`` plans keep their historical hashes;
+  * ``plan_aware_live_tokens`` credits the freed value bytes: the
+    admission budget under ``with_quant('int8')`` is strictly higher.
+"""
+import dataclasses
+import importlib
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import apply_sparsity, get_config, reduce_config
+from repro.core import ChainLayout, RBGP4Layout, RBGP4Spec, design_rbgp
+from repro.kernels import KernelDims
+from repro.kernels import ref as kref
+from repro.models import LMModel
+from repro.serve import ContinuousEngine, plan_aware_live_tokens, run_sequential
+from repro.sparsity import (
+    ChainWeight,
+    CompactWeight,
+    PatternSpec,
+    PlanRule,
+    QuantizedWeight,
+    SparseLinear,
+    SparsityConfig,
+    SparsityPlan,
+    available_backends,
+    chain_weight,
+    dense_weight,
+    dequantize_weights,
+    model_matmul_shapes,
+    quant_storage_bytes,
+    quantize_weight,
+    quantize_weights,
+    resolve_backend,
+    solve_budget,
+    sparse_linear,
+    sparse_linear_batched,
+)
+from repro.sparsity.quant import (
+    dequantize_block_values,
+    leaf_block_dims,
+    quantize_block_values,
+)
+from repro.utils import merge_trees, split_trainable
+
+R = importlib.import_module("repro.kernels.rbgp4mm")
+C = importlib.import_module("repro.kernels.chainmm")
+
+
+def _rbgp_layout(seed=3):
+    return RBGP4Layout(RBGP4Spec(g_o=(4, 4), g_r=(4, 8), g_i=(4, 2),
+                                 g_b=(1, 1), sp_o=0.5, sp_i=0.5, seed=seed))
+
+
+def _chain_layout(seed=1):
+    return ChainLayout(design_rbgp(
+        128, 128, 0.875, factors=(("ramanujan", 0, 0, 0.5),) * 3, seed=seed))
+
+
+def _compact_weight(m=128, k=256, sp=0.75, seed=0, bias=True):
+    lin = SparseLinear(k, m, SparsityConfig(pattern="rbgp4", sparsity=sp,
+                                            backend="xla_compact", min_dim=1,
+                                            seed=seed),
+                       use_bias=bias)
+    w = lin.init(jax.random.PRNGKey(seed))
+    if bias:
+        w = dataclasses.replace(
+            w, b=jax.random.normal(jax.random.PRNGKey(seed + 7), (m,)))
+    return w
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode Pallas int8 kernels vs the XLA dequant oracle (pinned)
+# ---------------------------------------------------------------------------
+
+def test_rbgp4mm_rhs_int8_interpret_vs_dequant_oracle():
+    lay = _rbgp_layout()
+    dims = KernelDims.from_layout(lay)
+    kw, kx = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(kw, lay.data_shape, jnp.float32)
+    x = jax.random.normal(kx, (24, lay.k), jnp.float32)
+    G, Cc = leaf_block_dims(lay)
+    q, s = quantize_block_values(w, G, Cc)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    wdq = dequantize_block_values(q, s, G, Cc)
+    y_oracle = kref.compact_gather_mm_rhs(lay, wdq, x)
+    y = R.rbgp4mm_rhs(dims, jnp.asarray(lay.adj_o), x, q, scales=s,
+                      interpret=True, block_n=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_oracle),
+                               rtol=0, atol=1e-5)
+
+
+def test_rbgp4mm_rhs_stacked_int8_interpret_vs_dequant_oracle():
+    lay = _rbgp_layout(seed=5)
+    dims = KernelDims.from_layout(lay)
+    e = 3
+    kw, kx = jax.random.split(jax.random.PRNGKey(1))
+    w = jax.random.normal(kw, (e, *lay.data_shape), jnp.float32)
+    x = jax.random.normal(kx, (e, 16, lay.k), jnp.float32)
+    G, Cc = leaf_block_dims(lay)
+    q, s = quantize_block_values(w, G, Cc)
+    assert s.shape[0] == e  # experts quantize independently
+    wdq = dequantize_block_values(q, s, G, Cc)
+    y_oracle = jnp.stack([
+        kref.compact_gather_mm_rhs(lay, wdq[i], x[i]) for i in range(e)])
+    y = R.rbgp4mm_rhs_stacked(dims, jnp.asarray(lay.adj_o), x, q, scales=s,
+                              interpret=True, block_n=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_oracle),
+                               rtol=0, atol=1e-5)
+
+
+def test_chainmm_rhs_int8_interpret_vs_dequant_oracle():
+    lay = _chain_layout()
+    dims = C.chain_dims(lay)
+    kw, kx = jax.random.split(jax.random.PRNGKey(2))
+    w = jax.random.normal(kw, lay.data_shape, jnp.float32)
+    x = jax.random.normal(kx, (24, lay.k), jnp.float32)
+    G, Cc = leaf_block_dims(lay)
+    q, s = quantize_block_values(w, G, Cc)
+    wdq = dequantize_block_values(q, s, G, Cc)
+    y_oracle = x @ C.chain_unpack_dense(lay, wdq).T
+    y = C.chainmm_rhs(dims, jnp.asarray(lay.adjs[0], jnp.int32), x, q,
+                      scales=s, interpret=True, block_n=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_oracle),
+                               rtol=0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# PTQ passes: round-trip, dtype, plan gating, split
+# ---------------------------------------------------------------------------
+
+def test_quantize_weight_roundtrip_bound_and_idempotence():
+    w = _compact_weight()
+    qw = quantize_weight(w)
+    assert isinstance(qw, QuantizedWeight)
+    assert qw.q_data.dtype == jnp.int8 and qw.kind == "compact"
+    assert quantize_weight(qw) is qw  # idempotent
+    back = qw.dequantize()
+    assert isinstance(back, CompactWeight) and back.layout == w.layout
+    np.testing.assert_array_equal(np.asarray(back.b), np.asarray(w.b))
+    # per-leaf-block max-abs scale => elementwise error <= scale/2 per block
+    G, Cc = leaf_block_dims(w.layout)
+    err = np.abs(np.asarray(back.w_data) - np.asarray(w.w_data))
+    m, nc = w.w_data.shape
+    errb = err.reshape(m // G, G, nc // Cc, Cc).max(axis=(1, 3))
+    bound = np.asarray(qw.scales) / 2 + 1e-6
+    assert (errb <= bound).all()
+
+
+def test_quantize_weight_chain_and_type_errors():
+    lay = _chain_layout()
+    w = chain_weight(jax.random.PRNGKey(0), lay, bias=True)
+    qw = quantize_weight(w)
+    assert qw.kind == "chain"
+    back = qw.dequantize()
+    assert isinstance(back, ChainWeight)
+    with pytest.raises(TypeError, match="compact/chain"):
+        quantize_weight(dense_weight_container())
+
+
+def dense_weight_container():
+    from repro.sparsity import DenseWeight
+
+    return DenseWeight(w=jnp.ones((8, 8)))
+
+
+def test_dequantize_preserves_orig_dtype():
+    w = _compact_weight(bias=False)
+    w16 = dataclasses.replace(w, w_data=w.w_data.astype(jnp.bfloat16))
+    qw = quantize_weight(w16)
+    assert qw.orig_dtype == "bfloat16"
+    assert qw.dequantize().w_data.dtype == jnp.bfloat16
+    assert qw.dequantize(jnp.float32).w_data.dtype == jnp.float32
+
+
+def test_quantize_weights_tree_and_plan_gating():
+    tree = {"blk": {"wq": _compact_weight(seed=0),
+                    "wo": _compact_weight(seed=1),
+                    "norm": jnp.ones((4,))}}
+    # no plan: every succinct container converts
+    qt = quantize_weights(tree)
+    assert isinstance(qt["blk"]["wq"], QuantizedWeight)
+    assert isinstance(qt["blk"]["wo"], QuantizedWeight)
+    np.testing.assert_array_equal(np.asarray(qt["blk"]["norm"]),
+                                  np.asarray(tree["blk"]["norm"]))
+    # plan gating: only paths resolving to quant='int8' convert
+    spec = PatternSpec(pattern="rbgp4", sparsity=0.75, backend="xla_compact",
+                       min_dim=1)
+    plan = SparsityPlan(rules=(
+        PlanRule(match=r".*wq", spec=dataclasses.replace(spec, quant="int8")),
+        PlanRule(match=r".*", spec=spec),
+    ))
+    gt = quantize_weights(tree, plan=plan)
+    assert isinstance(gt["blk"]["wq"], QuantizedWeight)
+    assert isinstance(gt["blk"]["wo"], CompactWeight)
+    # dequantize_weights inverts container types across the whole tree
+    dt = dequantize_weights(qt)
+    assert isinstance(dt["blk"]["wq"], CompactWeight)
+    assert isinstance(dt["blk"]["wo"], CompactWeight)
+
+
+def test_quantized_weight_is_fully_static():
+    """Weight-only PTQ: the optimizer must never see a quantized leaf."""
+    tree = {"q": quantize_weight(_compact_weight()), "plain": jnp.ones((3,))}
+    train, static = split_trainable(tree)
+    assert train["q"].q_data is None and train["q"].scales is None
+    assert train["q"].b is None
+    assert static["q"].q_data is not None and static["q"].scales is not None
+    merged = merge_trees(train, static)
+    assert isinstance(merged["q"], QuantizedWeight)
+    np.testing.assert_array_equal(np.asarray(merged["q"].q_data),
+                                  np.asarray(tree["q"].q_data))
+
+
+def test_quantized_weight_pytree_roundtrip_and_jit():
+    qw = quantize_weight(_compact_weight())
+    leaves, treedef = jax.tree_util.tree_flatten(qw)
+    assert len(leaves) == 3  # q_data, scales, b — layout/kind/dtype are aux
+    qw2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert qw2.kind == "compact" and qw2.layout == qw.layout
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, qw.layout.k))
+    f = jax.jit(lambda w, x: sparse_linear(w, x))
+    np.testing.assert_array_equal(np.asarray(f(qw, x)),
+                                  np.asarray(f(qw2, x)))
+
+
+# ---------------------------------------------------------------------------
+# the quant backend: registry + bit-identity to the dequantized reference
+# ---------------------------------------------------------------------------
+
+def test_quant_backend_registry_and_resolution():
+    assert "quant" in available_backends()
+    assert available_backends(quant=True) == ["quant"]
+    qw = quantize_weight(_compact_weight())
+    assert resolve_backend(qw, "auto").name == "quant"
+    # plans written before quantization name the f32 backend — reroute
+    assert resolve_backend(qw, "xla_compact").name == "quant"
+    assert resolve_backend(qw, "pallas").name == "quant"
+    with pytest.raises(TypeError, match="accepts"):
+        resolve_backend(_compact_weight(), "quant")
+
+
+@pytest.mark.parametrize("kind", ["compact", "chain"])
+def test_quant_backend_bit_identical_to_dequantized(kind):
+    """Off TPU the quant backend dequantizes and delegates — serving the
+    QuantizedWeight must produce the *bits* of serving its dequantized
+    container, including bias/fuse/residual epilogues."""
+    if kind == "compact":
+        w = _compact_weight()
+    else:
+        w = chain_weight(jax.random.PRNGKey(0), _chain_layout(), bias=True)
+    qw = quantize_weight(w)
+    ref = qw.dequantize()
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, qw.layout.k))
+    r = jax.random.normal(jax.random.PRNGKey(5), (5, qw.layout.m))
+    np.testing.assert_array_equal(
+        np.asarray(sparse_linear(qw, x)),
+        np.asarray(sparse_linear(ref, x)))
+    np.testing.assert_array_equal(
+        np.asarray(sparse_linear(qw, x, fuse="silu", residual=r)),
+        np.asarray(sparse_linear(ref, x, fuse="silu", residual=r)))
+
+
+def test_quant_backend_batched_bit_identical_and_chain_unsupported():
+    lay = _rbgp_layout(seed=7)
+    e = 3
+    w = jax.random.normal(jax.random.PRNGKey(6), (e, *lay.data_shape))
+    b = jax.random.normal(jax.random.PRNGKey(7), (e, lay.m))
+    wc = CompactWeight(w_data=w, b=b, layout=lay)
+    qw = quantize_weight(wc)
+    x = jax.random.normal(jax.random.PRNGKey(8), (e, 6, lay.k))
+    np.testing.assert_array_equal(
+        np.asarray(sparse_linear_batched(qw, x)),
+        np.asarray(sparse_linear_batched(qw.dequantize(), x)))
+    qch = quantize_weight(
+        chain_weight(jax.random.PRNGKey(0), _chain_layout()))
+    with pytest.raises(NotImplementedError):
+        sparse_linear_batched(qch, jnp.ones((2, 3, qch.layout.k)))
+
+
+def test_dense_weight_on_quantized_container():
+    qw = quantize_weight(_compact_weight(bias=False))
+    np.testing.assert_array_equal(
+        np.asarray(dense_weight(qw)),
+        np.asarray(dense_weight(qw.dequantize())))
+
+
+# ---------------------------------------------------------------------------
+# plan fingerprints + checkpoint refusal
+# ---------------------------------------------------------------------------
+
+def test_with_quant_fingerprint_semantics():
+    shapes = {"blk.wq": (128, 256, 1), "blk.wo": (256, 128, 1)}
+    plan = solve_budget(shapes, target_density=0.25, min_dim=64)
+    qplan = plan.with_quant("int8")
+    assert qplan.fingerprint() != plan.fingerprint()
+    # quant=None is omitted from the hash: pre-quant plans keep their
+    # historical fingerprints, and stripping quant restores the original
+    assert qplan.with_quant(None).fingerprint() == plan.fingerprint()
+    # only succinct-storage rules are stamped
+    for r in qplan.rules:
+        spec = r.spec
+        if spec.is_sparse and spec.storage() in ("compact", "chain"):
+            assert spec.quant == "int8"
+        else:
+            assert spec.quant is None
+
+
+def test_checkpoint_roundtrip_and_f32_int8_refusal(tmp_path):
+    from repro.train.checkpoint import CheckpointManager
+
+    shapes = {"blk.wq": (128, 256, 1)}
+    plan = solve_budget(shapes, target_density=0.25, min_dim=64)
+    qplan = plan.with_quant("int8")
+    qparams = {"blk": {"wq": quantize_weight(_compact_weight())}}
+
+    mgr = CheckpointManager(str(tmp_path), plan_fingerprint=qplan.fingerprint())
+    mgr.save(10, qparams)
+    like = jax.tree_util.tree_map(lambda x: x, qparams)
+    tree, meta = mgr.restore(like)
+    assert meta["plan_fingerprint"] == qplan.fingerprint()
+    got = tree["blk"]["wq"]
+    assert isinstance(got, QuantizedWeight)
+    assert got.q_data.dtype == jnp.int8  # int8 survives the npz round-trip
+    np.testing.assert_array_equal(np.asarray(got.q_data),
+                                  np.asarray(qparams["blk"]["wq"].q_data))
+    np.testing.assert_array_equal(np.asarray(got.scales),
+                                  np.asarray(qparams["blk"]["wq"].scales))
+
+    # a full-precision stack must refuse the int8 checkpoint, and vice versa
+    mgr_f32 = CheckpointManager(str(tmp_path),
+                                plan_fingerprint=plan.fingerprint())
+    with pytest.raises(RuntimeError, match="plan"):
+        mgr_f32.restore(like)
+
+
+# ---------------------------------------------------------------------------
+# admission headroom
+# ---------------------------------------------------------------------------
+
+def test_plan_aware_live_tokens_quant_headroom():
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    shapes = model_matmul_shapes(cfg)
+    plan = solve_budget(shapes, target_density=0.25, min_dim=64)
+    qplan = plan.with_quant("int8")
+    kw = dict(shapes=shapes, kv_bytes_per_token=1024.0, value_bytes=4)
+    base = plan_aware_live_tokens(64, plan=plan, **kw)
+    quant = plan_aware_live_tokens(64, plan=qplan, **kw)
+    assert base > 64          # sparsity alone frees weight bytes
+    assert quant > base       # int8 values free strictly more
+    # monotone in the base budget, and dense plans change nothing
+    assert plan_aware_live_tokens(128, plan=qplan, **kw) > quant
+    dense = SparsityPlan(rules=(
+        PlanRule(match=r".*", spec=PatternSpec(pattern="dense")),))
+    assert plan_aware_live_tokens(64, plan=dense, **kw) == 64
+
+
+def test_quant_storage_bytes_accounting():
+    lay = _rbgp_layout()
+    rep = quant_storage_bytes(lay)
+    G, Cc = leaf_block_dims(lay)
+    nnz = lay.m * lay.data_shape[1]
+    assert rep["values"] == nnz
+    assert rep["scales"] == nnz // (G * Cc) * 4
+    assert rep["f32_values"] == 4 * nnz
+    assert rep["ratio_values"] == pytest.approx(0.25 + 1.0 / (G * Cc))
+    assert rep["ratio_values"] < 0.30
+
+
+# ---------------------------------------------------------------------------
+# serving parity: continuous engine, quant-on vs dequantized reference
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qlm():
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    cfg = apply_sparsity(cfg, pattern="rbgp4", sparsity=0.5,
+                         backend="auto", min_dim=64)
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = quantize_weights(params)
+    n_q = sum(isinstance(x, QuantizedWeight)
+              for x in jax.tree_util.tree_leaves(
+                  qparams, is_leaf=lambda x: isinstance(x, QuantizedWeight)))
+    assert n_q > 0, "reduced config produced no succinct containers"
+    return model, qparams
+
+
+def _workload(shapes, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        {"rid": i, "prompt": rng.integers(0, vocab, s).astype(np.int32),
+         "max_new_tokens": g, "sampling": None}
+        for i, (s, g) in enumerate(shapes)
+    ]
+
+
+def test_continuous_engine_greedy_parity_quant_vs_dequantized(qlm):
+    model, qparams = qlm
+    fparams = dequantize_weights(qparams)
+    wl = _workload([(4, 3), (12, 6), (8, 2), (16, 4)], model.cfg.vocab_size)
+
+    def drain(params):
+        eng = ContinuousEngine(model, params, page_size=4, max_slots=3,
+                               max_request_len=40)
+        for r in wl:
+            eng.submit(r["prompt"], r["max_new_tokens"])
+        return eng.drain(), eng.gather_tokens
+
+    out_q, gather = drain(qparams)
+    out_f, _ = drain(fparams)
+    ref = run_sequential(model, qparams, wl, cache_len=gather)
+    assert set(out_q) == {r["rid"] for r in wl}
+    for r in wl:
+        np.testing.assert_array_equal(out_q[r["rid"]], out_f[r["rid"]],
+                                      err_msg=f"request {r['rid']}")
+        np.testing.assert_array_equal(out_q[r["rid"]], ref[r["rid"]],
+                                      err_msg=f"request {r['rid']} vs oracle")
+
+
+def test_continuous_engine_quant_admission_budget(qlm):
+    """Engine-level: the quant-marked plan strictly grows the admission
+    budget relative to the same plan at f32 values."""
+    model, qparams = qlm
+    shapes = model_matmul_shapes(model.cfg)
+    plan = solve_budget(shapes, target_density=0.5, min_dim=64)
+
+    def live(p):
+        eng = ContinuousEngine(model, qparams, page_size=4, max_slots=2,
+                               max_live_tokens=24, max_request_len=24,
+                               plan=p)
+        return eng.plan_live_tokens
+
+    assert live(plan.with_quant("int8")) > live(plan) > 24
+
+
+# ---------------------------------------------------------------------------
+# serving parity: sharded engine (forced 4-device CPU mesh, subprocess)
+# ---------------------------------------------------------------------------
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_sharded_engine_greedy_parity_quant_vs_dequantized():
+    body = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import numpy as np
+
+from repro.configs import apply_sparsity, get_config, reduce_config
+from repro.launch.mesh import make_serve_mesh
+from repro.models import LMModel
+from repro.serve import ShardedContinuousEngine, run_sequential
+from repro.sparsity import dequantize_weights, quantize_weights
+
+assert len(jax.devices()) == 4, jax.devices()
+
+cfg = reduce_config(get_config("tinyllama-1.1b"))
+cfg = apply_sparsity(cfg, pattern="rbgp4", sparsity=0.5,
+                     backend="auto", min_dim=64)
+model = LMModel(cfg)
+qparams = quantize_weights(model.init(jax.random.PRNGKey(0)))
+mesh = make_serve_mesh(2, 2)
+
+rng = np.random.default_rng(0)
+wl = [{"rid": i, "prompt": rng.integers(0, cfg.vocab_size, s).astype(np.int32),
+       "max_new_tokens": g, "sampling": None}
+      for i, (s, g) in enumerate([(4, 3), (12, 6), (8, 2)])]
+
+
+def drain(params):
+    eng = ShardedContinuousEngine(model, params, mesh, page_size=4,
+                                  max_slots=3, max_request_len=40)
+    for r in wl:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    return eng.drain(), eng
+
+
+out_q, eng_q = drain(qparams)
+out_f, _ = drain(dequantize_weights(qparams))
+ref = run_sequential(model, eng_q.params, wl, cache_len=eng_q.gather_tokens)
+assert set(out_q) == {r["rid"] for r in wl}
+for r in wl:
+    np.testing.assert_array_equal(out_q[r["rid"]], out_f[r["rid"]],
+                                  err_msg=f"request {r['rid']}")
+    np.testing.assert_array_equal(out_q[r["rid"]], ref[r["rid"]],
+                                  err_msg=f"request {r['rid']} vs oracle")
+print("SHARDED-QUANT-OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    res = subprocess.run([sys.executable, "-c", body], cwd=_REPO,
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "SHARDED-QUANT-OK" in res.stdout, res.stdout
