@@ -33,6 +33,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import SCHEMA_VERSION  # benchmarks.run gates on this
+
 ARCH = "tinyllama-1.1b"
 SPARSITY = 0.875  # 3 pow-2 steps: one per Ramanujan factor at d_model
 N_TOKENS = 2048
@@ -176,10 +178,9 @@ if __name__ == "__main__":
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived:.4f}")
     if args.json:
-        payload = {
-            "us_per_call": {name: us for name, us, _ in rows},
-            "derived": {name: d for name, _, d in rows},
-        }
+        from repro.obs import bench_payload
+
         with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-        print(f"# wrote {len(rows)} rows to {args.json}")
+            json.dump(bench_payload(rows), f, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {args.json} "
+              f"(schema v{SCHEMA_VERSION})")

@@ -12,6 +12,10 @@ Usage:
 ``--json PATH`` additionally writes the rows as a ``{name: us_per_call}``
 map (plus a ``derived`` sub-map), so the perf trajectory is
 machine-readable across PRs (CI uploads ``BENCH_<rev>.json`` artifacts).
+The payload carries the shared observability schema version
+(``repro.obs.SCHEMA_VERSION``) and, when any section resolved kernel
+launch configs through the autotuner, a ``kernel_roofline`` table of
+modeled-vs-measured per-shape timings (``repro.obs.kernelstats``).
 """
 from __future__ import annotations
 
@@ -22,6 +26,16 @@ import json
 SECTIONS = ("table1", "table2", "plan", "table3", "kernels", "stacked",
             "chain", "quant", "serve", "serve_sharded", "serve_faults",
             "prefix", "roofline")
+
+
+def _require_schema(mod, section: str) -> None:
+    """quant/chain artifacts feed cross-PR tooling: refuse to run a
+    section whose module no longer declares the shared schema version."""
+    if not hasattr(mod, "SCHEMA_VERSION"):
+        raise SystemExit(
+            f"--only {section}: benchmarks module {mod.__name__} has no "
+            f"SCHEMA_VERSION — its JSON artifact would be unversioned; "
+            f"re-export repro.obs.SCHEMA_VERSION from the module")
 
 
 def main() -> None:
@@ -43,6 +57,12 @@ def main() -> None:
 
     def want(section: str) -> bool:
         return not only or section in only
+
+    # record every autotuner resolution the sections trigger, so the JSON
+    # artifact can embed the modeled-vs-measured roofline table
+    from repro.obs import kernelstats
+
+    kernelstats.enable()
 
     rows: list[tuple] = []
     if want("table1"):
@@ -78,11 +98,13 @@ def main() -> None:
     if want("chain"):
         from . import chain_executor
 
+        _require_schema(chain_executor, "chain")
         print("\n# === Chain executor (masked emulation vs blocked-CSR) ===")
         rows += chain_executor.run(print)
     if want("quant"):
         from . import quant_kernels
 
+        _require_schema(quant_kernels, "quant")
         print("\n# === Quantized storage (int8 leaf blocks + block scales) ===")
         rows += quant_kernels.run(print)
     if want("serve"):
@@ -116,13 +138,17 @@ def main() -> None:
         print(f"{name},{us:.2f},{derived:.4f}")
 
     if args.json:
-        payload = {
-            "us_per_call": {name: us for name, us, _ in rows},
-            "derived": {name: derived for name, _, derived in rows},
-        }
+        from repro.obs import bench_payload
+
+        extra = {}
+        if kernelstats.records():
+            extra["kernel_roofline"] = kernelstats.report()
+        payload = bench_payload(rows, **extra)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)
-        print(f"# wrote {len(rows)} rows to {args.json}")
+        print(f"# wrote {len(rows)} rows to {args.json} "
+              f"(schema v{payload['schema_version']}, "
+              f"{len(kernelstats.records())} kernel-roofline records)")
 
 
 if __name__ == "__main__":

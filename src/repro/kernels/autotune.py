@@ -132,6 +132,32 @@ def clear_memory_cache() -> None:
         _disk_loaded = False
 
 
+# Observability hook: a callable invoked on every resolved launch
+# configuration (cache hit or fresh search) with keyword args
+# (kind, dims, n, dtype, value_dtype, platform, result, cached).
+# Installed by repro.obs.kernelstats.enable(); kept as a plain callable
+# so this module never imports obs (no cycle, zero overhead when unset).
+_obs_hook: Optional[Callable[..., None]] = None
+
+
+def set_obs_hook(fn: Optional[Callable[..., None]]) -> None:
+    global _obs_hook
+    _obs_hook = fn
+
+
+def _notify(kind, dims, nb, dtype, value_dtype, platform, result,
+            cached: bool) -> None:
+    hook = _obs_hook
+    if hook is None:
+        return
+    try:
+        hook(kind=kind, dims=dims, n=nb, dtype=dtype,
+             value_dtype=value_dtype, platform=platform, result=result,
+             cached=cached)
+    except Exception:
+        pass   # observability must never break a kernel launch
+
+
 _plan_fingerprint: Optional[str] = None
 
 
@@ -391,6 +417,8 @@ def autotune(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
         if (hit.grid_order in GRID_ORDERS
                 and hit.block_n in candidate_block_ns(dims, nb, dtype,
                                                       value_dtype)):
+            _notify(kind, dims, nb, dtype, value_dtype, platform, hit,
+                    cached=True)
             return hit
         with _lock:
             _mem_cache.pop(key, None)
@@ -402,6 +430,8 @@ def autotune(dims, n: int, *, dtype: str = "float32", kind: str = "rhs",
     else:
         result = _search_model(dims, nb, dtype, kind, value_dtype)
     _store(key, result)
+    _notify(kind, dims, nb, dtype, value_dtype, platform, result,
+            cached=False)
     return result
 
 

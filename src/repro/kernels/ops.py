@@ -350,3 +350,19 @@ class RBGP4Op:
     def init_data(self, key: jax.Array, dtype=jnp.float32, scale: Optional[float] = None):
         """Kaiming-over-present-connections init (see ``compact_init``)."""
         return compact_init(key, self.layout, dtype=dtype, scale=scale)
+
+    # -- observability ------------------------------------------------------------
+    def measure(self, n: int = 512, *, dtype=jnp.float32, reps: int = 3,
+                seed: int = 0) -> dict:
+        """Fenced wall-clock of this op's ``linear`` vs the roofline model.
+
+        Delegates to :func:`repro.obs.kernelstats.measure_op` (lazy import
+        — kernels never depend on obs unless asked): jitted, warmed, then
+        the median of ``reps`` ``block_until_ready``-fenced timings next
+        to the ``perf_model`` estimate for the same shape.  Returns the
+        record row (``measured_us`` / ``model_us`` / ``efficiency``).
+        """
+        from repro.obs import kernelstats
+
+        return kernelstats.measure_op(self, n, dtype=dtype, reps=reps,
+                                      seed=seed)

@@ -133,7 +133,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--json", default="",
                     help="write run stats (throughput + lifecycle counters: "
                          "rejected/expired/preempted/cancelled/failed) to "
-                         "this path as JSON")
+                         "this path as JSON — schema documented in "
+                         "src/repro/serve/README.md")
+    # -- observability (repro.obs) --------------------------------------------
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "engine step timeline (step/prefill/decode slices, "
+                         "preemption/fault/COW instants) to this path; "
+                         "validate with 'python -m repro.obs.trace FILE'")
+    ap.add_argument("--prom", default="",
+                    help="write the metrics registry in Prometheus text "
+                         "exposition format to this path after the run")
+    ap.add_argument("--kernel-stats", action="store_true",
+                    help="record autotuner kernel resolutions + roofline "
+                         "estimates (repro.obs.kernelstats) and print the "
+                         "efficiency table after the run")
     return ap
 
 
@@ -144,6 +158,11 @@ def main():
         from repro.kernels import autotune
 
         autotune.set_cache_path(args.autotune_cache)
+
+    if args.kernel_stats:
+        from repro.obs import kernelstats
+
+        kernelstats.enable()
 
     from repro.data import RequestStream
     from repro.models import LMModel
@@ -210,8 +229,17 @@ def main():
         print(f"fault schedule: seed={args.fault_seed} "
               f"{len(faults)} events over {faults.horizon} steps")
 
+    # a Recorder is attached whenever any observability output is asked
+    # for; the default stays the zero-overhead no-op recorder
+    recorder = None
+    if args.trace or args.prom or args.json:
+        from repro.obs import Recorder
+
+        recorder = Recorder()
+
     if args.engine == "static":
-        engine = make_engine("static", model, params, batch=args.batch)
+        engine = make_engine("static", model, params, batch=args.batch,
+                             recorder=recorder)
     else:
         eng_kw = dict(
             page_size=args.page_size, max_slots=args.batch,
@@ -220,6 +248,7 @@ def main():
             plan=cfg.plan,  # plan-aware admission (None: uniform budget)
             reserve=args.reserve, max_retries=args.max_retries,
             max_idle_steps=args.max_idle_steps, faults=faults,
+            recorder=recorder,
         )
         if args.engine == "continuous":
             engine = make_engine("continuous", model, params, **eng_kw)
@@ -309,15 +338,32 @@ def main():
     if any(lifecycle.values()):
         print("lifecycle: " + " ".join(f"{k}={v}"
                                        for k, v in lifecycle.items() if v))
+    spans_agg = None
+    if recorder is not None and recorder.spans is not None:
+        spans_agg = recorder.spans.aggregate()
+        ttft, tpot = spans_agg["ttft_s"], spans_agg["tpot_s"]
+        qs = spans_agg["queue_steps"]
+        if ttft and tpot:
+            print(f"spans: {spans_agg['requests']} requests, "
+                  f"TTFT p50={ttft['p50']*1e3:.1f}ms "
+                  f"p99={ttft['p99']*1e3:.1f}ms, "
+                  f"TPOT p50={tpot['p50']*1e3:.2f}ms "
+                  f"p99={tpot['p99']*1e3:.2f}ms, "
+                  f"queue-steps p50={qs.get('p50', 0):.0f}")
+        if spans_agg["preemptions"]:
+            print(f"spans: {spans_agg['preemptions']} preemptions lost "
+                  f"{spans_agg['lost_steps']} request-steps")
     if args.json:
         import json
 
+        from repro.obs import SCHEMA_VERSION
         from repro.serve import TERMINAL_STATES
 
         states: dict = {}
         for req in engine.requests.values():
             states[req.state] = states.get(req.state, 0) + 1
         payload = {
+            "schema_version": SCHEMA_VERSION,
             "arch": cfg.name, "engine": args.engine,
             "reserve": args.reserve, "requests": len(engine.requests),
             "served": len(out), "wall_s": wall,
@@ -328,9 +374,40 @@ def main():
                                 for r in engine.requests.values()),
             **lifecycle,
         }
+        if recorder is not None:
+            payload["metrics"] = recorder.registry.snapshot()
+            if spans_agg is not None:
+                payload["spans"] = spans_agg
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
+    if args.trace and recorder is not None and recorder.trace is not None:
+        recorder.trace.save(args.trace)
+        print(f"wrote {args.trace} "
+              f"(open in ui.perfetto.dev or chrome://tracing)")
+    if args.prom and recorder is not None:
+        with open(args.prom, "w") as f:
+            f.write(recorder.registry.render_prometheus())
+        print(f"wrote {args.prom}")
+    if args.kernel_stats:
+        from repro.obs import kernelstats
+
+        rows = kernelstats.efficiency_table()
+        if rows:
+            print("kernel roofline (model µs / measured µs):")
+            for row in rows:
+                model = (f"{row['model_us']:.1f}"
+                         if row["model_us"] is not None else "-")
+                meas = (f"{row['measured_us']:.1f}"
+                        if row["measured_us"] is not None else "-")
+                eff = (f"{row['efficiency']:.2f}"
+                       if row["efficiency"] is not None else "-")
+                print(f"  {row['kind']:<14s} {row['dims']:<40s} "
+                      f"model={model}us measured={meas}us "
+                      f"eff={eff} ({row['source']})")
+        else:
+            print("kernel roofline: no autotuner resolutions recorded "
+                  "(dense or non-autotuned backend?)")
     if out:
         rid0 = min(out)
         print(f"sample continuation (req {rid0}): "

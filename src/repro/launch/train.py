@@ -135,6 +135,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="persistent kernel-autotune cache path (resolves "
                          "block_n='auto' for the compact/pallas backends; "
                          "default ~/.cache/repro-rbgp4/autotune.json)")
+    ap.add_argument("--kernel-stats", action="store_true",
+                    help="record autotuner kernel resolutions + roofline "
+                         "estimates (repro.obs.kernelstats) and print the "
+                         "per-shape table after training")
     return ap
 
 
@@ -145,6 +149,11 @@ def main():
         from repro.kernels import autotune
 
         autotune.set_cache_path(args.autotune_cache)
+
+    if args.kernel_stats:
+        from repro.obs import kernelstats
+
+        kernelstats.enable()
 
     cfg, model, loss_fn, params, tcfg, data = build(args)
     plan = cfg.sparsity_rules
@@ -189,6 +198,22 @@ def main():
               f"slow steps: {trainer.straggler_events[:5]}")
     print(f"done: steps={int(trainer.state.step)} "
           f"first-loss={losses[0]:.4f} last-loss={losses[-1]:.4f}")
+    if args.kernel_stats:
+        from repro.obs import kernelstats
+
+        rep = kernelstats.report()
+        print(f"kernelstats: {rep['n_records']} kernel shapes resolved, "
+              f"{rep['n_measured']} with measured wall-clock")
+        for row in rep["records"]:
+            model_us = (f"{row['model_us']:.1f}"
+                        if row["model_us"] is not None else "-")
+            meas = (f"{row['measured_us']:.1f}"
+                    if row["measured_us"] is not None else "-")
+            eff = (f"{row['efficiency']:.2f}"
+                   if row["efficiency"] is not None else "-")
+            print(f"  {row['kind']:<14s} {row['dims']:<40s} "
+                  f"model={model_us}us measured={meas}us eff={eff} "
+                  f"({row['source']}, {row['resolutions']} resolutions)")
     if args.quant:
         from repro.sparsity import quantize_weights
         from repro.train.checkpoint import CheckpointManager

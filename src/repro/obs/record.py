@@ -1,0 +1,230 @@
+"""The Recorder: the one object the engines talk to for observability.
+
+Two implementations share one duck type:
+
+  * :data:`NULL_RECORDER` (a :class:`NullRecorder`) — the default.  Every
+    hook is a no-op except ``timed()``, which preserves the engines'
+    historical behavior byte-for-byte: a bare ``perf_counter`` delta
+    added into the ``stats`` dict, **without** fencing JAX's async
+    dispatch.  Nothing is allocated per call, no registry, no spans, no
+    trace — zero overhead and zero behavior change when observability is
+    off.
+  * :class:`Recorder` — the real thing.  ``timed()`` additionally
+    *fences* (``block_until_ready`` on every pytree leaf handed to
+    ``tm.fence``) before stopping the clock, observes a
+    ``<name>_seconds`` histogram, and emits a Perfetto slice; lifecycle
+    hooks feed the :class:`~repro.obs.spans.SpanLog`; ``instant()``
+    marks point events on the trace.
+
+The fence is the satellite bugfix for the async-dispatch timing bug:
+``prefill_time_s``/``decode_time_s`` used to stop the clock after JAX
+*dispatch* returned, not after the computation ran (materializing logits
+forces only part of the program, and chunked prefill's non-final chunks
+force nothing at all).  With a recorder attached the timed section calls
+``tm.fence(cache)`` / ``tm.fence(pools)`` so the wall-clock covers the
+compute.  The null recorder deliberately keeps the old (cheap, unfenced)
+numbers — fencing would serialize dispatch and slow serving down when
+nobody is looking at the timings.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from .metrics import MetricsRegistry
+from .spans import SpanLog
+from .trace import TraceBuffer
+
+__all__ = ["Recorder", "NullRecorder", "NULL_RECORDER", "fence"]
+
+
+def fence(x):
+    """``block_until_ready`` every array leaf of a pytree; returns x.
+
+    Tolerates non-JAX leaves (numpy arrays, test fakes without the
+    method) so callers can fence whatever object they have in hand.
+    """
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(x):
+        bur = getattr(leaf, "block_until_ready", None)
+        if bur is not None:
+            bur()
+    return x
+
+
+class _NullTimed:
+    """Context manager reproducing the engines' historical timing code:
+    ``stats[key] += perf_counter() - t0`` around the (un-fenced) calls."""
+
+    __slots__ = ("_stats", "_key", "_t0")
+
+    def __init__(self, stats, key):
+        self._stats = stats
+        self._key = key
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        if self._stats is not None and self._key is not None:
+            self._stats[self._key] += time.perf_counter() - self._t0
+        return False
+
+    @staticmethod
+    def fence(x):
+        return x
+
+    def set(self, **kw) -> None:
+        pass
+
+
+class NullRecorder:
+    """Do-nothing recorder; the engines' default.  Stateless singleton."""
+
+    enabled = False
+    registry: Optional[MetricsRegistry] = None
+    spans: Optional[SpanLog] = None
+    trace: Optional[TraceBuffer] = None
+
+    def now(self) -> float:
+        return 0.0
+
+    @staticmethod
+    def fence(x):
+        return x
+
+    def timed(self, name, stats=None, key=None, track=None, **args):
+        return _NullTimed(stats, key)
+
+    def slice(self, name, start_s, end_s=None, track=None, **args):
+        pass
+
+    def instant(self, name, track="events", **args):
+        pass
+
+    def on_submit(self, req, step):
+        pass
+
+    def on_transition(self, req, frm, to, step):
+        pass
+
+    def on_token(self, req, step):
+        pass
+
+    def annotate(self, rid, **kw):
+        pass
+
+
+NULL_RECORDER = NullRecorder()
+
+
+class _Timed:
+    """Fenced timed section: stats accumulation + histogram + trace slice."""
+
+    __slots__ = ("_rec", "_name", "_stats", "_key", "_track", "_args",
+                 "_t0")
+
+    def __init__(self, rec, name, stats, key, track, args):
+        self._rec = rec
+        self._name = name
+        self._stats = stats
+        self._key = key
+        self._track = track
+        self._args = args
+
+    def __enter__(self):
+        self._t0 = self._rec.now()
+        return self
+
+    def fence(self, x):
+        return fence(x)
+
+    def set(self, **kw) -> None:
+        self._args.update(kw)
+
+    def __exit__(self, *exc):
+        rec = self._rec
+        end = rec.now()
+        elapsed = end - self._t0
+        if self._stats is not None and self._key is not None:
+            self._stats[self._key] += elapsed
+        if rec.registry is not None:
+            rec.registry.histogram(
+                f"{self._name}_seconds",
+                help=f"fenced wall-clock of {self._name} sections",
+            ).observe(elapsed)
+        if rec.trace is not None:
+            rec.trace.slice(self._name, self._t0, end,
+                            track=self._track, **self._args)
+        return False
+
+
+class Recorder:
+    """Live recorder: registry + request spans + Perfetto trace.
+
+    Any of the three sinks can be switched off at construction
+    (``spans=False`` / ``trace=False``); pre-built instances can also be
+    passed in (e.g. a SpanLog with an injected test clock).  All engine
+    hooks are cheap host-side bookkeeping; the only interaction with JAX
+    is the explicit ``fence`` inside timed sections.
+    """
+
+    enabled = True
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 spans=True, trace=True):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        if spans is True:
+            spans = SpanLog()
+        self.spans = spans or None
+        if trace is True:
+            trace = TraceBuffer()
+        self.trace = trace or None
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        """Seconds since recorder start — the shared slice/trace clock."""
+        if self.trace is not None:
+            return self.trace.now()
+        return time.perf_counter() - self._t0
+
+    @staticmethod
+    def fence(x):
+        return fence(x)
+
+    def timed(self, name, stats=None, key=None, track=None, **args):
+        return _Timed(self, name, stats, key, track, args)
+
+    def slice(self, name, start_s, end_s=None, track=None, **args):
+        if self.trace is not None:
+            if end_s is None:
+                end_s = self.trace.now()
+            self.trace.slice(name, start_s, end_s, track=track, **args)
+
+    def instant(self, name, track="events", **args):
+        if self.trace is not None:
+            self.trace.instant(name, track=track, **args)
+        self.registry.counter(
+            f"event_{name}_total", labels=()).inc()
+
+    def on_submit(self, req, step):
+        if self.spans is not None:
+            self.spans.on_submit(req, step)
+
+    def on_transition(self, req, frm, to, step):
+        if self.spans is not None:
+            self.spans.on_transition(req, frm, to, step)
+        if self.trace is not None and to in ("FINISHED", "CANCELLED",
+                                             "EXPIRED", "FAILED"):
+            self.trace.instant(f"request_{to.lower()}", track="lifecycle",
+                               rid=req.rid, step=step)
+
+    def on_token(self, req, step):
+        if self.spans is not None:
+            self.spans.on_token(req, step)
+
+    def annotate(self, rid, **kw):
+        if self.spans is not None:
+            self.spans.annotate(rid, **kw)

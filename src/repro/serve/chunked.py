@@ -168,14 +168,25 @@ class ChunkedPrefillState:
             self.logits = logits
 
 
-def run_one_chunk(state: ChunkedPrefillState, params, chunk_fn) -> int:
+def run_one_chunk(state: ChunkedPrefillState, params, chunk_fn,
+                  fence=None) -> int:
     """Feed one chunk of ``state`` through ``chunk_fn`` (a jitted
-    ``model.prefill_chunk``).  Returns the number of prompt tokens fed."""
+    ``model.prefill_chunk``).  Returns the number of prompt tokens fed.
+
+    ``fence``: optional callable applied to the updated cache before
+    returning.  Non-final chunks materialize nothing on the host (the
+    logits stay on-device as ``None``), so without a fence a wall-clock
+    around this call times only XLA *dispatch*; the engines' recorder
+    passes its ``block_until_ready`` fence here so timed chunk sections
+    cover the compute.
+    """
     tokens, start, n_valid = state.next_chunk()
     logits, cache = chunk_fn(
         params, {"tokens": jnp.asarray(tokens)}, state.cache,
         jnp.int32(start), jnp.int32(n_valid),
     )
+    if fence is not None:
+        fence(cache)
     will_finish = start + n_valid >= state.total
     state.advance(n_valid, cache,
                   np.asarray(logits) if will_finish else None)

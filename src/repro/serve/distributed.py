@@ -163,6 +163,7 @@ class DisaggregatedEngine(ShardedContinuousEngine):
         """device_put the packed pages from the prefill role onto the
         decode pools' layout (TP over heads, blocks replicated)."""
         self.stats["handoffs"] += 1
+        self._obs.instant("kv_handoff", step=self._clock)
         if self.kv.shardings is None:
             return paged
         return jax.tree_util.tree_map(jax.device_put, paged,

@@ -40,12 +40,13 @@ complete the failure story.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import NULL_RECORDER, EngineStats
 
 from .cache import PagedKVCache, blocks_for_tokens, pack_prefill_pages
 from .chunked import ChunkedPrefillState, chunk_cache_len, \
@@ -129,7 +130,8 @@ class ServingEngine:
 
     kind = "base"
 
-    def __init__(self, model, params, *, cache_dtype=jnp.float32):
+    def __init__(self, model, params, *, cache_dtype=jnp.float32,
+                 recorder=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -138,15 +140,22 @@ class ServingEngine:
         self.finished: dict[int, Request] = {}
         self._next_rid = 0
         self._clock = 0                 # engine step clock (deadline basis)
-        self.stats: dict[str, float] = {
+        # observability: NULL_RECORDER (no registry, unfenced legacy
+        # timings, every hook a no-op) unless the caller attaches a
+        # repro.obs.Recorder.  ``stats`` stays a real dict — EngineStats
+        # mirrors writes into the recorder's metrics registry when one
+        # is attached and is a plain dict otherwise.
+        self._obs = recorder if recorder is not None else NULL_RECORDER
+        self.stats = EngineStats(self._obs.registry, {
             "steps": 0, "prefill_calls": 0, "decode_steps": 0,
             "prompt_tokens": 0, "generated_tokens": 0, "wasted_row_steps": 0,
             "prefill_time_s": 0.0, "decode_time_s": 0.0,
             # robustness counters (lifecycle / preemption / faults)
             "rejected": 0, "cancelled": 0, "expired": 0, "failed": 0,
+            "finished": 0,
             "preemptions": 0, "fault_kills": 0, "resumed_prefills": 0,
             "fault_events": 0, "fault_paused_steps": 0,
-        }
+        })
 
     # -- API -----------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
@@ -190,6 +199,7 @@ class ServingEngine:
             raise
         self._next_rid += 1
         self.requests[rid] = req
+        self._obs.on_submit(req, self._clock)
         return rid
 
     def cancel(self, rid: int) -> bool:
@@ -239,9 +249,16 @@ class ServingEngine:
                            step=len(req.generated))
         req.generated.append(tok)
         self.stats["generated_tokens"] += 1
+        self._obs.on_token(req, self._clock)
 
     def _mark_finished(self, req: Request) -> None:
         self.finished[req.rid] = req
+        if req.state == FINISHED:
+            self.stats["finished"] += 1
+
+    def _transition(self, req: Request, to: str) -> None:
+        """Lifecycle edge + span hook at the current engine clock."""
+        transition(req, to, obs=self._obs, clock=self._clock)
 
 
 class ContinuousEngine(ServingEngine):
@@ -307,8 +324,9 @@ class ContinuousEngine(ServingEngine):
                  cache_dtype=jnp.float32, plan=None,
                  reserve: str = "worst_case", max_retries: int = 32,
                  preempt_backoff: int = 1, max_idle_steps: int = 1000,
-                 faults=None, prefix_cache: bool = False):
-        super().__init__(model, params, cache_dtype=cache_dtype)
+                 faults=None, prefix_cache: bool = False, recorder=None):
+        super().__init__(model, params, cache_dtype=cache_dtype,
+                         recorder=recorder)
         self.page = page_size
         self.max_slots = max_slots
         self.max_request_len = max_request_len or self.cfg.max_seq_len
@@ -503,6 +521,10 @@ class ContinuousEngine(ServingEngine):
             req.cow_src = plan.cow_src
         self.stats["prefix_hits"] += plan.hit_pages
         self.stats["prefix_hit_tokens"] += plan.hit_tokens
+        # per-request prefill discount: the span aggregation sums these,
+        # and the counter audit cross-checks them against the stats totals
+        self._obs.annotate(req.rid, prefix_hit_tokens=plan.hit_tokens,
+                           prefix_hit_pages=plan.hit_pages)
 
     def _insert_prefix(self, req: Request) -> None:
         """Index the request's full *prompt* pages after its prefill
@@ -537,6 +559,7 @@ class ContinuousEngine(ServingEngine):
             self._release_blocks([req.cow_src])
             req.cow_src = None
             self.stats["prefix_cow_copies"] += 1
+            self._obs.instant("prefix_cow", rid=req.rid, step=self._clock)
         self.stats["shared_prefills"] += 1
         return cache, suffix_start, span
 
@@ -579,6 +602,7 @@ class ContinuousEngine(ServingEngine):
     def step(self) -> list[Request]:
         """One engine tick: faults, expiry, admit+prefill, batched decode."""
         finished: list[Request] = []
+        t_step = self._obs.now()
         paused = False
         if self._injector is not None:
             paused = self._injector.begin_step(self, self._clock)
@@ -592,7 +616,7 @@ class ContinuousEngine(ServingEngine):
                 # allocation pressure, so every claim matches at least
                 # what the admission probe reserved against
                 admitted += 1
-                transition(req, PREFILLING)
+                self._transition(req, PREFILLING)
                 if self.prefix is not None:
                     self._claim_prefix(req)
             for req in batch:
@@ -619,6 +643,14 @@ class ContinuousEngine(ServingEngine):
         self.stats["peak_allocated_blocks"] = max(
             self.stats["peak_allocated_blocks"], na
         )
+        if self._obs.enabled:
+            reg = self._obs.registry
+            for k, v in self.scheduler.occupancy().items():
+                reg.gauge(f"sched_{k}").set(v)
+            reg.gauge("pool_allocated_blocks").set(na)
+            self._obs.slice("step", t_step, track="step", step=self._clock,
+                            admitted=admitted, chunks=chunks,
+                            decoded=decoded, finished=len(finished))
         self._watchdog(admitted + chunks + decoded + len(finished), paused)
         self._clock += 1
         return finished
@@ -633,7 +665,7 @@ class ContinuousEngine(ServingEngine):
             self.scheduler.finish(req)
         else:
             self.scheduler.remove(req)
-        transition(req, state)
+        self._transition(req, state)
         req.error = error
         self._mark_finished(req)
 
@@ -671,6 +703,9 @@ class ContinuousEngine(ServingEngine):
         self.preempt_log.append(
             (self._clock, req.rid, "restart" if restart else "preempt")
         )
+        self._obs.instant("restart" if restart else "preempt",
+                          rid=req.rid, step=self._clock,
+                          generated=len(req.generated))
         if restart:
             # fault kill: the generated prefix is lost with the "crash";
             # per-(request, step) sampling keys regenerate it identically
@@ -682,7 +717,7 @@ class ContinuousEngine(ServingEngine):
             self.stats["preemptions"] += 1
         retries = req.preemptions + req.restarts
         if retries > self.max_retries:
-            transition(req, FAILED)
+            self._transition(req, FAILED)
             req.error = RequestError(
                 "retries_exhausted",
                 f"request {req.rid} exceeded max_retries={self.max_retries} "
@@ -693,7 +728,7 @@ class ContinuousEngine(ServingEngine):
             self.stats["failed"] += 1
             self._mark_finished(req)
             return
-        transition(req, QUEUED)
+        self._transition(req, QUEUED)
         req.not_before = self._clock + 1 + \
             self.preempt_backoff * (2 ** min(retries - 1, 6))
         self.scheduler.requeue(req)
@@ -770,9 +805,7 @@ class ContinuousEngine(ServingEngine):
             "pool": {"n_free": alloc.n_free, "n_allocated": alloc.n_allocated,
                      "n_quarantined": alloc.n_quarantined,
                      "n_total": alloc.n_total},
-            "budget": {"live_tokens": self.scheduler.live_tokens,
-                       "reserved_blocks": self.scheduler.reserved_blocks,
-                       "capacity_blocks": self.scheduler.capacity_blocks},
+            "budget": self.scheduler.occupancy(),
         }
         raise EngineStallError(
             f"engine made no progress for {self._idle_streak} consecutive "
@@ -806,14 +839,21 @@ class ContinuousEngine(ServingEngine):
         if req.n_shared == 0 and req.cow_src is None:
             cache = self.model.init_cache(1, L, self.cache_dtype,
                                           full_length=True)
-            t0 = time.perf_counter()
-            logits, cache = self._prefill(
-                self.prefill_params,
-                {"tokens": jnp.asarray(req.prefill_tokens[None])},
-                cache
-            )
-            logits = np.asarray(logits)
-            self.stats["prefill_time_s"] += time.perf_counter() - t0
+            # with a live recorder, tm.fence(cache) blocks until the whole
+            # prefill program ran — np.asarray(logits) alone only forces
+            # the logits output, so the bare perf_counter delta of the
+            # legacy (null-recorder) path measures dispatch + partial
+            # compute, not the prefill
+            with self._obs.timed("prefill", self.stats, "prefill_time_s",
+                                 rid=req.rid, tokens=L,
+                                 step=self._clock) as tm:
+                logits, cache = self._prefill(
+                    self.prefill_params,
+                    {"tokens": jnp.asarray(req.prefill_tokens[None])},
+                    cache
+                )
+                logits = np.asarray(logits)
+                tm.fence(cache)
             self.kv.write_pages(
                 self._handoff(pack_prefill_pages(cache, nb, self.page)),
                 req.blocks,
@@ -826,13 +866,15 @@ class ContinuousEngine(ServingEngine):
             cache = mask_cache_rows(cache, start, span)
             suffix = np.asarray(req.prefill_tokens)[start:]
             fed = L - start
-            t0 = time.perf_counter()
-            logits, cache = self._chunk(
-                self.prefill_params, {"tokens": jnp.asarray(suffix[None])},
-                cache, jnp.int32(start), jnp.int32(fed),
-            )
-            logits = np.asarray(logits)
-            self.stats["prefill_time_s"] += time.perf_counter() - t0
+            with self._obs.timed("prefill", self.stats, "prefill_time_s",
+                                 rid=req.rid, tokens=fed, shared=True,
+                                 step=self._clock) as tm:
+                logits, cache = self._chunk(
+                    self.prefill_params, {"tokens": jnp.asarray(suffix[None])},
+                    cache, jnp.int32(start), jnp.int32(fed),
+                )
+                logits = np.asarray(logits)
+                tm.fence(cache)
             self.kv.write_pages(
                 self._handoff(pack_prefill_pages(
                     slice_cache(cache, req.n_shared * self.page,
@@ -846,7 +888,7 @@ class ContinuousEngine(ServingEngine):
         if req.generated:
             self.stats["resumed_prefills"] += 1
         self._sample(req, logits[0])
-        transition(req, DECODING)
+        self._transition(req, DECODING)
         self.stats["prefill_calls"] += 1
         self.stats["prompt_tokens"] += fed
 
@@ -893,9 +935,14 @@ class ContinuousEngine(ServingEngine):
             return 0
         rid = next(iter(self._prefilling))   # dict preserves FCFS order
         state = self._prefilling[rid]
-        t0 = time.perf_counter()
-        fed = run_one_chunk(state, self.prefill_params, self._chunk)
-        self.stats["prefill_time_s"] += time.perf_counter() - t0
+        # non-final chunks materialize nothing — the bare perf_counter
+        # delta here was the purest form of the dispatch-timing bug, so
+        # the recorder's fence goes *into* run_one_chunk
+        with self._obs.timed("prefill_chunk", self.stats, "prefill_time_s",
+                             rid=rid, pos=state.pos,
+                             step=self._clock) as tm:
+            fed = run_one_chunk(state, self.prefill_params, self._chunk,
+                                fence=tm.fence if self._obs.enabled else None)
         self.stats["prefill_chunks"] += 1
         self.stats["prompt_tokens"] += fed
         if state.done:
@@ -914,7 +961,7 @@ class ContinuousEngine(ServingEngine):
             if self.prefix is not None:
                 self._insert_prefix(req)
             self._sample(req, state.logits[0])
-            transition(req, DECODING)
+            self._transition(req, DECODING)
             self.stats["prefill_calls"] += 1
             if req.done:
                 self._finish(req, finished)
@@ -955,13 +1002,14 @@ class ContinuousEngine(ServingEngine):
             positions[r.slot] = r.input_pos
             bt_rows[r.slot] = r.blocks
         bt = self.kv.block_table(bt_rows, self.max_blocks)
-        t0 = time.perf_counter()
-        logits, self.kv.pools = self._decode(
-            self.params, jnp.asarray(tokens), self.kv.pools,
-            jnp.asarray(bt), jnp.asarray(positions),
-        )
-        logits = np.asarray(logits)
-        self.stats["decode_time_s"] += time.perf_counter() - t0
+        with self._obs.timed("decode", self.stats, "decode_time_s",
+                             rows=len(active), step=self._clock) as tm:
+            logits, self.kv.pools = self._decode(
+                self.params, jnp.asarray(tokens), self.kv.pools,
+                jnp.asarray(bt), jnp.asarray(positions),
+            )
+            logits = np.asarray(logits)
+            tm.fence(self.kv.pools)
         self.stats["decode_steps"] += 1
         self.stats["decode_row_steps"] += len(active)
         for r in active:
@@ -975,7 +1023,7 @@ class ContinuousEngine(ServingEngine):
         or another reader still references stay resident)."""
         self._release_request_blocks(req)
         self.scheduler.finish(req)
-        transition(req, FINISHED)
+        self._transition(req, FINISHED)
         self._mark_finished(req)
         finished.append(req)
 
@@ -986,8 +1034,9 @@ class StaticEngine(ServingEngine):
     kind = "static"
 
     def __init__(self, model, params, *, batch: int = 4,
-                 cache_dtype=jnp.float32):
-        super().__init__(model, params, cache_dtype=cache_dtype)
+                 cache_dtype=jnp.float32, recorder=None):
+        super().__init__(model, params, cache_dtype=cache_dtype,
+                         recorder=recorder)
         self.batch = batch
         self._queue: list[Request] = []
         self._prefill = jax.jit(model.prefill)
@@ -1007,7 +1056,7 @@ class StaticEngine(ServingEngine):
         still-queued requests can be cancelled/expired here."""
         if req in self._queue:
             self._queue.remove(req)
-        transition(req, state)
+        self._transition(req, state)
         req.error = error
         self._mark_finished(req)
 
@@ -1029,27 +1078,30 @@ class StaticEngine(ServingEngine):
         cache = self.model.init_cache(B, S + max_gen, self.cache_dtype)
         prompts = np.stack([r.prompt for r in group])
         for r in group:
-            transition(r, PREFILLING)
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(prompts)}, cache
-        )
-        logits = np.asarray(logits)
-        self.stats["prefill_time_s"] += time.perf_counter() - t0
+            self._transition(r, PREFILLING)
+        with self._obs.timed("prefill", self.stats, "prefill_time_s",
+                             batch=B, tokens=B * S,
+                             step=self._clock) as tm:
+            logits, cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(prompts)}, cache
+            )
+            logits = np.asarray(logits)
+            tm.fence(cache)
         for i, r in enumerate(group):
             self._sample(r, logits[i])
-            transition(r, DECODING)
+            self._transition(r, DECODING)
         self.stats["prefill_calls"] += 1
         self.stats["prompt_tokens"] += B * S
         for step_i in range(1, max_gen):
             nxt = np.stack([self._next_input(r) for r in group])
-            t0 = time.perf_counter()
-            logits, cache = self._decode(
-                self.params, jnp.asarray(nxt), cache,
-                jnp.int32(S + step_i - 1),
-            )
-            logits = np.asarray(logits)
-            self.stats["decode_time_s"] += time.perf_counter() - t0
+            with self._obs.timed("decode", self.stats, "decode_time_s",
+                                 rows=B, step=self._clock) as tm:
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(nxt), cache,
+                    jnp.int32(S + step_i - 1),
+                )
+                logits = np.asarray(logits)
+                tm.fence(cache)
             self.stats["decode_steps"] += 1
             self.stats["cache_slot_steps"] += B * (S + max_gen)
             self.stats["live_token_steps"] += sum(
@@ -1063,7 +1115,7 @@ class StaticEngine(ServingEngine):
                 else:
                     self._sample(r, logits[i])
         for r in group:
-            transition(r, FINISHED)
+            self._transition(r, FINISHED)
             self._mark_finished(r)
         self.stats["steps"] += 1
         self._clock += 1

@@ -138,6 +138,7 @@ class FaultInjector:
         for ev in self.schedule.at(step):
             self.log.append((step, ev.kind, ev.arg))
             engine.stats["fault_events"] += 1
+            engine._obs.instant(f"fault_{ev.kind}", arg=ev.arg, step=step)
             if ev.kind == "capacity_drop":
                 engine.kv.allocator.quarantine(ev.arg)
                 engine.scheduler.capacity_blocks = engine.kv.allocator.n_total

@@ -58,8 +58,15 @@ _EDGES = {
 }
 
 
-def transition(req, to: str) -> None:
-    """Move ``req`` (anything with a ``state`` attr) along a legal edge."""
+def transition(req, to: str, obs=None, clock: int = 0) -> None:
+    """Move ``req`` (anything with a ``state`` attr) along a legal edge.
+
+    ``obs`` is an optional observability recorder (duck-typed — anything
+    with ``on_transition(req, frm, to, clock)``); the engines pass theirs
+    so every legal edge lands in the request's span at the engine-clock
+    step it happened.  The hook fires *after* the state change, and only
+    for legal edges — illegal edges raise before any side effect.
+    """
     frm = req.state
     if to not in _EDGES[frm]:
         raise RuntimeError(
@@ -67,6 +74,8 @@ def transition(req, to: str) -> None:
             f"{getattr(req, 'rid', '?')} (legal: {sorted(_EDGES[frm])})"
         )
     req.state = to
+    if obs is not None:
+        obs.on_transition(req, frm, to, clock)
 
 
 class RequestError(ValueError):

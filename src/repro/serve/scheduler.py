@@ -180,6 +180,18 @@ class FCFSScheduler:
     def idle(self) -> bool:
         return not self.waiting and not self.running
 
+    def occupancy(self) -> dict:
+        """Point-in-time admission state — the engine's per-step gauges
+        and the watchdog's stall diagnostics read the same numbers."""
+        return {
+            "waiting": len(self.waiting),
+            "running": len(self.running),
+            "live_tokens": self._live_tokens,
+            "max_live_tokens": self.max_live_tokens,
+            "reserved_blocks": self._reserved_blocks,
+            "capacity_blocks": self.capacity_blocks,
+        }
+
     # -- queue ---------------------------------------------------------------------
     def validate(self, req) -> None:
         """Reject requests that could never be admitted (budget / pool)."""

@@ -82,6 +82,8 @@ def save_engine(engine, path: str) -> dict:
         "stats": {k: v for k, v in engine.stats.items()},
     }
     save_pytree(path, tree, extra=meta)
+    engine._obs.instant("snapshot", step=engine._clock,
+                        requests=len(records))
     return meta
 
 

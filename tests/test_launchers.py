@@ -126,6 +126,57 @@ def test_serve_driver():
 
 
 @pytest.mark.slow
+def test_serve_driver_observability_roundtrip(tmp_path):
+    """--json/--trace/--prom attach a Recorder and write the documented
+    artifacts: the JSON keeps every legacy top-level key (schema contract
+    in src/repro/serve/README.md) plus schema_version/metrics/spans, the
+    trace validates as Perfetto trace_event JSON, and the prom file is
+    text exposition format with the serve_* counters."""
+    import json
+
+    jpath = tmp_path / "serve.json"
+    tpath = tmp_path / "trace.json"
+    ppath = tmp_path / "metrics.prom"
+    res = run_cli(["-m", "repro.launch.serve", "--arch", "tinyllama-1.1b",
+                   "--reduced", "--mixed", "--requests", "4", "--batch", "3",
+                   "--prompt-len", "16", "--gen", "8",
+                   "--json", str(jpath), "--trace", str(tpath),
+                   "--prom", str(ppath)])
+    assert res.returncode == 0, res.stdout[-400:] + res.stderr[-400:]
+    assert "TTFT" in res.stdout and "TPOT" in res.stdout
+
+    payload = json.loads(jpath.read_text())
+    from repro.obs import SCHEMA_VERSION
+
+    assert payload["schema_version"] == SCHEMA_VERSION
+    legacy = {"arch", "engine", "reserve", "requests", "served", "wall_s",
+              "prompt_tokens", "generated_tokens", "tok_per_s", "states",
+              "all_terminal", "rejected", "expired", "cancelled", "failed",
+              "preemptions", "fault_kills", "resumed_prefills",
+              "fault_events", "fault_paused_steps"}
+    assert legacy <= set(payload), legacy - set(payload)
+    assert payload["served"] == 4 and payload["all_terminal"]
+    # new blocks: registry snapshot + span aggregate, consistent with the
+    # legacy counters
+    assert payload["metrics"]["serve_finished"] == 4
+    assert payload["metrics"]["serve_generated_tokens"] == \
+        payload["generated_tokens"]
+    assert payload["spans"]["requests"] == 4
+    assert payload["spans"]["tokens"] == payload["generated_tokens"]
+    assert set(payload["spans"]["ttft_s"]) == {"p50", "p90", "p99"}
+
+    from repro.obs import validate_trace_file
+
+    stats = validate_trace_file(str(tpath))
+    assert stats["slices"] > 0 and stats["tracks"] >= 2
+
+    prom = ppath.read_text()
+    assert "# TYPE serve_finished counter" in prom
+    assert "serve_finished 4" in prom
+    assert "decode_seconds_bucket" in prom
+
+
+@pytest.mark.slow
 def test_serve_driver_static_mixed():
     res = run_cli(["-m", "repro.launch.serve", "--arch", "tinyllama-1.1b",
                    "--reduced", "--engine", "static", "--mixed",

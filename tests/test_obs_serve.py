@@ -1,0 +1,299 @@
+"""Observability threaded through the serving engines.
+
+The load-bearing guarantees, in order:
+
+  * **bit-exactness** — attaching a Recorder never changes a single
+    greedy token (the engine-vs-oracle parity suites stay the guard; here
+    we pin recorder-on == recorder-off directly);
+  * **counter audit** — the lifecycle counters the engine increments at
+    scattered call sites (finished/expired/failed/preemptions/
+    fault_kills/prefix_hits) exactly match counts re-derived from the
+    request log + span log, across preemption, fault-soak, and
+    prefix-sharing runs;
+  * **span math** — a lone request's TTFT-in-steps equals the observed
+    first-token step delta; preempted requests' spans grow the extra
+    QUEUED/PREFILLING segments and still finish bit-exact;
+  * **fenced timings** — with a recorder attached the prefill/decode
+    sections are fenced (block_until_ready), so their sum dominates the
+    drain wall-time on CPU where compute is the loop's cost.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import apply_sparsity, get_config, reduce_config
+from repro.models import LMModel
+from repro.obs import (
+    Recorder,
+    audit_engine,
+    derive_counts,
+    validate_trace,
+)
+from repro.serve import (
+    ContinuousEngine,
+    FaultSchedule,
+    run_sequential,
+    restore_engine,
+    save_engine,
+)
+
+# decode growth overflows a small pool (same shapes as the lifecycle
+# suite): preemption tests reuse them against n_blocks=11
+SHAPES = [(4, 8), (12, 10), (8, 9), (16, 6), (6, 10)]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    cfg = apply_sparsity(cfg, pattern="rbgp4", sparsity=0.5,
+                         backend="xla_masked", min_dim=64)
+    model = LMModel(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def make_workload(model, shapes=SHAPES, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        {"rid": i, "prompt": rng.integers(
+            0, model.cfg.vocab_size, s).astype(np.int32),
+         "max_new_tokens": g}
+        for i, (s, g) in enumerate(shapes)
+    ]
+
+
+def run_engine(model, params, workload, recorder=None, **kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_request_len", 40)
+    eng = ContinuousEngine(model, params, recorder=recorder, **kw)
+    for r in workload:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    out = eng.drain()
+    return eng, out
+
+
+# -- bit-exactness ------------------------------------------------------------------
+
+
+def test_recorder_does_not_change_tokens(lm):
+    model, params = lm
+    wl = make_workload(model, seed=3)
+    _, base = run_engine(model, params, wl)
+    _, obs = run_engine(model, params, wl, recorder=Recorder())
+    assert set(base) == set(obs)
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], obs[rid])
+
+
+# -- the full stack on one mixed run ------------------------------------------------
+
+
+def test_recorder_mixed_workload_full_stack(lm, tmp_path):
+    import time
+
+    model, params = lm
+    wl = make_workload(model, seed=1)
+    rec = Recorder()
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=3,
+                           max_request_len=40, prefill_chunk=6,
+                           recorder=rec)
+    for r in wl:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    t0 = time.perf_counter()
+    out = eng.drain()
+    wall = time.perf_counter() - t0
+    assert len(out) == len(wl)
+
+    # spans: every request finished with tokens; percentiles well-formed
+    agg = rec.spans.aggregate()
+    assert agg["requests"] == len(wl) and agg["with_tokens"] == len(wl)
+    assert agg["tokens"] == sum(g for _, g in SHAPES)
+    for table in (agg["ttft_s"], agg["ttft_steps"], agg["tpot_s"]):
+        assert set(table) == {"p50", "p90", "p99"}
+        assert table["p50"] <= table["p90"] <= table["p99"]
+
+    # counter audit against the request log + token stamps
+    audit = audit_engine(eng, spans=rec.spans)
+    assert audit["ok"], audit["mismatches"]
+    assert audit["derived"]["finished"] == len(wl)
+
+    # trace: validates, has the expected tracks, renders to disk
+    doc = rec.trace.to_json()
+    stats = validate_trace(doc)
+    assert stats["slices"] > 0
+    slice_names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert {"step", "decode"} <= slice_names
+    assert "prefill_chunk" in slice_names    # prefill_chunk=6 was active
+    path = tmp_path / "trace.json"
+    rec.trace.save(str(path))
+    from repro.obs import validate_trace_file
+
+    validate_trace_file(str(path))
+
+    # registry: stats mirrored + timed histograms populated + prom renders
+    snap = rec.registry.snapshot()
+    assert snap["serve_finished"] == len(wl)
+    assert snap["serve_generated_tokens"] == agg["tokens"]
+    assert snap["decode_seconds"]["count"] == eng.stats["decode_steps"]
+    assert snap["sched_running"] >= 0       # occupancy gauges exported
+    text = rec.registry.render_prometheus()
+    assert "serve_finished" in text and "decode_seconds_bucket" in text
+
+    # fenced timings: on CPU the model compute is the cost of the loop,
+    # so the fenced prefill+decode sections must dominate the drain wall
+    timed = eng.stats["prefill_time_s"] + eng.stats["decode_time_s"]
+    assert timed > 0.3 * wall, (timed, wall)
+
+
+# -- span math ----------------------------------------------------------------------
+
+
+def test_single_request_ttft_equals_first_token_step_delta(lm):
+    model, params = lm
+    rec = Recorder()
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=24, recorder=rec)
+    rng = np.random.default_rng(5)
+    rid = eng.submit(rng.integers(0, model.cfg.vocab_size, 9).astype(
+        np.int32), 4)
+    first_token_step = None
+    steps = 0
+    while not eng.idle:
+        eng.step()
+        steps += 1
+        if first_token_step is None and eng.requests[rid].generated:
+            first_token_step = steps - 1   # token landed in step index
+    m = rec.spans.request_metrics(rid)
+    assert m["n_tokens"] == 4
+    assert m["ttft_steps"] == first_token_step
+    assert m["preemptions"] == 0 and m["lost_steps"] == 0
+    # lone request: fleet aggregate collapses onto the request itself
+    agg = rec.spans.aggregate()
+    assert agg["ttft_steps"]["p50"] == m["ttft_steps"]
+    assert agg["ttft_steps"]["p99"] == m["ttft_steps"]
+
+
+def test_preempted_spans_resume_and_stay_bit_exact(lm):
+    model, params = lm
+    wl = make_workload(model)
+    rec = Recorder()
+    eng, out = run_engine(model, params, wl, recorder=rec,
+                          reserve="prompt", n_blocks=11)
+    assert eng.stats["preemptions"] >= 2, eng.stats
+    ref = run_sequential(model, params, wl, cache_len=eng.gather_tokens)
+    for r in wl:
+        np.testing.assert_array_equal(out[r["rid"]], ref[r["rid"]])
+    # the span of every preempted request shows the extra QUEUED segment
+    # (and matching lost recompute steps), and agrees with the engine's
+    # per-request counter
+    n_preempted = 0
+    for rid, req in eng.requests.items():
+        m = rec.spans.request_metrics(rid)
+        assert m["preemptions"] == req.preemptions, (rid, m)
+        if req.preemptions:
+            n_preempted += 1
+            span = rec.spans.spans[rid]
+            queued = [s for s in span.segments if s.state == "QUEUED"]
+            assert len(queued) == 1 + req.preemptions
+            if m["n_tokens"] and m["lost_steps"] == 0:
+                # preempted before its first token: nothing lost yet
+                assert span.token_steps[0] >= queued[-1].end_step
+    assert n_preempted >= 1
+    agg = rec.spans.aggregate()
+    assert agg["preemptions"] == eng.stats["preemptions"]
+    audit = audit_engine(eng, spans=rec.spans)
+    assert audit["ok"], audit["mismatches"]
+
+
+# -- counter audits across the adversarial runs -------------------------------------
+
+
+def test_counter_audit_fault_soak(lm):
+    model, params = lm
+    wl = make_workload(model, seed=2)
+    hit = 0
+    for seed in range(3):
+        faults = FaultSchedule.random(seed, horizon=24, n_events=4,
+                                      max_drop=3)
+        rec = Recorder()
+        eng, out = run_engine(model, params, wl, recorder=rec,
+                              reserve="prompt", n_blocks=13, faults=faults,
+                              preempt_backoff=0)
+        audit = audit_engine(eng, spans=rec.spans)
+        assert audit["ok"], (seed, audit["mismatches"])
+        hit += eng.stats["fault_kills"] + eng.stats["preemptions"]
+        # faults landed as instants on the trace
+        validate_trace(rec.trace.to_json())
+    assert hit > 0, "no fault ever fired across the soak seeds"
+
+
+def test_counter_audit_prefix_sharing(lm):
+    model, params = lm
+    rng = np.random.default_rng(0)
+    base = rng.integers(1, model.cfg.vocab_size, 16).astype(np.int32)
+    cold = rng.integers(1, model.cfg.vocab_size, 10).astype(np.int32)
+    wl = [
+        {"rid": 0, "prompt": base.copy(), "max_new_tokens": 4},
+        {"rid": 1, "prompt": base.copy(), "max_new_tokens": 4},
+        {"rid": 2, "prompt": base[:8].copy(), "max_new_tokens": 4},
+        {"rid": 3, "prompt": cold, "max_new_tokens": 4},
+    ]
+    rec = Recorder()
+    eng, out = run_engine(model, params, wl, recorder=rec, max_slots=1,
+                          max_request_len=32, prefix_cache=True)
+    assert eng.stats["prefix_hits"] > 0
+    audit = audit_engine(eng, spans=rec.spans)
+    assert audit["ok"], audit["mismatches"]
+    # spans carry the per-request discount the stats only hold in sum
+    assert audit["derived"]["prefix_hit_tokens"] == \
+        eng.stats["prefix_hit_tokens"]
+    per_req = [rec.spans.request_metrics(r["rid"]).get(
+        "prefix_hit_tokens", 0) for r in wl]
+    assert sum(per_req) == eng.stats["prefix_hit_tokens"]
+    assert per_req[1] > 0                  # the exact repeat hit
+    assert per_req[3] == 0                 # the cold miss did not
+
+
+def test_derive_counts_without_spans(lm):
+    model, params = lm
+    wl = make_workload(model, seed=4, shapes=[(4, 3), (8, 2)])
+    eng, _ = run_engine(model, params, wl)
+    d = derive_counts(eng)
+    assert d["finished"] == 2 and d["preemptions"] == 0
+    audit = audit_engine(eng)               # span-less audit still works
+    assert audit["ok"], audit["mismatches"]
+
+
+# -- snapshots keep working with EngineStats ----------------------------------------
+
+
+def test_snapshot_roundtrip_with_engine_stats(lm, tmp_path):
+    model, params = lm
+    wl = make_workload(model, seed=6, shapes=[(6, 5), (10, 4), (4, 6)])
+    rec = Recorder()
+    eng = ContinuousEngine(model, params, page_size=4, max_slots=2,
+                           max_request_len=24, recorder=rec)
+    for r in wl:
+        eng.submit(r["prompt"], r["max_new_tokens"])
+    for _ in range(3):
+        eng.step()
+    path = str(tmp_path / "snap.npz")
+    meta = save_engine(eng, path)
+    assert meta["stats"]["prompt_tokens"] == eng.stats["prompt_tokens"]
+    # snapshot instants are on the original engine's trace
+    assert any(e.get("name") == "snapshot"
+               for e in rec.trace.to_json()["traceEvents"])
+
+    # restore with a fresh recorder: stats resync into the new registry
+    rec2 = Recorder()
+    eng2 = restore_engine(path, model, params, recorder=rec2)
+    assert dict(eng2.stats) == dict(eng.stats)
+    assert rec2.registry.snapshot()["serve_prompt_tokens"] == \
+        eng.stats["prompt_tokens"]
+    out2 = eng2.drain()
+    ref = run_sequential(model, params, wl, cache_len=eng2.gather_tokens)
+    for r in wl:
+        np.testing.assert_array_equal(out2[r["rid"]], ref[r["rid"]])
+    audit = audit_engine(eng2, spans=None)   # spans2 missed pre-crash tokens
+    assert audit["ok"], audit["mismatches"]
